@@ -1,0 +1,47 @@
+"""Section 3 ablation (beyond a single line in the paper): CG tolerance at
+TRAIN time vs at PREDICTION time. Training tolerates eps=1; prediction
+needs tight solves."""
+
+import jax
+
+from repro.core import ExactGP, rmse
+from repro.train.gp_trainer import GPTrainConfig, fit_exact_gp
+
+from .common import default_gp, load, write_rows
+
+
+def run():
+    rows = []
+    name, cap = "bike", 2400
+    X, y, _, _, Xt, yt = load(name, cap)
+    n = X.shape[0]
+    cfg = GPTrainConfig(pretrain_subset=max(400, n // 2),
+                        pretrain_lbfgs_steps=5, pretrain_adam_steps=5,
+                        finetune_adam_steps=3)
+
+    # (a) training tolerance sweep, prediction tolerance fixed tight
+    for tol in (10.0, 1.0, 0.1, 0.01):
+        gp = ExactGP(default_gp(n).config._replace(train_cg_tol=tol))
+        res = fit_exact_gp(gp, X, y, cfg=cfg)
+        cache = gp.precompute(X, y, res.params, jax.random.PRNGKey(0))
+        mean, _ = gp.predict(X, Xt, res.params, cache)
+        rows.append(["train_tol", tol, round(float(rmse(mean, yt)), 4)])
+        print(f"[tol] train eps={tol}: rmse={rows[-1][2]}")
+
+    # (b) prediction tolerance sweep, trained model fixed
+    gp = default_gp(n)
+    res = fit_exact_gp(gp, X, y, cfg=cfg)
+    for tol, iters in ((1.0, 8), (0.1, 30), (0.01, 400)):
+        gp_t = ExactGP(gp.config._replace(pred_cg_tol=tol,
+                                          pred_max_cg_iters=iters))
+        cache = gp_t.precompute(X, y, res.params, jax.random.PRNGKey(0))
+        mean, _ = gp_t.predict(X, Xt, res.params, cache)
+        rows.append(["pred_tol", tol, round(float(rmse(mean, yt)), 4)])
+        print(f"[tol] pred eps={tol}: rmse={rows[-1][2]}")
+
+    write_rows("ablation_tolerance", ["phase", "tolerance", "rmse"], rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

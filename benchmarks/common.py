@@ -1,0 +1,81 @@
+"""Shared benchmark harness utilities.
+
+Every benchmark mirrors one table/figure of the paper on synthetic
+UCI-analogue data (offline container), scaled by --scale so CPU runs finish
+in minutes while preserving the comparisons. Results go to
+experiments/benchmarks/<name>.csv + .md.
+"""
+
+from __future__ import annotations
+
+import csv
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ExactGP, ExactGPConfig, gaussian_nll, rmse
+from repro.data import make_regression_dataset
+
+OUT_DIR = os.environ.get("REPRO_BENCH_OUT", "experiments/benchmarks")
+
+# CPU-scale dataset list: name -> max_points cap (None = paper size).
+# --scale full lifts the caps (hardware run).
+CPU_DATASETS = {
+    "poletele": 2400,
+    "elevators": 2400,
+    "bike": 2400,
+    "kin40k": 3600,
+    "protein": 3600,
+}
+
+
+def write_rows(name: str, header: list, rows: list):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{name}.csv")
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+    md = os.path.join(OUT_DIR, f"{name}.md")
+    with open(md, "w") as f:
+        f.write("| " + " | ".join(header) + " |\n")
+        f.write("|" + "---|" * len(header) + "\n")
+        for r in rows:
+            f.write("| " + " | ".join(
+                f"{v:.4f}" if isinstance(v, float) else str(v)
+                for v in r) + " |\n")
+    print(f"[bench] wrote {path}")
+    return path
+
+
+def load(name: str, cap: int | None, seed: int = 0):
+    s = make_regression_dataset(name, seed=seed, max_points=cap)
+    to32 = lambda a: jnp.asarray(a, jnp.float32)
+    return (to32(s.X_train), to32(s.y_train), to32(s.X_val), to32(s.y_val),
+            to32(s.X_test), to32(s.y_test))
+
+
+def eval_exact(gp: ExactGP, X, y, Xt, yt, params, key):
+    t0 = time.time()
+    cache = gp.precompute(X, y, params, key)
+    pre_s = time.time() - t0
+    t0 = time.time()
+    mean, var = gp.predict(X, Xt, params, cache)
+    jax.block_until_ready(mean)
+    pred_s = time.time() - t0
+    return (float(rmse(mean, yt)), float(gaussian_nll(mean, var, yt)),
+            pre_s, pred_s)
+
+
+def default_gp(n: int) -> ExactGP:
+    return ExactGP(ExactGPConfig(
+        kernel="matern32",
+        precond_rank=min(100, max(20, n // 50)),
+        row_block=512,
+        train_max_cg_iters=50,
+        pred_max_cg_iters=400,
+        lanczos_rank=min(128, n // 2),
+    ))

@@ -1,0 +1,68 @@
+"""Figure 2: training speedup from additional devices.
+
+Runs the distributed MLL step on 1/2/4/8 fake CPU devices (subprocess so
+the parent keeps one device). Wall-clock on fake CPU devices includes real
+thread-level parallelism across the partitioned MVM, so the SHAPE of the
+scaling curve is observable, if noisy; the dry-run collective analysis is
+the production-scale evidence.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+from .common import write_rows
+
+SCRIPT = r"""
+import os, sys, time, json
+os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={sys.argv[1]}"
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import init_params
+from repro.core.distributed import (DistMLLConfig, make_geometry,
+                                    make_mll_value_and_grad, replicate,
+                                    shard_vector)
+ndev = int(sys.argv[1])
+n, d = 4096, 8
+rng = np.random.default_rng(0)
+X = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+y = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+params = init_params(noise=0.2, dtype=jnp.float32)
+mesh = jax.make_mesh((ndev,), ("data",))
+geom = make_geometry(mesh, n, d, mode="1d", row_block=256)
+cfg = DistMLLConfig(precond_rank=50, num_probes=8, max_cg_iters=20, cg_tol=1.0)
+vg = make_mll_value_and_grad(mesh, geom, cfg)
+args = (replicate(mesh, X), shard_vector(mesh, geom, y),
+        replicate(mesh, params), jax.random.PRNGKey(0))
+out = vg(*args); jax.block_until_ready(out[0])   # compile
+t0 = time.time()
+reps = 3
+for _ in range(reps):
+    out = vg(*args)
+    jax.block_until_ready(out[0])
+print(json.dumps({"ndev": ndev, "step_s": (time.time() - t0) / reps}))
+"""
+
+
+def run():
+    rows = []
+    base = None
+    env = dict(os.environ, PYTHONPATH="src")
+    for ndev in (1, 2, 4, 8):
+        out = subprocess.run([sys.executable, "-c", SCRIPT, str(ndev)],
+                             capture_output=True, text=True, env=env,
+                             timeout=1200)
+        line = [l for l in out.stdout.splitlines() if l.startswith("{")][-1]
+        r = json.loads(line)
+        if base is None:
+            base = r["step_s"]
+        rows.append([ndev, round(r["step_s"], 3),
+                     round(base / r["step_s"], 2)])
+        print(f"[fig2] {ndev} devices: {r['step_s']:.2f}s/step "
+              f"speedup={base / r['step_s']:.2f}x")
+    write_rows("fig2_multidevice", ["devices", "step_s", "speedup"], rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Figure 3: SGPR/SVGP error vs number of inducing points, against the
+exact-GP floor — approximations saturate well above it."""
+
+import jax
+
+from repro.core import rmse
+from repro.core.sgpr import sgpr_precompute, sgpr_predict
+from repro.core.svgp import svgp_predict
+from repro.train.gp_trainer import GPTrainConfig, fit_exact_gp, fit_sgpr, fit_svgp
+
+from .common import default_gp, eval_exact, load, write_rows
+
+
+def run():
+    rows = []
+    for name, cap in (("bike", 2400), ("protein", 3600)):
+        X, y, _, _, Xt, yt = load(name, cap)
+        n = X.shape[0]
+        gp = default_gp(n)
+        cfg = GPTrainConfig(pretrain_subset=max(400, n // 2),
+                            pretrain_lbfgs_steps=5, pretrain_adam_steps=5,
+                            finetune_adam_steps=3)
+        res = fit_exact_gp(gp, X, y, cfg=cfg)
+        e_rmse, _, _, _ = eval_exact(gp, X, y, Xt, yt, res.params,
+                                     jax.random.PRNGKey(0))
+        for m in (16, 64, 256):
+            sp, _, _ = fit_sgpr("matern32", X, y, m, steps=50)
+            c = sgpr_precompute("matern32", X, y, sp)
+            ms, _ = sgpr_predict("matern32", Xt, sp, c)
+            s_rmse = float(rmse(ms, yt))
+            vp, _, _ = fit_svgp("matern32", X, y, m, epochs=30, batch=256,
+                                lr=0.03)
+            mv, _ = svgp_predict("matern32", Xt, vp)
+            v_rmse = float(rmse(mv, yt))
+            rows.append([name, m, round(s_rmse, 4), round(v_rmse, 4),
+                         round(e_rmse, 4)])
+            print(f"[fig3] {name} m={m}: sgpr={s_rmse:.3f} svgp={v_rmse:.3f} "
+                  f"exact={e_rmse:.3f}")
+    write_rows("fig3_inducing",
+               ["dataset", "m", "sgpr_rmse", "svgp_rmse", "exact_rmse"], rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

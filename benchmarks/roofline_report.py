@@ -1,0 +1,62 @@
+"""§Roofline report: aggregate experiments/dryrun/*.json into the tables
+EXPERIMENTS.md embeds. Run AFTER `python -m repro.launch.dryrun`."""
+
+import glob
+import json
+import os
+
+from .common import OUT_DIR, write_rows
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_cells(mesh: str | None = None):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        r = json.load(open(path))
+        if mesh and r.get("mesh") != mesh:
+            continue
+        r["_file"] = os.path.basename(path)
+        cells.append(r)
+    return cells
+
+
+def run():
+    rows = []
+    for r in load_cells():
+        cell = r["cell"]
+        variant = r["_file"].rsplit("__", 1)[-1].replace(".json", "")
+        variant = variant.split("_", 1)[1] if "_" in variant else ""
+        tag = f"{cell['arch']}/{cell['shape']}" + (f" [{variant}]" if variant else "")
+        if r["status"] == "skipped":
+            rows.append([tag, r.get("mesh", "?"), "skipped", "", "", "", "",
+                         "", "", r["reason"][:40]])
+            continue
+        if r["status"] == "error":
+            rows.append([tag, r.get("mesh", "?"), "ERROR", "", "", "", "",
+                         "", "", ""])
+            continue
+        ro = r["roofline"]
+        t_wire = ro.get("t_collective_wire", ro["t_collective"])
+        rows.append([
+            tag, r["mesh"], ro["bottleneck"],
+            f"{ro['flops']:.3e}", f"{ro['bytes_accessed']:.3e}",
+            f"{ro['coll_bytes']:.3e}",
+            f"{ro['t_compute'] * 1e3:.2f}", f"{ro['t_memory'] * 1e3:.2f}",
+            f"{ro['t_collective'] * 1e3:.2f}", f"{t_wire * 1e3:.2f}",
+            f"{ro['useful_ratio']:.3f}",
+            f"{r['memory'].get('temp_bytes', 0) / 2**30:.2f}",
+        ])
+    header = ["arch/shape", "mesh", "bottleneck", "flops/dev", "bytes/dev",
+              "coll_bytes/dev", "t_comp_ms", "t_mem_ms", "t_coll_ms",
+              "t_wire_ms", "useful_ratio", "temp_GiB"]
+    write_rows("roofline", header, rows)
+    n_ok = sum(1 for r in rows if r[2] not in ("ERROR", "skipped"))
+    print(f"[roofline] {n_ok} analyzed cells "
+          f"({sum(1 for r in rows if r[2] == 'skipped')} skipped, "
+          f"{sum(1 for r in rows if r[2] == 'ERROR')} errors)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,63 @@
+"""Run every benchmark: `PYTHONPATH=src python -m benchmarks.run [--quick]`.
+
+One module per paper table/figure (+ extra ablations):
+    table1_accuracy     Table 1  exact vs SGPR vs SVGP (RMSE/NLL)
+    table2_timing       Table 2  train / precompute / sub-second predictions
+    fig1_fig5_init      Fig 1&5  pretrain-init vs plain Adam
+    fig2_multidevice    Fig 2    multi-device speedup (subprocess scaling)
+    fig3_inducing       Fig 3    inducing-point saturation vs exact floor
+    fig4_subset         Fig 4    subset-of-data curves
+    ablation_tolerance  Sec 3    CG tolerance train vs predict
+    roofline_report     §Roofline tables from experiments/dryrun/*.json
+"""
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma list of bench names")
+    ap.add_argument("--quick", action="store_true",
+                    help="single-seed Table 1")
+    args = ap.parse_args()
+
+    from . import (ablation_tolerance, fig1_fig5_init, fig2_multidevice,
+                   fig3_inducing, fig4_subset, roofline_report,
+                   table1_accuracy, table2_timing)
+
+    benches = {
+        "table1_accuracy": (lambda: table1_accuracy.run(
+            seeds=(0,) if args.quick else (0, 1, 2))),
+        "table2_timing": table2_timing.run,
+        "fig1_fig5_init": fig1_fig5_init.run,
+        "fig2_multidevice": fig2_multidevice.run,
+        "fig3_inducing": fig3_inducing.run,
+        "fig4_subset": fig4_subset.run,
+        "ablation_tolerance": ablation_tolerance.run,
+        "roofline_report": roofline_report.run,
+    }
+    if args.only:
+        keep = args.only.split(",")
+        benches = {k: v for k, v in benches.items() if k in keep}
+
+    failures = []
+    for name, fn in benches.items():
+        print(f"\n===== {name} =====", flush=True)
+        t0 = time.time()
+        try:
+            fn()
+            print(f"[bench] {name} done in {time.time() - t0:.0f}s")
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        print(f"\nFAILED: {failures}")
+        sys.exit(1)
+    print("\nALL BENCHMARKS DONE")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Table 2: training time, one-time precomputation time, prediction latency.
+
+The paper's headline: predictions stay sub-second regardless of n once the
+caches exist. CPU wall-clock is not V100 wall-clock; the comparison shape
+(prediction time ~ flat in n, training ~ superlinear) is the target.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.gp_trainer import GPTrainConfig, fit_exact_gp
+
+from .common import default_gp, load, write_rows
+
+SIZES = ("poletele", "kin40k")
+CAPS = {"poletele": 1200, "kin40k": 4800}
+N_PRED = 1000
+
+
+def run():
+    rows = []
+    for name in SIZES:
+        X, y, _, _, Xt, yt = load(name, CAPS[name])
+        n = X.shape[0]
+        gp = default_gp(n)
+        cfg = GPTrainConfig(pretrain_subset=max(300, n // 3),
+                            pretrain_lbfgs_steps=5, pretrain_adam_steps=5,
+                            finetune_adam_steps=3)
+        res = fit_exact_gp(gp, X, y, cfg=cfg)
+
+        t0 = time.time()
+        cache = gp.precompute(X, y, res.params, jax.random.PRNGKey(0))
+        jax.block_until_ready(cache.mean_cache)
+        pre_s = time.time() - t0
+
+        Xq = Xt[:N_PRED] if Xt.shape[0] >= N_PRED else jnp.tile(
+            Xt, (N_PRED // Xt.shape[0] + 1, 1))[:N_PRED]
+        # warm-up compile, then timed prediction (paper: 1k mean+var)
+        mean, var = gp.predict(X, Xq, res.params, cache)
+        jax.block_until_ready(mean)
+        t0 = time.time()
+        mean, var = gp.predict(X, Xq, res.params, cache)
+        jax.block_until_ready(var)
+        pred_ms = (time.time() - t0) * 1e3
+
+        rows.append([name, n, round(res.seconds, 2), round(pre_s, 2),
+                     round(pred_ms, 1)])
+        print(f"[table2] {name}: train={res.seconds:.1f}s pre={pre_s:.1f}s "
+              f"pred(1k)={pred_ms:.0f}ms")
+    write_rows("table2_timing",
+               ["dataset", "n", "train_s", "precompute_s", "predict_1k_ms"],
+               rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

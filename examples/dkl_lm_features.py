@@ -1,0 +1,71 @@
+"""Deep kernel learning over an LM backbone: the architecture-integration
+example. A (reduced) smollm-360m backbone embeds token sequences; an exact
+GP head regresses a sequence-level target; gradients flow through the BBMM
+custom VJP into the backbone.
+
+    PYTHONPATH=src python examples/dkl_lm_features.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ExactGP, ExactGPConfig, rmse
+from repro.models import get_arch, init_params
+from repro.models.model import forward_hidden
+from repro.optim import adam_init, adam_update
+
+
+def pooled_features(cfg, params, tokens):
+    """Mean-pooled final hidden state -> small feature space for the GP."""
+    h, _ = forward_hidden(cfg, params, {"tokens": tokens})
+    return jnp.mean(h.astype(jnp.float32), axis=1)  # (B, d_model)
+
+
+def main():
+    cfg = get_arch("smollm-360m").reduced(n_layers=2, d_model=32, vocab=128)
+    key = jax.random.PRNGKey(0)
+    backbone = init_params(cfg, key, dtype=jnp.float32)
+
+    # synthetic task: the target depends on token statistics the backbone
+    # must learn to expose as features
+    rng = np.random.default_rng(0)
+    n, seqlen = 256, 32
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, size=(n, seqlen)))
+    y = jnp.asarray(
+        np.sin(np.asarray(tokens[:, ::4]).mean(1) / 8.0)
+        + 0.05 * rng.normal(size=n), jnp.float32)
+
+    gp = ExactGP(ExactGPConfig(kernel="matern32", precond_rank=20,
+                               row_block=128, train_max_cg_iters=30))
+    gp_params = gp.init_params(cfg.d_model, noise=0.2)
+    params = {"backbone": backbone, "gp": gp_params}
+    state = adam_init(params)
+
+    @jax.jit
+    def step(params, state, k):
+        def loss_fn(p):
+            feats = pooled_features(cfg, p["backbone"], tokens)
+            (l, aux) = gp.loss(feats, y, p["gp"], k)
+            return l
+        l, g = jax.value_and_grad(loss_fn)(params)
+        params, state = adam_update(params, g, state, 3e-3)
+        return params, state, l
+
+    for i in range(15):
+        params, state, l = step(params, state, jax.random.PRNGKey(i))
+        if i % 5 == 0 or i == 14:
+            print(f"step {i}: loss={float(l):.4f}")
+
+    feats = pooled_features(cfg, params["backbone"], tokens)
+    cache = gp.precompute(feats, y, params["gp"], jax.random.PRNGKey(99))
+    mean, var = gp.predict(feats, feats, params["gp"], cache)
+    print(f"train rmse={float(rmse(mean, y)):.4f} "
+          f"(target std={float(jnp.std(y)):.4f})")
+    print("gradients reached the backbone:",
+          bool(abs(float(params['backbone']['embed'].sum()
+                         - backbone['embed'].sum())) > 1e-6))
+
+
+if __name__ == "__main__":
+    main()

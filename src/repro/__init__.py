@@ -1,0 +1,4 @@
+"""repro — Exact Gaussian Processes on a Million Data Points (NeurIPS 2019)
+as a production-grade multi-pod JAX/TPU framework. See README.md."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,5 @@
+"""One config module per assigned architecture (+ the paper's GP workload).
+
+Each module exposes CONFIG (ArchConfig for LM archs; GPWorkloadConfig for
+gp-exact-1m). `repro.models.registry.get_arch` resolves --arch ids here.
+"""

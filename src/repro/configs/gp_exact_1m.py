@@ -1,0 +1,25 @@
+"""gp-exact-1m: the paper's own workload as a first-class dry-run arch.
+
+Exact-GP BBMM training step at n = 2^20 (HouseElectric scale, d = 9) on the
+production mesh: distributed pivoted-Cholesky preconditioner + 20 fixed PCG
+iterations (the paper's eps=1 training regime converges in <= ~20) + the
+custom-VJP hyperparameter gradient. See repro.core.distributed.
+"""
+from typing import NamedTuple
+
+
+class GPWorkloadConfig(NamedTuple):
+    name: str = "gp-exact-1m"
+    family: str = "gp"
+    n: int = 1 << 20
+    d: int = 9
+    kernel: str = "matern32"
+    precond_rank: int = 100
+    num_probes: int = 8
+    train_cg_iters: int = 20
+    pred_cg_iters: int = 100
+    mode: str = "2d"           # "1d" = paper-faithful, "2d" = beyond-paper
+    row_block: int = 1024
+
+
+CONFIG = GPWorkloadConfig()

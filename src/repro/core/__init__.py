@@ -1,0 +1,65 @@
+"""repro.core — Exact GPs via BBMM + partitioned/distributed kernel MVMs.
+
+The paper's contribution as a composable JAX library. Layering (bottom-up):
+
+    kernels_math   stationary kernels + hyperparameter transforms
+    partitioned    O(n)-memory blockwise K_hat @ V (the paper's core trick)
+    pivchol        rank-k pivoted-Cholesky preconditioner
+    pcg            batched PCG (mBCG) with tridiag tracking; pipelined variant
+    slq            stochastic Lanczos quadrature log-determinant
+    mll            BBMM marginal likelihood w/ custom VJP (Eq. 1 & 2)
+    predcache      mean cache + LOVE-style variance cache (O(n) predictions)
+    gp             ExactGP user API
+    distributed    shard_map row/2-D partitioned engine for TPU meshes
+    sgpr, svgp     the paper's approximate-GP baselines
+    dkl            deep-kernel-learning head (architecture integration)
+"""
+
+from .gp import ExactGP, ExactGPConfig, gaussian_nll, rmse
+from .kernels_math import (
+    GPParams,
+    KERNEL_KINDS,
+    dense_khat,
+    init_params,
+    kernel_diag,
+    kernel_matrix,
+    lengthscale,
+    noise_variance,
+    outputscale,
+)
+from .mll import MLLConfig, dense_mll, exact_mll
+from .partitioned import kmvm, quad_form
+from .pcg import PCGResult, pcg
+from .pivchol import Preconditioner, make_preconditioner, pivoted_cholesky
+from .predcache import (
+    PredictionCache,
+    build_prediction_cache,
+    lanczos,
+    predict_mean,
+    predict_var_cached,
+    predict_var_exact,
+)
+from .slq import exact_logdet, slq_logdet_correction
+from .sgpr import (
+    SGPRParams, init_sgpr_params, sgpr_elbo, sgpr_loss, sgpr_precompute,
+    sgpr_predict,
+)
+from .svgp import (
+    SVGPParams, init_svgp_params, svgp_elbo, svgp_loss, svgp_predict,
+)
+from .dkl import DKLModel, make_mlp_dkl
+
+__all__ = [
+    "ExactGP", "ExactGPConfig", "GPParams", "KERNEL_KINDS", "MLLConfig",
+    "PCGResult", "PredictionCache", "Preconditioner",
+    "build_prediction_cache", "dense_khat", "dense_mll", "exact_logdet",
+    "exact_mll", "gaussian_nll", "init_params", "kernel_diag",
+    "kernel_matrix", "kmvm", "lanczos", "lengthscale", "make_preconditioner",
+    "noise_variance", "outputscale", "pcg", "pivoted_cholesky",
+    "predict_mean", "predict_var_cached", "predict_var_exact", "quad_form",
+    "rmse", "slq_logdet_correction",
+    "SGPRParams", "init_sgpr_params", "sgpr_elbo", "sgpr_loss",
+    "sgpr_precompute", "sgpr_predict",
+    "SVGPParams", "init_svgp_params", "svgp_elbo", "svgp_loss", "svgp_predict",
+    "DKLModel", "make_mlp_dkl",
+]

@@ -1,0 +1,81 @@
+"""Deep kernel learning — the GP engine as a head on backbone features.
+
+The BBMM MLL's custom VJP already returns gradients w.r.t. its inputs X
+(`mll._mll_bwd` / `distributed.make_dist_mll`), so an exact GP can sit on
+top of ANY differentiable feature extractor phi: the architecture
+integration point for the 10 assigned backbones (`repro.models`). For the
+LM backbones, phi is mean-pooled final hidden states projected to a small
+feature dim; here we also ship a plain MLP for standalone DKL regression.
+
+    loss(theta, phi_params) = -MLL( phi(X; phi_params), y, theta ) / n
+
+Everything (CG, preconditioner, caches) is unchanged — phi just reshapes
+the input space the kernel sees.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .gp import ExactGP, ExactGPConfig
+from .kernels_math import GPParams
+from .predcache import PredictionCache
+
+
+class MLPParams(NamedTuple):
+    weights: tuple
+    biases: tuple
+
+
+def init_mlp(key, sizes: tuple, dtype=jnp.float32) -> MLPParams:
+    """sizes = (d_in, h1, ..., d_feat)."""
+    ws, bs = [], []
+    for i in range(len(sizes) - 1):
+        key, sub = jax.random.split(key)
+        scale = jnp.sqrt(2.0 / sizes[i]).astype(dtype)
+        ws.append(scale * jax.random.normal(sub, (sizes[i], sizes[i + 1]), dtype))
+        bs.append(jnp.zeros((sizes[i + 1],), dtype))
+    return MLPParams(tuple(ws), tuple(bs))
+
+
+def mlp_apply(params: MLPParams, X: jax.Array) -> jax.Array:
+    h = X
+    for i, (w, b) in enumerate(zip(params.weights, params.biases)):
+        h = h @ w + b
+        if i < len(params.weights) - 1:
+            h = jax.nn.gelu(h)
+    return h
+
+
+class DKLModel(NamedTuple):
+    """Exact GP over phi(x). phi_apply: (phi_params, X) -> features."""
+
+    gp: ExactGP
+    phi_apply: Callable
+
+    def loss(self, X, y, phi_params, gp_params: GPParams, key):
+        feats = self.phi_apply(phi_params, X)
+        value, aux = self.gp.mll(feats, y, gp_params, key)
+        return -value / X.shape[0], aux
+
+    def precompute(self, X, y, phi_params, gp_params, key) -> PredictionCache:
+        feats = self.phi_apply(phi_params, X)
+        return self.gp.precompute(feats, y, gp_params, key)
+
+    def predict(self, X, Xstar, phi_params, gp_params, cache, **kw):
+        feats = self.phi_apply(phi_params, X)
+        feats_star = self.phi_apply(phi_params, Xstar)
+        return self.gp.predict(feats, feats_star, gp_params, cache, **kw)
+
+
+def make_mlp_dkl(key, d_in: int, feature_dim: int = 8,
+                 hidden: tuple = (64, 64),
+                 config: ExactGPConfig | None = None):
+    """Standalone MLP-featurized DKL regression model."""
+    sizes = (d_in, *hidden, feature_dim)
+    phi_params = init_mlp(key, sizes)
+    model = DKLModel(gp=ExactGP(config), phi_apply=mlp_apply)
+    return model, phi_params

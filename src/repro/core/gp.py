@@ -1,0 +1,118 @@
+"""ExactGP — the paper's model, as a composable JAX module.
+
+Pure-functional API: hyperparameters are an explicit GPParams pytree; all
+methods are jit-able. Optimization lives in `repro.train.gp_trainer` (which
+implements the paper's pretrain-on-subset initialization procedure); the
+distributed engine in `repro.core.distributed` consumes the same config.
+
+Tolerances follow the paper: loose CG (eps = 1.0) while fitting
+hyperparameters, tight (eps <= 0.01) for the prediction caches.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels_math import GPParams, init_params, noise_variance
+from .mll import MLLConfig, exact_mll
+from .predcache import (
+    PredictionCache,
+    build_prediction_cache,
+    predict_mean,
+    predict_var_cached,
+    predict_var_exact,
+)
+
+
+class ExactGPConfig(NamedTuple):
+    kernel: str = "matern32"
+    ard: bool = False                 # independent lengthscale per dim
+    precond_rank: int = 100           # paper: k = 100 at large n
+    num_probes: int = 8
+    train_cg_tol: float = 1.0         # paper: eps = 1 suffices for training
+    train_max_cg_iters: int = 100
+    pred_cg_tol: float = 0.01         # paper: accurate solves critical at test
+    pred_max_cg_iters: int = 400
+    lanczos_rank: int = 128
+    row_block: int = 1024
+    noise_floor: float = 1e-4
+    pcg_method: str = "standard"      # "pipelined" = beyond-paper variant
+
+    def mll_config(self) -> MLLConfig:
+        return MLLConfig(
+            kernel=self.kernel,
+            precond_rank=self.precond_rank,
+            num_probes=self.num_probes,
+            max_cg_iters=self.train_max_cg_iters,
+            cg_tol=self.train_cg_tol,
+            row_block=self.row_block,
+            noise_floor=self.noise_floor,
+            pcg_method=self.pcg_method,
+        )
+
+
+class ExactGP:
+    """Exact GP regression via BBMM + partitioned kernel MVMs."""
+
+    def __init__(self, config: ExactGPConfig | None = None):
+        self.config = config or ExactGPConfig()
+
+    # -- parameters --------------------------------------------------------
+
+    def init_params(self, d: int, noise: float = 0.5, dtype=jnp.float32) -> GPParams:
+        ard_dims = d if self.config.ard else None
+        return init_params(ard_dims=ard_dims, noise=noise, dtype=dtype)
+
+    # -- training objective -------------------------------------------------
+
+    def mll(self, X, y, params: GPParams, key):
+        """(value, aux); value is the total log marginal likelihood."""
+        return exact_mll(self.config.mll_config(), X, y, params, key)
+
+    def loss(self, X, y, params: GPParams, key):
+        """Per-datum negative MLL (what the trainer minimizes)."""
+        value, aux = self.mll(X, y, params, key)
+        return -value / X.shape[0], aux
+
+    # -- prediction ---------------------------------------------------------
+
+    def precompute(self, X, y, params: GPParams, key) -> PredictionCache:
+        c = self.config
+        return build_prediction_cache(
+            c.kernel, X, y, params, key,
+            precond_rank=c.precond_rank, lanczos_rank=c.lanczos_rank,
+            pred_tol=c.pred_cg_tol, max_cg_iters=c.pred_max_cg_iters,
+            row_block=c.row_block, noise_floor=c.noise_floor)
+
+    def predict(self, X, Xstar, params: GPParams, cache: PredictionCache,
+                exact_variance: bool = False, include_noise: bool = True):
+        c = self.config
+        mean = predict_mean(c.kernel, X, Xstar, params, cache)
+        if exact_variance:
+            var = predict_var_exact(
+                c.kernel, X, Xstar, params,
+                precond_rank=c.precond_rank, pred_tol=c.pred_cg_tol,
+                max_cg_iters=c.pred_max_cg_iters, row_block=c.row_block,
+                noise_floor=c.noise_floor, include_noise=include_noise)
+        else:
+            var = predict_var_cached(
+                c.kernel, X, Xstar, params, cache,
+                noise_floor=c.noise_floor, include_noise=include_noise)
+        return mean, var
+
+
+# -- metrics (Table 1) -------------------------------------------------------
+
+
+def rmse(pred_mean: jax.Array, y_true: jax.Array) -> jax.Array:
+    return jnp.sqrt(jnp.mean((pred_mean - y_true) ** 2))
+
+
+def gaussian_nll(pred_mean: jax.Array, pred_var: jax.Array, y_true: jax.Array) -> jax.Array:
+    """Mean negative predictive log density (paper's NLL column)."""
+    return jnp.mean(
+        0.5 * (jnp.log(2.0 * math.pi * pred_var) + (y_true - pred_mean) ** 2 / pred_var))

@@ -1,0 +1,247 @@
+"""Partitioned kernel matrix-multiplies — the paper's core memory mechanism.
+
+`K_hat @ V` is computed in row partitions: for each block of rows X^(l) we
+materialize only the (row_block, n) kernel slab `K_{X^(l) X}`, multiply it
+into V, and discard it (Section 3, "Partitioned kernel MVMs"). Peak memory is
+O(row_block * n) instead of O(n^2); with row_block fixed this is the paper's
+O(n) claim.
+
+`lax.map` keeps a single slab live at a time; `jax.checkpoint` on the block
+function keeps the *backward* pass at the same footprint (slabs are
+recomputed, not stored — this is what makes the differentiable quadratic
+form in `repro.core.mll` O(n) memory as well).
+
+The inner slab computation can be routed to the fused Pallas kernel
+(`repro.kernels.ops.kmvm_block`) which never materializes the slab in HBM at
+all — it lives tile-by-tile in VMEM.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels_math import (
+    GPParams,
+    kernel_matrix,
+    noise_variance,
+)
+
+
+def pad_rows(A: jax.Array, multiple: int) -> tuple[jax.Array, int]:
+    """Zero-pad axis 0 of A up to a multiple; returns (padded, n_pad)."""
+    n = A.shape[0]
+    rem = (-n) % multiple
+    if rem == 0:
+        return A, 0
+    pad_width = [(0, rem)] + [(0, 0)] * (A.ndim - 1)
+    return jnp.pad(A, pad_width), rem
+
+
+def default_row_block(n: int, d: int, t: int, hbm_budget_bytes: int = 2 << 30) -> int:
+    """Pick a row block so the transient (rb, n) fp32 slab fits the budget.
+
+    On a v5e chip we budget ~2 GB of the 16 GB HBM for the slab by default
+    (the rest holds X, the PCG state, the preconditioner shard, and XLA
+    scratch). Clamped to [128, 8192] and rounded to a multiple of 128 to keep
+    the MXU-aligned tiling of the Pallas kernel.
+    """
+    del d, t
+    rb = hbm_budget_bytes // max(n * 4, 1)
+    rb = max(128, min(int(rb), 8192))
+    return (rb // 128) * 128
+
+
+def _block_kmvm_dense(kind: str, Xb: jax.Array, X: jax.Array, V: jax.Array, params: GPParams) -> jax.Array:
+    """One row-partition's contribution: K(Xb, X) @ V, slab materialized."""
+    Kb = kernel_matrix(kind, Xb, X, params)
+    return Kb @ V
+
+
+def kmvm_rect(
+    kind: str,
+    X_rows: jax.Array,
+    X_cols: jax.Array,
+    V: jax.Array,
+    params: GPParams,
+    *,
+    row_block: int = 1024,
+    block_fn: Callable | None = None,
+) -> jax.Array:
+    """K(X_rows, X_cols) @ V in row partitions; no noise term.
+
+    The rectangular building block of the distributed engine: under the mesh
+    each device owns a (rows_shard, cols_shard) tile of K and calls this with
+    its local shards. O(row_block * n_cols) transient memory.
+    """
+    n_rows = X_rows.shape[0]
+    rb = min(row_block, n_rows)
+    Xp, _ = pad_rows(X_rows, rb)
+    p = Xp.shape[0] // rb
+    blocks = Xp.reshape(p, rb, X_rows.shape[-1])
+
+    inner = block_fn if block_fn is not None else partial(_block_kmvm_dense, kind)
+
+    @jax.checkpoint
+    def one_block(Xb):
+        # Tie the slab build to the (loop-varying) RHS: without this, XLA
+        # LICM hoists the X-only kernel-slab computation out of the CG
+        # while-loop and MATERIALIZES every slab (O(n^2/p) -> O(n^2) temp
+        # memory, 86 GB/device at n=2^20 in the dry-run) — breaking the
+        # paper's O(n) memory contract. A plain optimization_barrier is NOT
+        # enough (LICM hoists through it — verified); instead add an opaque
+        # zero times a V element: the simplifier cannot fold it, the add is
+        # bitwise identity, and the slab becomes loop-dependent.
+        zero = jax.lax.optimization_barrier(jnp.zeros((), Xb.dtype))
+        Xb = Xb + zero * V[0, 0].astype(Xb.dtype)
+        return inner(Xb, X_cols, V, params)
+
+    if p == 1:
+        out = one_block(blocks[0])
+    else:
+        out = lax_map(one_block, blocks).reshape(p * rb, V.shape[-1])
+    return out[:n_rows]
+
+
+def kmvm(
+    kind: str,
+    X: jax.Array,
+    V: jax.Array,
+    params: GPParams,
+    *,
+    row_block: int = 1024,
+    add_noise: bool = True,
+    noise_floor: float = 1e-4,
+    block_fn: Callable | None = None,
+) -> jax.Array:
+    """O(n)-memory K_hat @ V via partitioned row blocks.
+
+    Args:
+      X: (n, d) training inputs. V: (n, t) right-hand sides (t >= 1).
+      row_block: rows per partition (the paper's n/p).
+      add_noise: include the sigma^2 * V diagonal term (K_hat vs K).
+      block_fn: override for the per-block slab MVM — e.g. the Pallas path
+        ``lambda Xb, X, V, p: ops.kmvm_block(kind, Xb, X, V, p)``.
+
+    Returns (n, t).
+    """
+    squeeze = V.ndim == 1
+    if squeeze:
+        V = V[:, None]
+    out = kmvm_rect(kind, X, X, V, params, row_block=row_block, block_fn=block_fn)
+    if add_noise:
+        out = out + noise_variance(params, noise_floor) * V
+    return out[:, 0] if squeeze else out
+
+
+def lax_map(f, xs):
+    """jax.lax.map wrapper; unrolls under the dry-run flag (see
+    repro.models.runtime_flags — XLA cost analysis counts loop bodies once)."""
+    from repro.models.runtime_flags import loop_map
+    return loop_map(f, xs)
+
+
+def quad_form(
+    kind: str,
+    X: jax.Array,
+    A: jax.Array,
+    B: jax.Array,
+    params: GPParams,
+    *,
+    row_block: int = 1024,
+    add_noise: bool = True,
+    noise_floor: float = 1e-4,
+) -> jax.Array:
+    """sum_j a_j^T K_hat b_j for column-paired A, B of shape (n, t).
+
+    This is the differentiable surface the BBMM backward pass contracts
+    against: d/dtheta [a^T K_hat(theta) b] gives every gradient term in
+    Eq. (2) of the paper without ever materializing K or dK/dtheta.
+    O(row_block * n) memory in both passes (see `kmvm`'s checkpointing).
+    """
+    if A.ndim == 1:
+        A = A[:, None]
+    if B.ndim == 1:
+        B = B[:, None]
+    KB = kmvm(
+        kind, X, B, params,
+        row_block=row_block, add_noise=add_noise, noise_floor=noise_floor,
+    )
+    return jnp.sum(A * KB)
+
+
+def kernel_rows(kind: str, X: jax.Array, idx: jax.Array, params: GPParams) -> jax.Array:
+    """K(X[idx], X) — O(|idx| * n); used by the pivoted Cholesky factor."""
+    return kernel_matrix(kind, X[idx], X, params)
+
+
+def quad_form_partials(
+    kind: str,
+    X_rows: jax.Array,   # (m, d)
+    X_cols: jax.Array,   # (n, d)
+    A: jax.Array,        # (m, t)
+    V: jax.Array,        # (n, t)
+    params: GPParams,
+    *,
+    row_block: int = 1024,
+):
+    """Gradients of q = sum_j a_j^T K(X_rows, X_cols) v_j (NO noise term)
+    w.r.t. (params, X_rows, X_cols) — computed as a lax.scan over row
+    blocks so that exactly ONE transient slab (+ its VJP residuals) is
+    live at any point.
+
+    This replaces reverse-mode AD through the partitioned forward: AD of an
+    unrolled/remat'd block loop leaves the per-block backward recomputes
+    data-independent, and XLA schedules them all concurrently (64 slabs
+    live at once = 100+ GB/device at n = 2^20 in the dry-run). The scan's
+    gradient-accumulator carry serializes the blocks by construction; peak
+    memory is O(row_block * n), the paper's training-memory contract.
+    """
+    if A.ndim == 1:
+        A = A[:, None]
+    if V.ndim == 1:
+        V = V[:, None]
+    m = X_rows.shape[0]
+    rb = min(row_block, m)
+    Xp, _ = pad_rows(X_rows, rb)
+    Ap, _ = pad_rows(A, rb)
+    nb = Xp.shape[0] // rb
+    Xb_all = Xp.reshape(nb, rb, X_rows.shape[-1])
+    Ab_all = Ap.reshape(nb, rb, A.shape[-1])
+
+    def block_q(p_, Xb_, Xc_, Ab):
+        K = kernel_matrix(kind, Xb_, Xc_, p_)
+        return jnp.sum(Ab * (K @ V))
+
+    g_params0 = jax.tree.map(lambda a: jnp.zeros_like(a), params)
+    g_cols0 = jnp.zeros_like(X_cols)
+
+    def body(carry, inputs):
+        gp_acc, gc_acc = carry
+        Xb, Ab = inputs
+        # gate this block's input on the previous block's ACCUMULATED output
+        # (opaque zero, bitwise identity): the accumulator alone only chains
+        # the final adds — the expensive slab+residual computations would
+        # otherwise be carry-independent and scheduled concurrently (all 64
+        # blocks' residuals live at once = 120 GB/device in the dry-run)
+        link = jax.lax.optimization_barrier(
+            jnp.zeros((), Xb.dtype)) * gc_acc[0, 0].astype(Xb.dtype)
+        Xb = Xb + link
+        gp, gxb, gxc = jax.grad(block_q, argnums=(0, 1, 2))(
+            params, Xb, X_cols, Ab)
+        gp_acc = jax.tree.map(jnp.add, gp_acc, gp)
+        return (gp_acc, gc_acc + gxc), gxb
+
+    # ALWAYS rolled (even in the dry-run): a while body structurally holds
+    # exactly one block's residuals — with 128 inlined blocks the scheduler
+    # still overlapped ~20 of them (17.8 GB/device) despite serializing data
+    # dependences. Cost-accounting consequence (documented in EXPERIMENTS
+    # §Roofline): the backward's kernel flops are counted for one block of
+    # nb; analytically the full backward adds ~10-12% to the GP train step.
+    (g_params, g_cols), g_rows = jax.lax.scan(
+        body, (g_params0, g_cols0), (Xb_all, Ab_all))
+    g_rows = g_rows.reshape(nb * rb, X_rows.shape[-1])[:m]
+    return g_params, g_rows, g_cols

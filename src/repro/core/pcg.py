@@ -1,0 +1,206 @@
+"""Batched preconditioned conjugate gradients (mBCG) with tridiagonal tracking.
+
+This is the BBMM engine of Gardner et al. [11] that the paper builds on: one
+call solves K_hat^{-1} [y, z_1..z_t] for all right-hand sides simultaneously
+(sharing every kernel MVM across columns) and records the CG step/momentum
+coefficients (alpha_j, beta_j), which define the Lanczos tridiagonalization
+T of P^{-1/2} K_hat P^{-1/2} used by the SLQ log-determinant estimator
+(`repro.core.slq`).
+
+Two loop structures:
+  * `method="standard"` — textbook PCG; two *dependent* inner-product
+    reductions per iteration (paper-faithful: this is what GPyTorch runs).
+  * `method="pipelined"` — Chronopoulos–Gear CG: algebraically identical
+    iterates, but gamma = <r, u>, delta = <w, u> and the convergence norm
+    <r, r> are all formed from vectors available before any reduction, so
+    they are fused into ONE all-reduce per iteration. Under the distributed
+    engine this halves the blocking collective count (beyond-paper
+    optimization; see EXPERIMENTS.md §Perf).
+
+The loops use a fixed trip count (`lax.scan`) with per-column convergence
+masking instead of a data-dependent while_loop: on a 256-chip mesh every
+device executes the same schedule (no ragged iteration counts -> no
+stragglers), and the compiled HLO is identical across steps.
+
+Distribution is injected through `allreduce`: a function summing per-shard
+partial reductions across the row axis (identity on a single device,
+`lax.psum` under shard_map) — see `repro.core.distributed`.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class PCGResult(NamedTuple):
+    solution: jax.Array    # (n, t)
+    alphas: jax.Array      # (m, t) CG step sizes (0 where column was frozen)
+    betas: jax.Array       # (m, t) CG momentum coefficients
+    active: jax.Array      # (m, t) bool, iteration actually applied
+    rz0: jax.Array         # (t,) z^T P^{-1} z at iteration 0 (SLQ probe norms)
+    rel_residual: jax.Array  # (t,) final ||r|| / ||b||
+    iterations: jax.Array  # (t,) iterations applied per column
+
+
+def _identity(x: jax.Array) -> jax.Array:
+    return x
+
+
+def pcg(
+    mvm: Callable[[jax.Array], jax.Array],
+    B: jax.Array,
+    precond_solve: Callable[[jax.Array], jax.Array] | None = None,
+    *,
+    max_iters: int = 100,
+    min_iters: int = 3,
+    tol: float = 1.0,
+    allreduce: Callable[[jax.Array], jax.Array] | None = None,
+    method: str = "standard",
+) -> PCGResult:
+    """Solve K_hat U = B for all columns of B at once.
+
+    Args:
+      mvm: v (n, t) -> K_hat v (n, t). The only access to the kernel matrix.
+        Under the distributed engine n is the per-shard row count.
+      B: (n, t) right-hand sides.
+      precond_solve: v -> P^{-1} v; identity if None.
+      tol: relative residual threshold ||r||/||b|| (paper: 1.0 for training,
+        <= 0.01 for prediction solves).
+      allreduce: sums partial scalar reductions over row shards; identity on
+        one device.
+      method: "standard" | "pipelined".
+    """
+    if B.ndim == 1:
+        res = pcg(mvm, B[:, None], precond_solve, max_iters=max_iters,
+                  min_iters=min_iters, tol=tol, allreduce=allreduce, method=method)
+        return res._replace(solution=res.solution[:, 0])
+
+    if precond_solve is None:
+        precond_solve = _identity
+    if allreduce is None:
+        allreduce = _identity
+    if method == "standard":
+        return _pcg_standard(mvm, B, precond_solve, max_iters, min_iters, tol, allreduce)
+    if method == "pipelined":
+        return _pcg_pipelined(mvm, B, precond_solve, max_iters, min_iters, tol, allreduce)
+    raise ValueError(f"unknown PCG method {method!r}")
+
+
+def _safe_div(num, den):
+    ok = jnp.abs(den) > 1e-30
+    return jnp.where(ok, num / jnp.where(ok, den, 1.0), 0.0)
+
+
+def _pcg_standard(mvm, B, precond_solve, max_iters, min_iters, tol, allreduce):
+    dtype = B.dtype
+
+    def vdot(a, b):
+        return allreduce(jnp.sum(a * b, axis=0))
+
+    u = jnp.zeros_like(B)
+    r = B
+    z = precond_solve(r)
+    # reduction 0: <r,z> and <b,b> fused (both available up front)
+    init = allreduce(jnp.stack([jnp.sum(r * z, 0), jnp.sum(B * B, 0)]))
+    rz, b_norm2 = init[0], jnp.maximum(init[1], 1e-30)
+    rz0 = rz
+    p = z
+
+    def body(carry, j):
+        u, r, z, p, rz = carry
+        Kp = mvm(p)
+        # reduction 1: <p, Kp> and <r, r> fused
+        red1 = allreduce(jnp.stack([jnp.sum(p * Kp, 0), jnp.sum(r * r, 0)]))
+        pKp, r_norm2 = red1[0], red1[1]
+        rel = jnp.sqrt(r_norm2 / b_norm2)
+        active = (rel > tol) | (j < min_iters)
+        alpha = jnp.where(active, _safe_div(rz, pKp), 0.0)
+        u = u + alpha * p
+        r = r - alpha * Kp
+        z_new = precond_solve(r)
+        # reduction 2 (dependent on reduction 1's alpha): <r, z>
+        rz_new = vdot(r, z_new)
+        beta = jnp.where(active, _safe_div(rz_new, rz), 0.0)
+        p = jnp.where(active, z_new + beta * p, p)
+        z = jnp.where(active, z_new, z)
+        rz = jnp.where(active, rz_new, rz)
+        return (u, r, z, p, rz), (alpha.astype(dtype), beta.astype(dtype), active)
+
+    from repro.models.runtime_flags import layer_scan_unroll
+    (u, r, _, _, _), (alphas, betas, actives) = jax.lax.scan(
+        body, (u, r, z, p, rz), jnp.arange(max_iters),
+        unroll=layer_scan_unroll())
+    rel = jnp.sqrt(vdot(r, r) / b_norm2)
+    iters = jnp.sum(actives, axis=0)
+    return PCGResult(u, alphas, betas, actives, rz0, rel, iters)
+
+
+def _pcg_pipelined(mvm, B, precond_solve, max_iters, min_iters, tol, allreduce):
+    """Chronopoulos–Gear CG: one fused all-reduce per iteration."""
+    dtype = B.dtype
+
+    def fused(r, u, w):
+        # local partials for [<r,u>, <w,u>, <r,r>] then ONE allreduce
+        part = jnp.stack([jnp.sum(r * u, 0), jnp.sum(w * u, 0), jnp.sum(r * r, 0)])
+        red = allreduce(part)
+        return red[0], red[1], red[2]
+
+    x = jnp.zeros_like(B)
+    r = B
+    b_norm2 = jnp.maximum(allreduce(jnp.sum(B * B, 0)), 1e-30)
+    u = precond_solve(r)
+    w = mvm(u)
+    gamma, delta, rr = fused(r, u, w)
+    rz0 = gamma
+    p = jnp.zeros_like(B)
+    s = jnp.zeros_like(B)
+    alpha_prev = jnp.ones_like(gamma)
+    gamma_prev = jnp.ones_like(gamma)
+
+    def body(carry, j):
+        x, r, u, w, p, s, gamma, delta, rr, gamma_prev, alpha_prev = carry
+        rel = jnp.sqrt(rr / b_norm2)
+        active = (rel > tol) | (j < min_iters)
+        first = j == 0
+        beta = jnp.where(first, 0.0, _safe_div(gamma, gamma_prev))
+        denom = delta - beta * gamma / jnp.where(first, 1.0, alpha_prev)
+        alpha = jnp.where(active, _safe_div(gamma, denom), 0.0)
+        beta = jnp.where(active, beta, 0.0)
+        p = jnp.where(active, u + beta * p, p)
+        s = jnp.where(active, w + beta * s, s)
+        x = x + alpha * p
+        r = r - alpha * s
+        u_new = precond_solve(r)
+        w_new = mvm(u_new)
+        gamma_new, delta_new, rr_new = fused(r, u_new, w_new)
+        u = jnp.where(active, u_new, u)
+        w = jnp.where(active, w_new, w)
+        gamma_prev_n = jnp.where(active, gamma, gamma_prev)
+        alpha_prev_n = jnp.where(active, alpha, alpha_prev)
+        gamma = jnp.where(active, gamma_new, gamma)
+        delta = jnp.where(active, delta_new, delta)
+        rr = jnp.where(active, rr_new, rr)
+        return ((x, r, u, w, p, s, gamma, delta, rr, gamma_prev_n, alpha_prev_n),
+                (alpha.astype(dtype), beta.astype(dtype), active))
+
+    from repro.models.runtime_flags import layer_scan_unroll
+    carry = (x, r, u, w, p, s, gamma, delta, rr, gamma_prev, alpha_prev)
+    (x, r, *rest), (alphas, betas, actives) = jax.lax.scan(
+        body, carry, jnp.arange(max_iters), unroll=layer_scan_unroll())
+    rel = jnp.sqrt(allreduce(jnp.sum(r * r, 0)) / b_norm2)
+    iters = jnp.sum(actives, axis=0)
+    return PCGResult(x, alphas, betas, actives, rz0, rel, iters)
+
+
+def solve_tolerance_iters(tol: float) -> int:
+    """Heuristic iteration cap for a requested tolerance (paper Sec. 3)."""
+    if tol >= 1.0:
+        return 20
+    if tol >= 0.1:
+        return 50
+    if tol >= 0.01:
+        return 100
+    return 200

@@ -1,0 +1,115 @@
+"""Partial pivoted Cholesky preconditioner (paper Section 3, "Preconditioning").
+
+A rank-k pivoted Cholesky factor L (n, k) of the *noise-free* kernel K gives
+the preconditioner P = L L^T + sigma^2 I. Computing L touches only k kernel
+rows — an O(nk) cost paid once per MLL evaluation, before any CG iteration
+(the paper finds k = 100 worthwhile at large n, vs. GPyTorch's default ~15).
+
+P is applied through the Woodbury identity and its log-determinant through
+the matrix determinant lemma; both reduce to k x k dense factorizations.
+P also admits exact sampling (z = L e1 + sigma e2), which the SLQ
+log-determinant estimator requires (probes ~ N(0, P)).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels_math import GPParams, kernel_diag, kernel_matrix, noise_variance
+
+
+@partial(jax.jit, static_argnums=(0, 3))
+def pivoted_cholesky(kind: str, X: jax.Array, params: GPParams, rank: int) -> jax.Array:
+    """Rank-`rank` pivoted Cholesky factor of K_XX (noise-free).
+
+    Returns L with shape (n, rank) such that K ~= L @ L.T, greedily minimizing
+    the trace of the residual. O(n * rank) memory, O(n * rank^2 + n*d*rank)
+    time. Fixed trip-count fori_loop: safe under jit and on the dry-run mesh.
+    """
+    n = X.shape[0]
+    d0 = kernel_diag(kind, X, params)
+
+    L0 = jnp.zeros((rank, n), X.dtype)
+
+    def body(i, carry):
+        L, diag = carry
+        p = jnp.argmax(diag)
+        # k(X[p], X): one kernel row. dynamic_slice keeps this jit-friendly.
+        xp = jax.lax.dynamic_slice_in_dim(X, p, 1, axis=0)
+        row = kernel_matrix(kind, xp, X, params)[0]  # (n,)
+        # subtract projections on previous pivots: rows >= i of L are zero,
+        # so the unmasked contraction is exact.
+        lp = L[:, p]  # (rank,)
+        row = row - lp @ L
+        pivot_val = jnp.maximum(jax.lax.dynamic_index_in_dim(diag, p, keepdims=False), 1e-12)
+        li = row / jnp.sqrt(pivot_val)
+        li = li.at[p].set(jnp.sqrt(pivot_val))
+        L = L.at[i].set(li)
+        diag = jnp.maximum(diag - li * li, 0.0)
+        diag = diag.at[p].set(-jnp.inf)  # never re-pick a pivot
+        return L, diag
+
+    L, _ = jax.lax.fori_loop(0, rank, body, (L0, d0))
+    return L.T  # (n, rank)
+
+
+class Preconditioner(NamedTuple):
+    """P = L L^T + sigma^2 I, with cached k x k Cholesky of (sigma^2 I + L^T L)."""
+
+    L: jax.Array          # (n, k)
+    sigma2: jax.Array     # ()
+    chol_inner: jax.Array # (k, k) lower Cholesky of sigma^2 I_k + L^T L
+
+    @property
+    def rank(self) -> int:
+        return self.L.shape[1]
+
+    def solve(self, V: jax.Array) -> jax.Array:
+        """P^{-1} V via Woodbury: sigma^-2 (V - L (s2 I + L^T L)^{-1} L^T V)."""
+        LtV = self.L.T @ V
+        inner = jax.scipy.linalg.cho_solve((self.chol_inner, True), LtV)
+        return (V - self.L @ inner) / self.sigma2
+
+    def logdet(self) -> jax.Array:
+        """log det P via the matrix determinant lemma."""
+        n = self.L.shape[0]
+        k = self.rank
+        logdet_inner = 2.0 * jnp.sum(jnp.log(jnp.diagonal(self.chol_inner)))
+        return (n - k) * jnp.log(self.sigma2) + logdet_inner
+
+    def sample(self, key: jax.Array, num: int, dtype=None) -> jax.Array:
+        """Draw (n, num) probes z ~ N(0, P) exactly: z = L e1 + sigma e2."""
+        dtype = dtype or self.L.dtype
+        n, k = self.L.shape
+        k1, k2 = jax.random.split(key)
+        e1 = jax.random.normal(k1, (k, num), dtype)
+        e2 = jax.random.normal(k2, (n, num), dtype)
+        return self.L @ e1 + jnp.sqrt(self.sigma2) * e2
+
+
+def make_preconditioner(
+    kind: str,
+    X: jax.Array,
+    params: GPParams,
+    rank: int,
+    noise_floor: float = 1e-4,
+    jitter: float = 1e-6,
+) -> Preconditioner:
+    """Build the rank-k pivoted-Cholesky preconditioner for K_hat."""
+    if rank <= 0:
+        # identity-preconditioner degenerate case: L = (n, 0)
+        n = X.shape[0]
+        s2 = noise_variance(params, noise_floor)
+        L = jnp.zeros((n, 0), X.dtype)
+        chol = jnp.zeros((0, 0), X.dtype)
+        return Preconditioner(L=L, sigma2=s2, chol_inner=chol)
+    L = pivoted_cholesky(kind, X, params, rank)
+    s2 = noise_variance(params, noise_floor)
+    inner = s2 * jnp.eye(rank, dtype=L.dtype) + L.T @ L
+    inner = inner + jitter * jnp.eye(rank, dtype=L.dtype)
+    chol = jnp.linalg.cholesky(inner)
+    return Preconditioner(L=L, sigma2=s2, chol_inner=chol)

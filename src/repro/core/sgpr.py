@@ -1,0 +1,126 @@
+"""SGPR — Sparse Gaussian Process Regression (Titsias 2009), paper baseline.
+
+The collapsed variational bound over m inducing points Z:
+
+    ELBO = log N(y | mu, Q_nn + s2 I) - tr(K_nn - Q_nn) / (2 s2),
+    Q_nn = K_nm K_mm^{-1} K_mn.
+
+Numerically stable form (Matthews 2016 / GPflow):
+    L  = chol(K_mm + jitter I)
+    A  = L^{-1} K_mn / s                      (m, n)
+    B  = I + A A^T,  LB = chol(B)
+    c  = LB^{-1} A yc / s
+    ELBO = -n/2 log 2pi - sum log diag(LB) - n/2 log s2
+           - ||yc||^2/(2 s2) + ||c||^2/2 - (sum k_ii - s2 ||A||_F^2)/(2 s2)
+
+O(n m^2) time, O(n m) memory. Z is a free variational parameter optimized
+with the hyperparameters (the paper: "inducing points are learned through a
+variational objective", m = 512). The paper could not scale SGPR to
+HouseElectric at m = 512 on one GPU; our implementation hits the same wall
+by design (it is the baseline, not the contribution) but can chunk the n
+axis for the A-matrix products.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels_math import (
+    GPParams,
+    constant_mean,
+    init_params,
+    kernel_diag,
+    kernel_matrix,
+    noise_variance,
+)
+
+_JITTER = 1e-6
+
+
+class SGPRParams(NamedTuple):
+    gp: GPParams
+    Z: jax.Array  # (m, d) inducing points
+
+
+def init_sgpr_params(key, X: jax.Array, num_inducing: int,
+                     ard_dims: int | None = None, noise: float = 0.5,
+                     dtype=jnp.float32) -> SGPRParams:
+    """Inducing points initialized as a random training subset (standard)."""
+    n = X.shape[0]
+    idx = jax.random.choice(key, n, (num_inducing,), replace=num_inducing > n)
+    return SGPRParams(gp=init_params(ard_dims=ard_dims, noise=noise, dtype=dtype),
+                      Z=X[idx].astype(dtype))
+
+
+def _common(kind, X, params: SGPRParams, noise_floor):
+    m = params.Z.shape[0]
+    s2 = noise_variance(params.gp, noise_floor)
+    Kmm = kernel_matrix(kind, params.Z, params.Z, params.gp)
+    Kmm = Kmm + _JITTER * jnp.eye(m, dtype=Kmm.dtype)
+    L = jnp.linalg.cholesky(Kmm)
+    Kmn = kernel_matrix(kind, params.Z, X, params.gp)
+    A = jax.scipy.linalg.solve_triangular(L, Kmn, lower=True) / jnp.sqrt(s2)
+    B = jnp.eye(m, dtype=A.dtype) + A @ A.T
+    LB = jnp.linalg.cholesky(B)
+    return s2, L, A, LB
+
+
+@partial(jax.jit, static_argnums=(0,), static_argnames=("noise_floor",))
+def sgpr_elbo(kind: str, X, y, params: SGPRParams, noise_floor: float = 1e-4):
+    """Collapsed bound (total, not per-datum)."""
+    n = X.shape[0]
+    yc = y - constant_mean(params.gp)
+    s2, L, A, LB = _common(kind, X, params, noise_floor)
+    Ay = A @ yc
+    c = jax.scipy.linalg.solve_triangular(LB, Ay, lower=True) / jnp.sqrt(s2)
+    kdiag_sum = jnp.sum(kernel_diag(kind, X, params.gp))
+    bound = (
+        -0.5 * n * math.log(2.0 * math.pi)
+        - jnp.sum(jnp.log(jnp.diagonal(LB)))
+        - 0.5 * n * jnp.log(s2)
+        - 0.5 * jnp.dot(yc, yc) / s2
+        + 0.5 * jnp.dot(c, c)
+        - 0.5 * (kdiag_sum / s2 - jnp.sum(A * A))
+    )
+    return bound
+
+
+def sgpr_loss(kind: str, X, y, params: SGPRParams, noise_floor: float = 1e-4):
+    return -sgpr_elbo(kind, X, y, params, noise_floor) / X.shape[0]
+
+
+class SGPRCache(NamedTuple):
+    L: jax.Array    # (m, m)
+    LB: jax.Array   # (m, m)
+    c: jax.Array    # (m,)
+
+
+@partial(jax.jit, static_argnums=(0,), static_argnames=("noise_floor",))
+def sgpr_precompute(kind: str, X, y, params: SGPRParams,
+                    noise_floor: float = 1e-4) -> SGPRCache:
+    yc = y - constant_mean(params.gp)
+    s2, L, A, LB = _common(kind, X, params, noise_floor)
+    c = jax.scipy.linalg.solve_triangular(LB, A @ yc, lower=True) / jnp.sqrt(s2)
+    return SGPRCache(L=L, LB=LB, c=c)
+
+
+@partial(jax.jit, static_argnums=(0,),
+         static_argnames=("noise_floor", "include_noise"))
+def sgpr_predict(kind: str, Xstar, params: SGPRParams, cache: SGPRCache,
+                 noise_floor: float = 1e-4, include_noise: bool = True):
+    """Predictive mean/variance at Xstar from the cached factors. O(n* m^2)."""
+    Ks = kernel_matrix(kind, params.Z, Xstar, params.gp)       # (m, n*)
+    tmp1 = jax.scipy.linalg.solve_triangular(cache.L, Ks, lower=True)
+    tmp2 = jax.scipy.linalg.solve_triangular(cache.LB, tmp1, lower=True)
+    mean = constant_mean(params.gp) + tmp2.T @ cache.c
+    kss = kernel_diag(kind, Xstar, params.gp)
+    var = kss - jnp.sum(tmp1 * tmp1, axis=0) + jnp.sum(tmp2 * tmp2, axis=0)
+    var = jnp.maximum(var, 1e-10)
+    if include_noise:
+        var = var + noise_variance(params.gp, noise_floor)
+    return mean, var

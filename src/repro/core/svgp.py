@@ -1,0 +1,126 @@
+"""SVGP — Stochastic Variational GP (Hensman et al. 2013), paper baseline.
+
+Whitened parameterization: q(u~) = N(m~, S~), u = L_mm u~ with
+L_mm = chol(K_mm). The minibatch ELBO for a Gaussian likelihood:
+
+    ELBO = (n/|b|) sum_{i in b} [ log N(y_i | mu_i, s2) - v_i / (2 s2) ]
+           - KL( N(m~, S~) || N(0, I) )
+    mu_i = a_i^T m~,  v_i = k_ii - ||a_i||^2 + ||S~^{1/2 T} a_i||^2,
+    a_i  = L_mm^{-1} k(Z, x_i)
+
+S~ is parameterized by its Cholesky factor (diagonal softplus'd). The paper
+trains SVGP with m = 1024, Adam(0.01), batch 1024, 100 epochs.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels_math import (
+    GPParams,
+    constant_mean,
+    init_params,
+    kernel_diag,
+    kernel_matrix,
+    noise_variance,
+    softplus,
+)
+
+_JITTER = 1e-6
+
+
+class SVGPParams(NamedTuple):
+    gp: GPParams
+    Z: jax.Array          # (m, d) inducing points
+    q_mu: jax.Array       # (m,) whitened variational mean
+    q_sqrt_raw: jax.Array # (m, m) lower-tri factor; diagonal through softplus
+
+
+def init_svgp_params(key, X: jax.Array, num_inducing: int,
+                     ard_dims: int | None = None, noise: float = 0.5,
+                     dtype=jnp.float32) -> SVGPParams:
+    n = X.shape[0]
+    idx = jax.random.choice(key, n, (num_inducing,), replace=num_inducing > n)
+    m = num_inducing
+    # q_sqrt ~= I: softplus(raw_diag) = 1  =>  raw = inv_softplus(1) = 0.5413
+    raw = jnp.zeros((m, m), dtype).at[jnp.arange(m), jnp.arange(m)].set(0.54132485)
+    return SVGPParams(
+        gp=init_params(ard_dims=ard_dims, noise=noise, dtype=dtype),
+        Z=X[idx].astype(dtype),
+        q_mu=jnp.zeros((m,), dtype),
+        q_sqrt_raw=raw,
+    )
+
+
+def _q_sqrt(params: SVGPParams) -> jax.Array:
+    m = params.q_mu.shape[0]
+    lower = jnp.tril(params.q_sqrt_raw, -1)
+    diag = softplus(jnp.diagonal(params.q_sqrt_raw))
+    return lower + jnp.diag(diag)
+
+
+def _kl_whitened(q_mu, q_sqrt):
+    """KL( N(q_mu, q_sqrt q_sqrt^T) || N(0, I) )."""
+    m = q_mu.shape[0]
+    logdet_q = 2.0 * jnp.sum(jnp.log(jnp.diagonal(q_sqrt)))
+    trace = jnp.sum(q_sqrt * q_sqrt)
+    return 0.5 * (trace + jnp.dot(q_mu, q_mu) - m - logdet_q)
+
+
+@partial(jax.jit, static_argnums=(0,), static_argnames=("noise_floor",))
+def svgp_elbo(kind: str, Xb, yb, params: SVGPParams, n_total: int,
+              noise_floor: float = 1e-4):
+    """Minibatch ELBO estimate (total over the dataset)."""
+    b = Xb.shape[0]
+    s2 = noise_variance(params.gp, noise_floor)
+    q_sqrt = _q_sqrt(params)
+    m = params.q_mu.shape[0]
+
+    Kmm = kernel_matrix(kind, params.Z, params.Z, params.gp)
+    Kmm = Kmm + _JITTER * jnp.eye(m, dtype=Kmm.dtype)
+    L = jnp.linalg.cholesky(Kmm)
+    Kmb = kernel_matrix(kind, params.Z, Xb, params.gp)       # (m, b)
+    A = jax.scipy.linalg.solve_triangular(L, Kmb, lower=True)  # (m, b)
+
+    mu = A.T @ params.q_mu + constant_mean(params.gp)
+    SA = q_sqrt.T @ A                                          # (m, b)
+    kdiag = kernel_diag(kind, Xb, params.gp)
+    v = jnp.maximum(kdiag - jnp.sum(A * A, 0) + jnp.sum(SA * SA, 0), 1e-10)
+
+    expected_ll = (
+        -0.5 * math.log(2.0 * math.pi) - 0.5 * jnp.log(s2)
+        - 0.5 * ((yb - mu) ** 2 + v) / s2
+    )
+    scale = n_total / b
+    return scale * jnp.sum(expected_ll) - _kl_whitened(params.q_mu, q_sqrt)
+
+
+def svgp_loss(kind: str, Xb, yb, params: SVGPParams, n_total: int,
+              noise_floor: float = 1e-4):
+    return -svgp_elbo(kind, Xb, yb, params, n_total, noise_floor) / n_total
+
+
+@partial(jax.jit, static_argnums=(0,),
+         static_argnames=("noise_floor", "include_noise"))
+def svgp_predict(kind: str, Xstar, params: SVGPParams,
+                 noise_floor: float = 1e-4, include_noise: bool = True):
+    """q(f*) moments; O(n* m^2), no training-set access at test time."""
+    q_sqrt = _q_sqrt(params)
+    m = params.q_mu.shape[0]
+    Kmm = kernel_matrix(kind, params.Z, params.Z, params.gp)
+    Kmm = Kmm + _JITTER * jnp.eye(m, dtype=Kmm.dtype)
+    L = jnp.linalg.cholesky(Kmm)
+    Ks = kernel_matrix(kind, params.Z, Xstar, params.gp)
+    A = jax.scipy.linalg.solve_triangular(L, Ks, lower=True)
+    mean = A.T @ params.q_mu + constant_mean(params.gp)
+    SA = q_sqrt.T @ A
+    kss = kernel_diag(kind, Xstar, params.gp)
+    var = jnp.maximum(kss - jnp.sum(A * A, 0) + jnp.sum(SA * SA, 0), 1e-10)
+    if include_noise:
+        var = var + noise_variance(params.gp, noise_floor)
+    return mean, var

@@ -1,0 +1,9 @@
+from .synthetic import (
+    DATASET_SPECS, RegressionSplits, make_regression_dataset, whiten_splits,
+)
+from .tokens import TokenPipeline, token_batch_specs
+
+__all__ = [
+    "DATASET_SPECS", "RegressionSplits", "make_regression_dataset",
+    "whiten_splits", "TokenPipeline", "token_batch_specs",
+]

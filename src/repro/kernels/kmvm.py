@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: fused distance -> kernel -> MVM for one row partition.
+
+The paper's compute hot spot is `K_{X^(l) X} @ V`: materialize a (rb, n)
+kernel slab in HBM, GEMM it into V, discard it. On TPU we go further — the
+slab never reaches HBM at all. The kernel fuses, per (bm, bn) VMEM tile:
+
+    1. MXU:  G  = Xi_tile @ Xj_tile^T            (the -2<x,y> term)
+    2. VPU:  D2 = |xi|^2 + |xj|^2 - 2 G          (squared distances)
+    3. VPU:  K  = phi(D2)                        (RBF / Matern elementwise)
+    4. MXU:  acc += K @ V_tile                   (fp32 accumulation)
+
+HBM traffic drops from O(rb * n) slab writes+reads to just the X/V tile
+reads — the kernel-MVM becomes compute-bound instead of HBM-bound (see
+EXPERIMENTS.md §Roofline for the napkin math: at d=9, the dense path moves
+~4 bytes/flop; fused moves ~0.004).
+
+Grid: (rb/bm, n/bn), with the n axis innermost so each output tile stays
+resident in VMEM across the whole reduction. Tile sizes are multiples of
+(8, 128) sublane x lane; the feature dim d and RHS count t are zero-padded
+to 128 by the wrapper (exact: padded features contribute 0 to distances,
+padded V columns are sliced off).
+
+Inputs arrive pre-scaled by the lengthscale and V pre-scaled by the
+outputscale (both O(n d) host-side ops), so the kernel body is
+hyperparameter-free and specializes only on the kernel family.
+
+Validated against `repro.kernels.ref` in interpret mode on CPU (this
+container has no TPU); `repro.kernels.ops` picks interpret automatically.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.kernels_math import kernel_from_sqdist
+
+# Tile defaults: (bm, bn) = (256, 512) fp32.
+# VMEM budget per tile set:
+#   Xi (256,128)*4B = 128 KiB, Xj (512,128)*4B = 256 KiB, V (512,128)*4B = 256 KiB,
+#   K tile (256,512)*4B = 512 KiB, acc (256,128)*4B = 128 KiB  => ~1.3 MiB << 16 MiB VMEM,
+# leaving room for double-buffered input pipelining.
+DEFAULT_BM = 256
+DEFAULT_BN = 512
+
+
+def _kmvm_kernel(kind: str, xi_ref, xj_ref, v_ref, out_ref):
+    """One (i, j) grid step: out[i] += phi(d2(Xi_i, Xj_j)) @ V_j."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    xi = xi_ref[...].astype(jnp.float32)   # (bm, d)
+    xj = xj_ref[...].astype(jnp.float32)   # (bn, d)
+    v = v_ref[...].astype(jnp.float32)     # (bn, t)
+
+    # MXU: cross term; VPU: norms
+    g = jax.lax.dot_general(
+        xi, xj, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    ni = jnp.sum(xi * xi, axis=1, keepdims=True)       # (bm, 1)
+    nj = jnp.sum(xj * xj, axis=1, keepdims=True).T     # (1, bn)
+    d2 = jnp.maximum(ni + nj - 2.0 * g, 0.0)
+
+    k = kernel_from_sqdist(kind, d2)                   # (bm, bn) in VMEM only
+
+    out_ref[...] += jax.lax.dot_general(
+        k, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("kind", "bm", "bn", "interpret"))
+def kmvm_pallas(
+    kind: str,
+    Xi: jax.Array,   # (m, d)  pre-scaled rows, m % bm == 0
+    Xj: jax.Array,   # (n, d)  pre-scaled columns, n % bn == 0
+    V: jax.Array,    # (n, t)  pre-scaled RHS, t % 128 == 0
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused phi(dist(Xi, Xj)) @ V. Shapes must be pre-padded (see ops.py)."""
+    m, d = Xi.shape
+    n, t = V.shape
+    assert Xj.shape == (n, d), (Xi.shape, Xj.shape, V.shape)
+    assert m % bm == 0 and n % bn == 0, (m, bm, n, bn)
+
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        functools.partial(_kmvm_kernel, kind),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, t), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, t), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, t), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(Xi, Xj, V)

@@ -1,0 +1,91 @@
+"""Public jit'd wrappers for the fused kernel-MVM Pallas kernel.
+
+Handles everything the raw kernel does not: lengthscale/outputscale
+application, padding of (m, n, d, t) to tile multiples, dtype policy,
+automatic interpret-mode on CPU, and a `block_fn` adapter so
+`repro.core.partitioned.kmvm` can route its per-partition slab MVMs through
+the Pallas path transparently.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kernels_math import GPParams, outputscale, scale_inputs
+
+from .kmvm import DEFAULT_BM, DEFAULT_BN, kmvm_pallas
+
+_LANE = 128
+
+
+def _pad_axis(A: jax.Array, axis: int, multiple: int) -> jax.Array:
+    size = A.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return A
+    widths = [(0, 0)] * A.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(A, widths)
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def kmvm_block(
+    kind: str,
+    Xi: jax.Array,
+    Xj: jax.Array,
+    V: jax.Array,
+    params: GPParams,
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """K(Xi, Xj) @ V via the fused Pallas kernel; arbitrary shapes/dtypes.
+
+    Semantics identical to `repro.kernels.ref.kmvm_ref` (no noise term —
+    the diagonal sigma^2 V is the caller's O(n) epilogue).
+    """
+    if interpret is None:
+        interpret = _auto_interpret()
+    squeeze = V.ndim == 1
+    if squeeze:
+        V = V[:, None]
+    m, _ = Xi.shape
+    n, t = V.shape
+
+    Xi_s = scale_inputs(Xi, params).astype(jnp.float32)
+    Xj_s = scale_inputs(Xj, params).astype(jnp.float32)
+    Vs = (outputscale(params) * V).astype(jnp.float32)
+
+    bm_eff = min(bm, _round_up(m, 8))
+    bn_eff = min(bn, _round_up(n, _LANE))
+    Xi_p = _pad_axis(_pad_axis(Xi_s, 0, bm_eff), 1, _LANE)
+    Xj_p = _pad_axis(_pad_axis(Xj_s, 0, bn_eff), 1, _LANE)
+    V_p = _pad_axis(_pad_axis(Vs, 0, bn_eff), 1, _LANE)
+
+    out = kmvm_pallas(kind, Xi_p, Xj_p, V_p, bm=bm_eff, bn=bn_eff,
+                      interpret=interpret)
+    out = out[:m, :t].astype(V.dtype)
+    return out[:, 0] if squeeze else out
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def pallas_block_fn(kind: str, *, bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                    interpret: bool | None = None):
+    """Adapter for `partitioned.kmvm(..., block_fn=...)`: per-partition slab
+    MVMs go through the fused kernel instead of the dense jnp path."""
+
+    def fn(Xb, X, V, params):
+        return kmvm_block(kind, Xb, X, V, params, bm=bm, bn=bn,
+                          interpret=interpret)
+
+    return fn

@@ -1,0 +1,97 @@
+"""ShapeDtypeStruct input specs for every (arch x shape) dry-run cell.
+
+Shapes (assignment):
+    train_4k     seq 4,096   global_batch 256   -> train_step
+    prefill_32k  seq 32,768  global_batch 32    -> prefill (serve)
+    decode_32k   seq 32,768  global_batch 128   -> serve_step (1 new token,
+                                                   KV cache of seq_len)
+    long_500k    seq 524,288 global_batch 1     -> serve_step; ONLY for
+                                                   sub-quadratic archs
+                                                   (ssm / hybrid)
+
+Encoder-only archs would skip decode shapes (none assigned here); pure
+full-attention archs skip long_500k (see DESIGN.md §5). [audio]/[vlm]
+frontends are stubs: specs carry precomputed frame/patch embeddings.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+SHAPES = {
+    "train_4k": dict(seq=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768, batch=32, kind="prefill"),
+    "decode_32k": dict(seq=32768, batch=128, kind="decode"),
+    "long_500k": dict(seq=524288, batch=1, kind="decode"),
+}
+
+
+class Cell(NamedTuple):
+    arch: str
+    shape: str
+    kind: str       # train | prefill | decode | gp_train | gp_predict
+    batch: int
+    seq: int
+    skip: str = ""  # non-empty => cell is skipped, with the reason
+
+
+def cell_for(cfg, shape_name: str) -> Cell:
+    s = SHAPES[shape_name]
+    skip = ""
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        skip = "pure full-attention arch: 524k context is out of scope per assignment"
+    return Cell(arch=cfg.name, shape=shape_name, kind=s["kind"],
+                batch=s["batch"], seq=s["seq"], skip=skip)
+
+
+def _tok(b, s):
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def input_specs(cfg, cell: Cell, *, dtype=jnp.bfloat16) -> dict:
+    """Batch ShapeDtypeStructs for a train/prefill cell."""
+    b, s = cell.batch, cell.seq
+    batch = {"tokens": _tok(b, s)}
+    if cell.kind == "train":
+        batch["targets"] = _tok(b, s)
+    if cfg.is_encdec:
+        # [audio] stub: precomputed frame embeddings for the encoder
+        batch["enc_embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), dtype)
+    if cfg.family == "vlm":
+        # [vlm] stub: patch embeddings override masked token positions
+        batch["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), dtype)
+        batch["embed_mask"] = jax.ShapeDtypeStruct((b, s), jnp.bool_)
+    return batch
+
+
+def decode_specs(cfg, cell: Cell, *, dtype=jnp.bfloat16):
+    """(state_specs, token_spec) for a decode cell: KV cache of seq_len."""
+    state = jax.eval_shape(
+        lambda: init_decode_state_spec(cfg, cell.batch, cell.seq, dtype))
+    tok = jax.ShapeDtypeStruct((cell.batch,), jnp.int32)
+    return state, tok
+
+
+def init_decode_state_spec(cfg, batch, max_seq, dtype):
+    from repro.models.model import init_decode_state
+    enc_len = max_seq if cfg.is_encdec else 0
+    return init_decode_state(cfg, batch, max_seq, dtype, enc_len=enc_len)
+
+
+def gp_cells(gp_cfg) -> list:
+    return [
+        Cell(arch=gp_cfg.name, shape="train_1m", kind="gp_train",
+             batch=gp_cfg.n, seq=gp_cfg.d),
+        Cell(arch=gp_cfg.name, shape="predict_1m", kind="gp_predict",
+             batch=gp_cfg.n, seq=gp_cfg.d),
+    ]
+
+
+def gp_input_specs(gp_cfg):
+    return {
+        "X": jax.ShapeDtypeStruct((gp_cfg.n, gp_cfg.d), jnp.float32),
+        "y": jax.ShapeDtypeStruct((gp_cfg.n,), jnp.float32),
+    }

@@ -1,0 +1,12 @@
+from .config import ArchConfig
+from .model import (
+    init_params, train_loss, forward_hidden, init_decode_state, decode_step,
+    count_params, count_active_params,
+)
+from .registry import get_arch, list_archs
+
+__all__ = [
+    "ArchConfig", "init_params", "train_loss", "forward_hidden",
+    "init_decode_state", "decode_step", "count_params",
+    "count_active_params", "get_arch", "list_archs",
+]

@@ -1,0 +1,121 @@
+"""GQA attention: query-chunked training/prefill path + cached decode path.
+
+Training/prefill never materializes the full (S, S) score matrix: queries
+are processed in `attn_chunk` blocks against the full K/V (softmax per
+block is exact — K is fully resident, so no online rescaling is needed).
+Peak score memory is (B, H, attn_chunk, S) instead of (B, H, S, S): at 32k
+prefill that is the difference between 256 MB and 8 GB per head-shard.
+
+Masks: causal, causal+sliding-window (hymba), or none (encoder /
+cross-attention). Decode attends one new token against the KV cache; a
+sliding-window decode masks cache slots outside the window so the cache
+layout stays scan-uniform across layers.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def _repeat_kv(k, n_rep: int):
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)
+                            ).reshape(b, s, h * n_rep, d)
+
+
+def attention(q, k, v, *, causal: bool, window: int = 0, chunk: int = 1024,
+              q_offset: int = 0):
+    """q (B, Sq, Hq, hd); k/v (B, Sk, Hkv, hd) -> (B, Sq, Hq, hd).
+
+    window > 0 adds a sliding-window constraint (keys within `window` of the
+    query). q_offset is the absolute position of q[0] (prefill continuation).
+    """
+    b, sq, hq, hd = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    k = _repeat_kv(k, hq // hkv)
+    v = _repeat_kv(v, hq // hkv)
+    scale = hd ** -0.5
+    chunk = min(chunk, sq)
+    pad = (-sq) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nchunks = q.shape[1] // chunk
+    qc = q.reshape(b, nchunks, chunk, hq, hd).transpose(1, 0, 3, 2, 4)
+
+    kT = k.transpose(0, 2, 3, 1)      # (B, H, hd, Sk)
+    vT = v.transpose(0, 2, 1, 3)      # (B, H, Sk, hd)
+    kpos = jnp.arange(sk)
+
+    def one_chunk(ci, qb):
+        # qb: (B, H, chunk, hd)
+        scores = jnp.einsum("bhqd,bhdk->bhqk", qb.astype(jnp.float32),
+                            kT.astype(jnp.float32)) * scale
+        qpos = q_offset + ci * chunk + jnp.arange(chunk)
+        mask = jnp.ones((chunk, sk), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        # window may be a traced per-layer value; <= 0 disables it
+        win = jnp.asarray(window)
+        mask &= (kpos[None, :] > qpos[:, None] - win) | (win <= 0)
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhqk,bhkd->bhqd", probs, vT.astype(jnp.float32))
+        return out.astype(q.dtype)
+
+    if nchunks == 1:
+        out = one_chunk(0, qc[0])[None]
+    else:
+        from .runtime_flags import loop_map
+        # checkpointed per chunk: the layer backward otherwise keeps every
+        # chunk's (B, H, chunk, S) fp32 probability matrix resident
+        ck = jax.checkpoint(lambda args: one_chunk(*args))
+        out = loop_map(ck, (jnp.arange(nchunks), qc))
+    out = out.transpose(1, 0, 3, 2, 4).reshape(b, nchunks * chunk, hq, hd)
+    return out[:, :sq]
+
+
+def decode_attention(q, k_cache, v_cache, t, *, window: int = 0):
+    """One-token decode: q (B, 1, Hq, hd) vs cache (B, S, Hkv, hd).
+
+    `t` is the current length (position of the new token); slots >= t are
+    masked. With window > 0 only the last `window` positions participate.
+    """
+    b, _, hq, hd = q.shape
+    s, hkv = k_cache.shape[1], k_cache.shape[2]
+    k = _repeat_kv(k_cache, hq // hkv)
+    v = _repeat_kv(v_cache, hq // hkv)
+    scores = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (hd ** -0.5)
+    pos = jnp.arange(s)
+    mask = pos[None, None, None, :] <= t
+    win = jnp.asarray(window)
+    mask &= (pos[None, None, None, :] > t - win) | (win <= 0)
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqs,bshd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def attn_params(key, d: int, hq: int, hkv: int, hd: int, dtype):
+    ks = jax.random.split(key, 4)
+    s = (2.0 / d) ** 0.5
+    so = (2.0 / (hq * hd)) ** 0.5
+    return {
+        "wq": s * jax.random.normal(ks[0], (d, hq * hd), dtype),
+        "wk": s * jax.random.normal(ks[1], (d, hkv * hd), dtype),
+        "wv": s * jax.random.normal(ks[2], (d, hkv * hd), dtype),
+        "wo": so * jax.random.normal(ks[3], (hq * hd, d), dtype),
+    }
+
+
+def qkv_proj(p, x, hq: int, hkv: int, hd: int):
+    b, s, _ = x.shape
+    q = (x @ p["wq"]).reshape(b, s, hq, hd)
+    k = (x @ p["wk"]).reshape(b, s, hkv, hd)
+    v = (x @ p["wv"]).reshape(b, s, hkv, hd)
+    return q, k, v

@@ -1,0 +1,180 @@
+"""Per-family transformer blocks, scan-stackable (uniform pytrees per arch).
+
+Families:
+  dense / vlm       — pre-norm GQA attention + (Sw)iGLU MLP
+  moe               — attention + top-k MoE FFN (+ shared experts)
+  ssm               — Mamba-2 SSD block (attention-free, no MLP: d_ff = 0)
+  hybrid (hymba)    — PARALLEL attention + SSM heads on the same normed
+                      input, averaged (arXiv:2411.13676), then MLP; per-layer
+                      sliding-window vs global attention via a scanned flag
+  encdec decoder    — self-attn + cross-attn + MLP (seamless)
+
+Every block fn has signature (cfg, p, x, positions, win) -> (x, aux) for
+train/prefill and a matching *_decode for cached single-token decoding.
+`win` is a traced per-layer window size (0 = full attention) so hymba's
+mixed global/SWA layers stay inside one lax.scan.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attention, attn_params, decode_attention, qkv_proj
+from .layers import apply_norm, apply_positional, mlp_apply, mlp_params, norm_param
+from .moe import moe_apply, moe_params
+from .shardctx import shard, shard_heads
+from .ssd import ssd_apply, ssd_decode_step, ssd_init_state, ssd_params
+
+
+# ---------------------------------------------------------------------------
+# parameter construction (single layer; model.py stacks over L)
+# ---------------------------------------------------------------------------
+
+
+def block_params(cfg, key, dtype, *, cross: bool = False):
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    p = {"ln1": norm_param(cfg.norm, d, dtype)}
+    fam = cfg.family
+    if fam in ("dense", "vlm", "moe", "hybrid", "encdec"):
+        p["attn"] = attn_params(ks[0], d, cfg.n_heads, cfg.n_kv_heads, cfg.hd, dtype)
+    if fam in ("dense", "vlm", "hybrid", "encdec"):
+        p["ln2"] = norm_param(cfg.norm, d, dtype)
+        p["mlp"] = mlp_params(cfg.mlp, ks[1], d, cfg.d_ff, dtype)
+    if fam == "moe":
+        p["ln2"] = norm_param(cfg.norm, d, dtype)
+        p["moe"] = moe_params(ks[2], d, cfg.d_ff, cfg.n_experts,
+                              cfg.n_shared_experts, cfg.top_k, dtype)
+    if fam in ("ssm", "hybrid"):
+        p["ssm"] = ssd_params(ks[3], cfg, dtype)
+    if cross:
+        p["ln_cross"] = norm_param(cfg.norm, d, dtype)
+        p["cross"] = attn_params(ks[4], d, cfg.n_heads, cfg.n_kv_heads,
+                                 cfg.hd, dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# train / prefill paths
+# ---------------------------------------------------------------------------
+
+
+def _attn_branch(cfg, p, xn, positions, win, *, causal=True, q_offset=0):
+    q, k, v = qkv_proj(p["attn"], xn, cfg.n_heads, cfg.n_kv_heads, cfg.hd)
+    q = shard_heads(apply_positional(cfg, q, positions))
+    k = apply_positional(cfg, k, positions)
+    out = attention(q, k, v, causal=causal, window=win, chunk=cfg.attn_chunk)
+    out = shard_heads(out)
+    b, s = xn.shape[:2]
+    return out.reshape(b, s, -1) @ p["attn"]["wo"]
+
+
+def block_apply(cfg, p, x, positions, win=0, enc_out=None, *, causal=True):
+    """One block, training/prefill. Returns (x, moe_aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    xn = apply_norm(cfg.norm, x, p["ln1"])
+    fam = cfg.family
+
+    if fam == "hybrid":
+        attn_out = _attn_branch(cfg, {"attn": p["attn"]}, xn, positions, win)
+        ssm_out = ssd_apply(p["ssm"], cfg, xn)
+        x = x + 0.5 * (attn_out + ssm_out)
+    elif fam == "ssm":
+        x = x + ssd_apply(p["ssm"], cfg, xn)
+    else:
+        x = x + _attn_branch(cfg, {"attn": p["attn"]}, xn, positions, win,
+                             causal=causal)
+
+    if enc_out is not None:  # cross-attention (enc-dec decoder)
+        xn = apply_norm(cfg.norm, x, p["ln_cross"])
+        b, s = xn.shape[:2]
+        q = (xn @ p["cross"]["wq"]).reshape(b, s, cfg.n_heads, cfg.hd)
+        se = enc_out.shape[1]
+        k = (enc_out @ p["cross"]["wk"]).reshape(b, se, cfg.n_kv_heads, cfg.hd)
+        v = (enc_out @ p["cross"]["wv"]).reshape(b, se, cfg.n_kv_heads, cfg.hd)
+        out = attention(q, k, v, causal=False, chunk=cfg.attn_chunk)
+        x = x + out.reshape(b, s, -1) @ p["cross"]["wo"]
+
+    if fam == "moe":
+        xn = apply_norm(cfg.norm, x, p["ln2"])
+        mo, aux = moe_apply(p["moe"], xn, top_k=cfg.top_k,
+                            capacity_factor=cfg.capacity_factor)
+        x = x + mo
+    elif fam != "ssm":
+        xn = apply_norm(cfg.norm, x, p["ln2"])
+        x = x + mlp_apply(cfg.mlp, p["mlp"], xn)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# decode paths (single token, cached)
+# ---------------------------------------------------------------------------
+
+
+def init_layer_cache(cfg, batch: int, max_seq: int, dtype,
+                     *, enc_len: int = 0):
+    """Cache pytree for ONE layer (model stacks over L)."""
+    c = {}
+    if cfg.family in ("dense", "vlm", "moe", "hybrid", "encdec"):
+        c["k"] = jnp.zeros((batch, max_seq, cfg.n_kv_heads, cfg.hd), dtype)
+        c["v"] = jnp.zeros((batch, max_seq, cfg.n_kv_heads, cfg.hd), dtype)
+    if cfg.family in ("ssm", "hybrid"):
+        c["ssm"] = ssd_init_state(cfg, batch, dtype)
+    if enc_len:
+        c["ck"] = jnp.zeros((batch, enc_len, cfg.n_kv_heads, cfg.hd), dtype)
+        c["cv"] = jnp.zeros((batch, enc_len, cfg.n_kv_heads, cfg.hd), dtype)
+    return c
+
+
+def _attn_decode_branch(cfg, p, xn, cache, t, win):
+    b = xn.shape[0]
+    q, k, v = qkv_proj(p["attn"], xn, cfg.n_heads, cfg.n_kv_heads, cfg.hd)
+    pos = jnp.full((b, 1), t, jnp.int32)
+    if cfg.mrope_sections:
+        pos = jnp.broadcast_to(pos[None], (3, b, 1))
+    q = apply_positional(cfg, q, pos)
+    k = apply_positional(cfg, k, pos)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, t, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, t, axis=1)
+    out = decode_attention(q, k_cache, v_cache, t, window=win)
+    return out.reshape(b, 1, -1) @ p["attn"]["wo"], k_cache, v_cache
+
+
+def block_decode(cfg, p, x, cache, t, win=0):
+    """One block, one new token at position t. Returns (x, new_cache)."""
+    new_cache = dict(cache)
+    xn = apply_norm(cfg.norm, x, p["ln1"])
+    fam = cfg.family
+
+    if fam == "hybrid":
+        a_out, kc, vc = _attn_decode_branch(cfg, p, xn, cache, t, win)
+        s_out, new_ssm = ssd_decode_step(p["ssm"], cfg, cache["ssm"], xn)
+        new_cache.update(k=kc, v=vc, ssm=new_ssm)
+        x = x + 0.5 * (a_out + s_out)
+    elif fam == "ssm":
+        s_out, new_ssm = ssd_decode_step(p["ssm"], cfg, cache["ssm"], xn)
+        new_cache["ssm"] = new_ssm
+        x = x + s_out
+    else:
+        a_out, kc, vc = _attn_decode_branch(cfg, p, xn, cache, t, win)
+        new_cache.update(k=kc, v=vc)
+        x = x + a_out
+
+    if "ck" in cache:  # cross-attention against precomputed encoder K/V
+        xn = apply_norm(cfg.norm, x, p["ln_cross"])
+        b = xn.shape[0]
+        q = (xn @ p["cross"]["wq"]).reshape(b, 1, cfg.n_heads, cfg.hd)
+        out = decode_attention(q, cache["ck"], cache["cv"],
+                               cache["ck"].shape[1] - 1)
+        x = x + out.reshape(b, 1, -1) @ p["cross"]["wo"]
+
+    if fam == "moe":
+        xn = apply_norm(cfg.norm, x, p["ln2"])
+        mo, _ = moe_apply(p["moe"], xn, top_k=cfg.top_k,
+                          capacity_factor=8.0)  # tiny T: avoid drops
+        x = x + mo
+    elif fam != "ssm":
+        xn = apply_norm(cfg.norm, x, p["ln2"])
+        x = x + mlp_apply(cfg.mlp, p["mlp"], xn)
+    return x, new_cache

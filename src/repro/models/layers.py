@@ -1,0 +1,129 @@
+"""Shared layers: norms, MLPs, rotary embeddings (RoPE + M-RoPE).
+
+Compute dtype is bf16 (params bf16, fp32 optimizer moments live in the
+trainer); norms and softmax statistics run in fp32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm(x, scale):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + 1e-6)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def np_layernorm(x, scale=None):
+    """OLMo's non-parametric LayerNorm (no learnable affine)."""
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + 1e-5)).astype(x.dtype)
+
+
+def apply_norm(kind: str, x, scale):
+    if kind == "rmsnorm":
+        return rmsnorm(x, scale)
+    if kind == "np_layernorm":
+        return np_layernorm(x)
+    raise ValueError(kind)
+
+
+def norm_param(kind: str, d: int, dtype):
+    # np_layernorm keeps a dummy scalar so the pytree stays uniform
+    if kind == "np_layernorm":
+        return jnp.zeros((1,), dtype)
+    return jnp.ones((d,), dtype)
+
+
+def mlp_apply(kind: str, p, x):
+    """x (..., D) -> (..., D). swiglu: wi/wg/wo; gelu: wi/wo (wg unused)."""
+    from .shardctx import shard
+
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])
+    elif kind == "gelu":
+        h = jax.nn.gelu(x @ p["wi"])
+    else:
+        raise ValueError(kind)
+    if h.ndim == 3:
+        h = shard(h, "fsdp", None, "tp")   # (B, S, F): F over model
+    return h @ p["wo"]
+
+
+def mlp_params(kind: str, key, d: int, f: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = (2.0 / d) ** 0.5
+    s_out = (2.0 / f) ** 0.5
+    p = {
+        "wi": s_in * jax.random.normal(k1, (d, f), dtype),
+        "wo": s_out * jax.random.normal(k3, (f, d), dtype),
+    }
+    if kind == "swiglu":
+        p["wg"] = s_in * jax.random.normal(k2, (d, f), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(hd: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x, positions, theta: float):
+    """x (B, S, H, hd); positions (B, S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float, sections: tuple):
+    """Qwen2-VL multimodal RoPE. positions3 (3, B, S): (t, h, w) ids.
+
+    The hd/2 frequency slots are split into `sections` (sum = hd/2); each
+    section rotates by its own positional stream. Text tokens carry t=h=w,
+    reducing to plain RoPE.
+    """
+    hd = x.shape[-1]
+    assert sum(sections) == hd // 2, (sections, hd)
+    freqs = rope_freqs(hd, theta)                        # (hd/2,)
+    # angles per stream: (3, B, S, hd/2)
+    angles = positions3[..., None].astype(jnp.float32) * freqs
+    # select stream per frequency slot
+    sel = jnp.repeat(jnp.arange(3), jnp.array(sections),
+                     total_repeat_length=hd // 2)        # (hd/2,)
+    idx = jnp.broadcast_to(sel[None, None, None, :],
+                           (1,) + angles.shape[1:]).astype(jnp.int32)
+    angles = jnp.take_along_axis(angles, idx, axis=0)[0]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def positions_for(cfg, batch: int, seq: int, offset=0):
+    """Default position ids; M-RoPE gets three identical text streams."""
+    pos = offset + jnp.arange(seq, dtype=jnp.int32)[None, :]
+    pos = jnp.broadcast_to(pos, (batch, seq))
+    if cfg.mrope_sections:
+        return jnp.broadcast_to(pos[None], (3, batch, seq))
+    return pos
+
+
+def apply_positional(cfg, x, positions):
+    if cfg.mrope_sections:
+        return apply_mrope(x, positions, cfg.rope_theta, cfg.mrope_sections)
+    return apply_rope(x, positions, cfg.rope_theta)

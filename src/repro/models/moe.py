@@ -1,0 +1,103 @@
+"""Mixture-of-experts FFN: top-k routing with capacity-factor scatter dispatch.
+
+FLOP-faithful to top-k routing: tokens are physically gathered into a
+(B, E, capacity, D) buffer (batched scatter), run through batched expert
+SwiGLUs, and scattered back weighted by router probabilities — no dense
+all-expert compute, no one-hot-einsum fake FLOPs. Tokens beyond an
+expert's capacity are dropped (combine weight zero), the standard
+fixed-shape XLA treatment; capacity_factor 1.25 makes drops rare.
+
+Routing is PER SEQUENCE (the leading batch dim is kept through dispatch,
+expert GEMMs and combine). This is the distribution-critical choice: with
+batch sharded over the data axes, routing/dispatch/GEMM are local to every
+data shard — no global cumsum, no cross-device scatter, no all-to-all. A
+first (global-routing) implementation let GSPMD replicate the full expert
+GEMM on all 256 devices (granite dry-run: 1.1e16 flops/device, ~16,000x
+useful work — see EXPERIMENTS.md §Perf); per-sequence routing plus explicit
+constraints restores sharded expert compute.
+
+Sharding: expert weights (E, D, F) keep F on `model` and D on fsdp
+(uniform for E = 60/40, which 16 does not divide); dispatch buffers shard
+their batch dim over fsdp and the expert hidden dim over `model`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import mlp_params
+from .shardctx import shard
+
+
+def moe_params(key, d: int, f_expert: int, n_experts: int, n_shared: int,
+               top_k: int, dtype):
+    keys = jax.random.split(key, 5)
+    s = (2.0 / d) ** 0.5
+    so = (2.0 / f_expert) ** 0.5
+    p = {
+        "router": 0.02 * jax.random.normal(keys[0], (d, n_experts), jnp.float32),
+        "wi": s * jax.random.normal(keys[1], (n_experts, d, f_expert), dtype),
+        "wg": s * jax.random.normal(keys[2], (n_experts, d, f_expert), dtype),
+        "wo": so * jax.random.normal(keys[3], (n_experts, f_expert, d), dtype),
+    }
+    if n_shared:
+        p["shared"] = mlp_params("swiglu", keys[4], d, f_expert * n_shared, dtype)
+    return p
+
+
+def moe_apply(p, x, *, top_k: int, capacity_factor: float = 1.25):
+    """x (B, S, D) -> (B, S, D) with auxiliary load-balance loss."""
+    b, s, d = x.shape
+    e = p["router"].shape[1]
+
+    logits = x.astype(jnp.float32) @ p["router"]             # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, top_k)               # (B, S, k)
+    top_p = top_p / jnp.sum(top_p, -1, keepdims=True)        # renormalize
+
+    capacity = max(int(capacity_factor * top_k * s / e), 1)
+    # per-sequence position of each (token, k) within its expert
+    onehot = jax.nn.one_hot(top_i, e, dtype=jnp.int32)       # (B, S, k, E)
+    flat_oh = onehot.reshape(b, s * top_k, e)
+    pos = jnp.sum(jnp.cumsum(flat_oh, axis=1) * flat_oh, -1) - 1  # (B, S*k)
+    keep = (pos >= 0) & (pos < capacity)
+    slot = jnp.where(keep,
+                     top_i.reshape(b, s * top_k) * capacity + pos,
+                     e * capacity)                           # overflow slot
+
+    # batched scatter: tokens -> (B, E*capacity [+1 overflow], D)
+    xt = x.reshape(b, s, d)
+    tok = jnp.broadcast_to(jnp.arange(s)[None, :, None],
+                           (b, s, top_k)).reshape(b, s * top_k)
+    vals = jnp.take_along_axis(xt, tok[..., None], axis=1)   # (B, S*k, D)
+    bidx = jnp.broadcast_to(jnp.arange(b)[:, None], (b, s * top_k))
+    buf = jnp.zeros((b, e * capacity + 1, d), x.dtype)
+    buf = buf.at[bidx, slot].set(vals, mode="drop")
+    expert_in = buf[:, :-1].reshape(b, e, capacity, d)
+    expert_in = shard(expert_in, "fsdp", None, None, None)
+
+    # batched expert SwiGLU: (B, E, C, D) x (E, D, F); F sharded over model
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", expert_in, p["wg"])) * \
+        jnp.einsum("becd,edf->becf", expert_in, p["wi"])
+    h = shard(h, "fsdp", None, None, "tp")
+    expert_out = jnp.einsum("becf,efd->becd", h, p["wo"])    # (B, E, C, D)
+
+    # combine: gather back per sequence, weight by router prob
+    flat_out = expert_out.reshape(b, e * capacity, d)
+    safe_slot = jnp.where(keep, slot, 0)
+    gathered = jnp.take_along_axis(flat_out, safe_slot[..., None], axis=1)
+    gathered = jnp.where(keep[..., None], gathered, 0.0)     # (B, S*k, D)
+    weighted = (gathered.reshape(b, s, top_k, d) *
+                top_p[..., None].astype(x.dtype))
+    out = jnp.sum(weighted, axis=2)
+
+    if "shared" in p:
+        from .layers import mlp_apply
+        out = out + mlp_apply("swiglu", p["shared"], x)
+
+    # load-balance auxiliary loss (Switch-style), per sequence then averaged
+    me = jnp.mean(probs, axis=1)                              # (B, E)
+    ce = jnp.mean(jnp.sum(onehot, axis=2).astype(jnp.float32), axis=1)
+    aux = e * jnp.mean(jnp.sum(me * ce, axis=-1))
+    return out, aux

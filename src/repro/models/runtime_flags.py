@@ -1,0 +1,71 @@
+"""Trace-time behavior flags.
+
+REPRO_DRYRUN_UNROLL=1 (set by launch/dryrun.py only) fully unrolls every
+fixed-trip-count loop (layer stacks, attention chunks, CE chunks, SSD
+chunks, CG iterations, kernel row-blocks). XLA's cost_analysis counts a
+while-loop body ONCE regardless of trip count, so the roofline numbers are
+only faithful on the unrolled program. Normal execution keeps rolled loops
+(small HLO, fast compiles).
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+
+def unroll_enabled() -> bool:
+    return os.environ.get("REPRO_DRYRUN_UNROLL", "0") == "1"
+
+
+def scan_unroll():
+    """For INNER fixed-trip loops (attention/CE/SSD chunks, kernel blocks):
+    fully unrolled under the dry-run flag."""
+    return True if unroll_enabled() else 1
+
+
+def layer_scan_unroll() -> int:
+    """For DEPTH loops (layer stacks, CG iterations). The dry-run compiles
+    each cell twice (REPRO_LAYER_UNROLL=1 and =2) and linearly extrapolates
+    per-layer costs — full unrolling of an 88-layer model is a >400 s CPU
+    compile, while body-once counts are off by exactly the trip count."""
+    return int(os.environ.get("REPRO_LAYER_UNROLL", "1"))
+
+
+def loop_map(f, xs):
+    """lax.map that unrolls to a Python loop under the dry-run flag.
+
+    xs: array or tuple of arrays with a shared leading axis.
+
+    Unrolled iterations are chained through an opaque zero (bitwise
+    identity): without the serialization, XLA's scheduler overlaps ALL
+    iterations' transient buffers (e.g. 64 kernel slabs live at once in the
+    GP cells — 17 GB/device), which production's rolled lax.map never does.
+    The chain makes the unrolled program's memory_analysis match the
+    deployed schedule.
+    """
+    if not unroll_enabled():
+        return jax.lax.map(f, xs)
+    leaves = jax.tree.leaves(xs)
+    n = leaves[0].shape[0]
+    outs = []
+    chain = None
+    for i in range(n):
+        xi = jax.tree.map(lambda a: a[i], xs)
+        if chain is not None:
+            link = jax.lax.optimization_barrier(
+                jnp.zeros((), jnp.float32)) * chain
+
+            def tie(a):
+                if jnp.issubdtype(a.dtype, jnp.floating):
+                    return a + link.astype(a.dtype)
+                return a
+
+            xi = jax.tree.map(tie, xi)
+        o = f(xi)
+        first = jax.tree.leaves(o)[0]
+        chain = jnp.ravel(first)[0].astype(jnp.float32)
+        outs.append(o)
+    return jax.tree.map(lambda *ys: jnp.stack(ys), *outs)

@@ -1,0 +1,77 @@
+"""Ambient-mesh sharding constraints for model internals.
+
+`launch.steps` installs the mesh before tracing; model code calls these
+helpers at layout-critical points (residual stream, attention heads, MLP
+hidden, CE chunks). With no mesh installed (CPU smoke tests) every helper
+is a no-op, so the model code stays mesh-agnostic.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def current_mesh():
+    return getattr(_STATE, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    prev = current_mesh()
+    _STATE.mesh = mesh
+    try:
+        yield
+    finally:
+        _STATE.mesh = prev
+
+
+def _axes(want):
+    mesh = current_mesh()
+    if mesh is None:
+        return None
+    if isinstance(want, str):
+        want = (want,)
+    got = tuple(a for a in want if a in mesh.axis_names)
+    if not got:
+        return None
+    return got if len(got) > 1 else got[0]
+
+
+def shard(x, *spec):
+    """with_sharding_constraint if a mesh is installed, else identity.
+
+    spec entries: "fsdp" -> ("pod","data"), "tp" -> "model", None -> None.
+    """
+    from jax.sharding import NamedSharding
+
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    resolved = []
+    for s in spec:
+        if s == "fsdp":
+            resolved.append(_axes(("pod", "data")))
+        elif s == "tp":
+            resolved.append(_axes("model"))
+        else:
+            resolved.append(s)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*resolved)))
+
+
+def shard_hidden(h, *, sp: bool = True):
+    """Residual stream (B, S, D): batch over fsdp, seq over model (SP)."""
+    if h.shape[1] == 1:
+        return shard(h, "fsdp", None, None)
+    return shard(h, "fsdp", "tp" if sp else None, None)
+
+
+def shard_heads(x):
+    """(B, S, H, hd): heads over model (GSPMD pads non-divisible H)."""
+    return shard(x, "fsdp", None, "tp", None)

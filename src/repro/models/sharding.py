@@ -1,0 +1,181 @@
+"""Sharding rules: parameter PartitionSpecs + activation constraints.
+
+Layout on the production mesh (pod, data, model):
+  * FSDP: the d_model dim of every weight shards over ("pod","data")
+    (ZeRO-3; scan-level all-gathers are XLA's job), except norms/router.
+  * TP:   heads / ff-hidden / vocab dims shard over "model".
+  * Batch shards over ("pod","data"); the residual stream additionally
+    shards its SEQUENCE dim over "model" between blocks (Megatron-SP) so
+    the remat'd scan carry is 1/16th per device.
+  * KV caches: batch over ("pod","data"), cache length over "model"; for
+    global_batch < |fsdp| cells (long_500k: B = 1) the cache LENGTH takes
+    both axes instead.
+
+Explicit jit in_shardings demand exact divisibility, so every rule is
+shape-checked: a dim that an axis set does not divide degrades to
+replication for that dim (e.g. seamless's 256206 vocab, mamba2's ragged
+in_proj columns). Activation constraints (shardctx) go through GSPMD,
+which pads internally — those stay unconditional.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+FSDP = ("pod", "data")   # present subset is used
+TP = "model"
+
+_REPLICATED_KEYS = ("ln1", "ln2", "ln_cross", "final_norm", "enc_norm",
+                    "norm_scale", "A_log", "dt_bias", "conv_w", "conv_b",
+                    "router")
+
+
+def _axes(mesh: Mesh, want):
+    if isinstance(want, str):
+        want = (want,)
+    got = tuple(a for a in want if a in mesh.axis_names)
+    if not got:
+        return None
+    return got if len(got) > 1 else got[0]
+
+
+def _axes_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return int(np.prod([sizes[a] for a in axes]))
+
+
+def _fit(mesh: Mesh, shape, *wants) -> P:
+    """Build a PartitionSpec, dropping axes that do not divide the dim."""
+    spec = []
+    for dim, want in zip(shape, wants):
+        if want is None:
+            spec.append(None)
+            continue
+        axes = _axes(mesh, want)
+        if axes is None or dim % _axes_size(mesh, axes) != 0:
+            spec.append(None)
+        else:
+            spec.append(axes)
+    return P(*spec)
+
+
+def param_pspec(mesh: Mesh, path: str, shape) -> P:
+    """PartitionSpec for a parameter leaf by its keystr path + shape."""
+    ndim = len(shape)
+    if "embed" in path:
+        return _fit(mesh, shape, TP, FSDP)                 # (V, D)
+    if any(f"'{k}'" in path for k in _REPLICATED_KEYS) or path.endswith("['D']"):
+        return P()
+    lead = (None,) if ndim >= 3 else ()
+
+    def fit(*wants):
+        return _fit(mesh, shape, *(lead + wants))
+
+    if "shared" in path:       # MoE shared-expert MLP (rank 3, check first)
+        if "'wo'" in path:
+            return fit(TP, FSDP)                           # (L, Fs, D)
+        return fit(FSDP, TP)                               # (L, D, Fs)
+    if "moe" in path:
+        if "'wo'" in path:
+            return _fit(mesh, shape, None, None, TP, FSDP)  # (L, E, Fe, D)
+        return _fit(mesh, shape, None, None, FSDP, TP)      # (L, E, D, Fe)
+    if "attn" in path or "cross" in path:
+        if "'wo'" in path:
+            return fit(TP, FSDP)                           # (L, H*hd, D)
+        return fit(FSDP, TP)                               # (L, D, H*hd|kv*hd)
+    if "in_proj" in path:
+        # column layout [z|x|B|C|dt] is ragged (2*dinner + 2n + h): keep
+        # columns whole, shard the d_model rows over fsdp
+        return fit(FSDP, None)                             # (L, D, proj)
+    if "out_proj" in path:
+        return fit(TP, FSDP)                               # (L, dinner, D)
+    if "'wi'" in path or "'wg'" in path:
+        return fit(FSDP, TP)                               # (L, D, F)
+    if "'wo'" in path:
+        return fit(TP, FSDP)                               # (L, F, D)
+    return P()
+
+
+def param_shardings(mesh: Mesh, params):
+    flat, tdef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        out.append(NamedSharding(mesh, param_pspec(mesh, key, leaf.shape)))
+    return jax.tree_util.tree_unflatten(tdef, out)
+
+
+# ---------------------------------------------------------------------------
+# activation / batch / state shardings
+# ---------------------------------------------------------------------------
+
+
+def batch_pspec(mesh: Mesh) -> P:
+    return P(_axes(mesh, FSDP))
+
+
+def hidden_pspec(mesh: Mesh, *, sp: bool = True) -> P:
+    """(B, S, D) residual stream: batch over fsdp, seq over model (SP)."""
+    return P(_axes(mesh, FSDP), _axes(mesh, TP) if sp else None, None)
+
+
+def batch_shardings(mesh: Mesh, batch_specs: dict):
+    """NamedShardings for an input-batch dict (tokens/targets/embeds/...)."""
+    out = {}
+    for k, v in batch_specs.items():
+        shape = tuple(v.shape)
+        if k in ("tokens", "targets", "embed_mask"):
+            out[k] = NamedSharding(mesh, _fit(mesh, shape, FSDP, None))
+        elif k in ("embeds", "enc_embeds"):
+            out[k] = NamedSharding(mesh, _fit(mesh, shape, FSDP, TP, None))
+        elif k == "positions":
+            nd = len(shape)
+            out[k] = NamedSharding(
+                mesh, _fit(mesh, shape, *([None] * (nd - 2)), FSDP, None))
+        else:
+            out[k] = NamedSharding(mesh, P())
+    return out
+
+
+def token_sharding(mesh: Mesh, batch: int):
+    return NamedSharding(mesh, _fit(mesh, (batch,), FSDP))
+
+
+def logits_sharding(mesh: Mesh, batch: int, vocab: int):
+    return NamedSharding(mesh, _fit(mesh, (batch, vocab), FSDP, TP))
+
+
+def decode_state_shardings(mesh: Mesh, state):
+    """Shard stacked caches. KV cache: (L, B, S, kv, hd) — batch over fsdp
+    and length over model; if B doesn't divide fsdp (long_500k B=1), the
+    LENGTH dim takes (fsdp+model) instead. Recurrent SSM/conv states shard
+    batch only (replicated when B = 1: a few MB)."""
+
+    def rule(path, leaf):
+        key = jax.tree_util.keystr(path)
+        shape = tuple(leaf.shape)
+        if any(f"'{k}'" in key for k in ("k", "v", "ck", "cv")):
+            b = shape[1]
+            if b % _axes_size(mesh, _axes(mesh, FSDP) or ()) == 0:
+                return NamedSharding(
+                    mesh, _fit(mesh, shape, None, FSDP, TP, None, None))
+            return NamedSharding(
+                mesh, _fit(mesh, shape, None, None, FSDP + (TP,), None, None))
+        if "'conv'" in key:
+            return NamedSharding(
+                mesh, _fit(mesh, shape, None, FSDP, None, None))
+        if "'ssm'" in key:
+            return NamedSharding(
+                mesh, _fit(mesh, shape, None, FSDP, None, None, None))
+        return NamedSharding(mesh, P())
+
+    flat, tdef = jax.tree_util.tree_flatten_with_path(state)
+    return jax.tree_util.tree_unflatten(
+        tdef, [rule(p, l) for p, l in flat])

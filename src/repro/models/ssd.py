@@ -1,0 +1,176 @@
+"""Mamba-2 SSD (state-space duality) block — chunked scan + O(1) decode.
+
+Faithful to arXiv:2405.21060 §6: the sequence is processed in chunks of
+length Q; within a chunk the output is the masked-decay "attention" form
+(quadratic in Q only), across chunks a recurrent state (B, H, P, N) is
+carried. Per-head scalar decay a_t = exp(-exp(A_log) * dt_t); single B/C
+group (G = 1). Gated RMSNorm before the output projection, depthwise causal
+conv on (x, B, C), softplus dt with bias, D skip connection.
+
+Decode is the O(1) recurrence h <- a h + dt x (x) B; y = C . h + D x, with a
+(kernel-1)-deep conv state — this is what makes `long_500k` runnable for the
+ssm/hybrid architectures (constant state, no KV growth).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import rmsnorm
+
+
+def ssd_params(key, cfg, dtype):
+    d, dinner, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = dinner + 2 * n
+    ks = jax.random.split(key, 4)
+    s = (2.0 / d) ** 0.5
+    return {
+        # order: [z | x | B | C | dt]
+        "in_proj": s * jax.random.normal(
+            ks[0], (d, 2 * dinner + 2 * n + h), dtype),
+        "conv_w": 0.1 * jax.random.normal(ks[1], (cfg.conv_kernel, conv_dim), dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)),
+        "dt_bias": jnp.full((h,), 0.5, jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "norm_scale": jnp.ones((dinner,), dtype),
+        "out_proj": (2.0 / dinner) ** 0.5 * jax.random.normal(
+            ks[3], (dinner, d), dtype),
+    }
+
+
+def _split_proj(cfg, proj):
+    dinner, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :dinner]
+    xbc = proj[..., dinner:dinner + dinner + 2 * n]
+    dt = proj[..., -h:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv over the seq axis. xbc (B, S, C); w (K, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1]] * w[i] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def ssd_apply(p, cfg, x):
+    """x (B, S, D) -> (B, S, D) via chunked SSD."""
+    bsz, s_orig, _ = x.shape
+    dinner, n, h, pdim = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    q = min(cfg.ssm_chunk, s_orig)
+    pad = (-s_orig) % q
+    if pad:  # causal: trailing zero-pad never affects earlier outputs
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    s = x.shape[1]
+
+    proj = x @ p["in_proj"]
+    z, xbc, dt = _split_proj(cfg, proj)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    # materialization point: the conv chain feeds every chunk's slices and
+    # fusion otherwise RECOMPUTES it inside each consumer kernel (~640
+    # duplicated (B,S,conv_dim) elementwise passes in the unrolled 32-chunk
+    # program — 3.4e10 of 3.1e11 total flops; see EXPERIMENTS §Perf)
+    xbc = jax.lax.optimization_barrier(xbc)
+    xs = xbc[..., :dinner].reshape(bsz, s, h, pdim)
+    Bm = xbc[..., dinner:dinner + n]                        # (B, S, N)
+    Cm = xbc[..., dinner + n:]                              # (B, S, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B, S, H)
+    a_log = -jnp.exp(p["A_log"]) * dt                       # log a_t  (B, S, H)
+
+    nc = s // q
+    xs_c = xs.reshape(bsz, nc, q, h, pdim).astype(jnp.float32)
+    B_c = Bm.reshape(bsz, nc, q, n).astype(jnp.float32)
+    C_c = Cm.reshape(bsz, nc, q, n).astype(jnp.float32)
+    dt_c = dt.reshape(bsz, nc, q, h)
+    la_c = jnp.cumsum(a_log.reshape(bsz, nc, q, h), axis=2)  # within-chunk cumlog
+    # same fusion-duplication hazard for the cumsum (a reduce-window feeding
+    # every chunk): one materialization instead of nc recomputes
+    la_c = jax.lax.optimization_barrier(la_c)
+
+    def chunk_step(Hstate, inputs):
+        xc, Bc, Cc, dtc, lac = inputs  # (B, q, ...) for this chunk
+        # intra-chunk "attention": L[q,k] = exp(la_q - la_k) for q >= k
+        Gm = jnp.einsum("bqn,bkn->bqk", Cc, Bc)
+        ldiff = lac[:, :, None, :] - lac[:, None, :, :]     # (B, q, k, H)
+        mask = jnp.tril(jnp.ones((q, q), bool))[None, :, :, None]
+        # clamp BEFORE exp: masked (upper-tri) entries have ldiff > 0 and
+        # would overflow, poisoning the backward pass with 0 * inf = NaN
+        Ld = jnp.where(mask, jnp.exp(jnp.where(mask, ldiff, 0.0)), 0.0)
+        dtx = xc * dtc[..., None]                           # (B, q, H, P)
+        # pairwise GEMM-shaped einsums ONLY: a fused 3-operand contraction
+        # ("bqk,bqkh,bkhp") makes XLA recompute Gm inside the (q,k,h,p)
+        # loop nest — a 23x flop inflation per chunk (see EXPERIMENTS
+        # §Perf). GL materialized then batched (Q,K)@(K,P) is also the
+        # MXU-friendly form on TPU.
+        GL = Gm[:, :, :, None] * Ld                         # (B, q, k, H)
+        y = jnp.einsum("bqkh,bkhp->bqhp", GL, dtx)
+        # inter-chunk contribution from carried state
+        y_in = jnp.einsum("bqn,bhpn->bqhp", Cc, Hstate)
+        y = y + y_in * jnp.exp(lac)[..., None]
+        # chunk state update
+        la_end = lac[:, -1:, :]                             # (B, 1, H)
+        decay_to_end = jnp.exp(la_end - lac)                # (B, q, H)
+        dtxd = dtx * decay_to_end[..., None]                # (B, q, H, P)
+        Snew = jnp.einsum("bkn,bkhp->bhpn", Bc, dtxd)
+        Hstate = jnp.exp(la_end[:, 0, :])[..., None, None] * Hstate + Snew
+        # materialization point: under an unrolled scan, fusion otherwise
+        # duplicates the whole carry chain into every consumer — chunk i's
+        # state recomputed from scratch i times, an O(nc^2/2) flop blowup
+        # (measured 2-5x on 32-128 chunks; see EXPERIMENTS §Perf)
+        Hstate = jax.lax.optimization_barrier(Hstate)
+        return Hstate, y
+
+    from .runtime_flags import scan_unroll
+    H0 = jnp.zeros((bsz, h, pdim, n), jnp.float32)
+    inputs = tuple(jnp.moveaxis(t, 1, 0) for t in (xs_c, B_c, C_c, dt_c, la_c))
+    _, ys = jax.lax.scan(chunk_step, H0, inputs, unroll=scan_unroll())
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, nc * q, h, pdim)
+    y = y + p["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(bsz, s, dinner).astype(x.dtype)
+    # gated RMSNorm (mamba2) then output projection
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_scale"])
+    return (y @ p["out_proj"])[:, :s_orig]
+
+
+# ---------------------------------------------------------------------------
+# decode path: O(1) recurrent update
+# ---------------------------------------------------------------------------
+
+
+def ssd_init_state(cfg, batch: int, dtype):
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1,
+                           cfg.d_inner + 2 * cfg.ssm_state), dtype),
+        "ssm": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                          cfg.ssm_state), jnp.float32),
+    }
+
+
+def ssd_decode_step(p, cfg, state, x):
+    """x (B, 1, D) -> (y (B, 1, D), new state)."""
+    bsz = x.shape[0]
+    dinner, n, h, pdim = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    proj = x[:, 0] @ p["in_proj"]
+    z, xbc, dt = _split_proj(cfg, proj)
+    # conv with rolled state
+    hist = jnp.concatenate([state["conv"], xbc[:, None]], axis=1)  # (B, K, C)
+    conv = jnp.einsum("bkc,kc->bc", hist, p["conv_w"]) + p["conv_b"]
+    xbc = jax.nn.silu(conv)
+    new_conv = hist[:, 1:]
+
+    xs = xbc[:, :dinner].reshape(bsz, h, pdim).astype(jnp.float32)
+    Bm = xbc[:, dinner:dinner + n].astype(jnp.float32)
+    Cm = xbc[:, dinner + n:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])    # (B, H)
+    a = jnp.exp(-jnp.exp(p["A_log"]) * dt)                         # (B, H)
+
+    Hs = state["ssm"] * a[..., None, None] + jnp.einsum(
+        "bhp,bn,bh->bhpn", xs, Bm, dt)
+    y = jnp.einsum("bn,bhpn->bhp", Cm, Hs) + p["D"][None, :, None] * xs
+    y = y.reshape(bsz, dinner).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_scale"])
+    out = (y @ p["out_proj"])[:, None]
+    return out, {"conv": new_conv, "ssm": Hs}

@@ -1,0 +1,15 @@
+"""Optimizers — self-contained (no optax): Adam, L-BFGS, LR schedules.
+
+The paper's GP training uses 10 steps of L-BFGS + 10 steps of Adam(0.1) on
+a 10k subset, then 3 steps of Adam on the full data; SGPR/SVGP use Adam.
+The LM trainer uses AdamW with warmup-cosine.
+"""
+
+from .adam import AdamState, adam_init, adam_update, clip_by_global_norm
+from .lbfgs import lbfgs_minimize
+from .schedules import constant_lr, warmup_cosine
+
+__all__ = [
+    "AdamState", "adam_init", "adam_update", "clip_by_global_norm",
+    "lbfgs_minimize", "constant_lr", "warmup_cosine",
+]

@@ -1,0 +1,101 @@
+"""L-BFGS with two-loop recursion + backtracking Armijo line search.
+
+Used for the paper's GP hyperparameter pretraining ("10 steps of L-BFGS").
+Operates on a flat fp64/fp32 vector; `lbfgs_minimize` handles pytree
+ravel/unravel. History length is fixed (default 10); this is a host-driven
+loop (a handful of steps on a handful of scalars — jit'ing the whole thing
+would buy nothing and cost compile time).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _ravel(pytree):
+    leaves, tdef = jax.tree.flatten(pytree)
+    shapes = [l.shape for l in leaves]
+    sizes = [int(np.prod(s)) if s else 1 for s in shapes]
+    flat = jnp.concatenate([jnp.reshape(l, (-1,)) for l in leaves]) if leaves else jnp.zeros((0,))
+
+    def unravel(vec):
+        out, off = [], 0
+        for s, sz in zip(shapes, sizes):
+            out.append(jnp.reshape(vec[off:off + sz], s))
+            off += sz
+        return tdef.unflatten(out)
+
+    return flat, unravel
+
+
+def lbfgs_minimize(loss_fn, params0, *, max_steps: int = 10, history: int = 10,
+                   max_ls: int = 20, c1: float = 1e-4, init_step: float = 1.0,
+                   verbose: bool = False):
+    """Minimize loss_fn(params) -> scalar. Returns (params, trace of losses)."""
+    x, unravel = _ravel(params0)
+    x = x.astype(jnp.float64) if jax.config.jax_enable_x64 else x
+
+    vg = jax.jit(jax.value_and_grad(lambda v: loss_fn(unravel(v.astype(x.dtype)))))
+
+    f, g = vg(x)
+    f, g = float(f), jnp.asarray(g)
+    s_hist, y_hist, rho_hist = [], [], []
+    trace = [f]
+
+    for it in range(max_steps):
+        # two-loop recursion
+        q = g
+        alphas = []
+        for s, y, rho in zip(reversed(s_hist), reversed(y_hist), reversed(rho_hist)):
+            a = rho * jnp.dot(s, q)
+            alphas.append(a)
+            q = q - a * y
+        if y_hist:
+            gamma = jnp.dot(s_hist[-1], y_hist[-1]) / jnp.maximum(
+                jnp.dot(y_hist[-1], y_hist[-1]), 1e-12)
+        else:
+            gamma = 1.0
+        r = gamma * q
+        for (s, y, rho), a in zip(zip(s_hist, y_hist, rho_hist), reversed(alphas)):
+            b = rho * jnp.dot(y, r)
+            r = r + s * (a - b)
+        d = -r
+
+        gtd = float(jnp.dot(g, d))
+        if gtd >= 0:  # not a descent direction; reset to steepest descent
+            d = -g
+            gtd = float(jnp.dot(g, d))
+            s_hist, y_hist, rho_hist = [], [], []
+
+        # backtracking Armijo
+        t = init_step if y_hist else min(1.0, 1.0 / max(float(jnp.linalg.norm(g)), 1e-12))
+        ok = False
+        for _ in range(max_ls):
+            f_new, g_new = vg(x + t * d)
+            f_new = float(f_new)
+            if np.isfinite(f_new) and f_new <= f + c1 * t * gtd:
+                ok = True
+                break
+            t *= 0.5
+        if not ok:
+            break
+        x_new = x + t * d
+        s_vec = x_new - x
+        y_vec = g_new - g
+        sy = float(jnp.dot(s_vec, y_vec))
+        if sy > 1e-10:
+            s_hist.append(s_vec)
+            y_hist.append(y_vec)
+            rho_hist.append(1.0 / sy)
+            if len(s_hist) > history:
+                s_hist.pop(0); y_hist.pop(0); rho_hist.pop(0)
+        x, f, g = x_new, f_new, jnp.asarray(g_new)
+        trace.append(f)
+        if verbose:
+            print(f"  lbfgs step {it}: loss={f:.6f} t={t:.3g}")
+        if float(jnp.linalg.norm(g)) < 1e-8:
+            break
+
+    return unravel(x.astype(jax.tree.leaves(params0)[0].dtype)), trace

@@ -1,0 +1,11 @@
+from .checkpoint import CheckpointManager, load_checkpoint, save_checkpoint
+from .elastic import reshard, validate_divisibility
+from .gp_trainer import GPTrainConfig, fit_exact_gp, fit_sgpr, fit_svgp
+from .trainer import TrainLoopConfig, TrainLoopResult, run_train_loop
+
+__all__ = [
+    "CheckpointManager", "load_checkpoint", "save_checkpoint",
+    "reshard", "validate_divisibility",
+    "GPTrainConfig", "fit_exact_gp", "fit_sgpr", "fit_svgp",
+    "TrainLoopConfig", "TrainLoopResult", "run_train_loop",
+]

@@ -1,0 +1,57 @@
+"""Elastic rescale: restore a run onto a different mesh factorization.
+
+Checkpoints are host-canonical (full logical arrays, no shard layout baked
+in — see `repro.train.checkpoint`), so elasticity is purely a placement
+concern: load, then `jax.device_put` each array with the NamedSharding
+derived from the NEW mesh. Nothing about the training state depends on the
+old (data, model) split; a dp=4 run restores onto dp=2 (or onto a
+different pod count) bitwise.
+
+For a 1000+-node deployment the same flow handles node failure: the job
+restarts on the surviving topology, `CheckpointManager.restore_or_init`
+picks up the latest complete step, and `reshard` places it on whatever mesh
+the launcher derived from the live slice.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def reshard(tree, mesh: Mesh, pspec_fn=None):
+    """Place a host-canonical pytree onto `mesh`.
+
+    pspec_fn: leaf-path -> PartitionSpec; default replicates everything
+    (correct for GP hyperparameters and small states; LM param sharding
+    rules come from `repro.models.sharding.param_pspecs`).
+    """
+    flat, tdef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        spec = pspec_fn(path, leaf) if pspec_fn is not None else P()
+        out.append(jax.device_put(np.asarray(leaf), NamedSharding(mesh, spec)))
+    return jax.tree_util.tree_unflatten(tdef, out)
+
+
+def validate_divisibility(tree, mesh: Mesh, pspec_fn) -> list[str]:
+    """Pre-flight check for a target mesh: every sharded axis must divide.
+
+    Returns a list of problem descriptions (empty = mesh is compatible).
+    The launcher calls this before committing to a rescale."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    problems = []
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    for path, leaf in flat:
+        spec = pspec_fn(path, leaf)
+        for dim, axes in enumerate(spec):
+            if axes is None:
+                continue
+            axes = (axes,) if isinstance(axes, str) else axes
+            total = int(np.prod([sizes[a] for a in axes]))
+            if np.shape(leaf)[dim] % total:
+                problems.append(
+                    f"{jax.tree_util.keystr(path)} dim {dim} "
+                    f"({np.shape(leaf)[dim]}) % mesh{axes} ({total}) != 0")
+    return problems

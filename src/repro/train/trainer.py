@@ -1,0 +1,129 @@
+"""Generic fault-tolerant training loop.
+
+Model-agnostic: drive any jit'd `step_fn(state, batch) -> (state, metrics)`.
+Responsibilities that belong to the harness, not the model:
+
+  * checkpoint/restart — `CheckpointManager`, atomic, auto-resume
+  * preemption — SIGTERM/SIGINT trigger one final checkpoint then exit
+  * straggler/fault containment — per-step wall-clock watchdog; steps whose
+    metrics come back non-finite are SKIPPED (state rollback) and counted;
+    too many consecutive skips aborts (a real cluster run would page)
+  * throughput accounting (steps/s, tokens/s)
+
+The step functions themselves are bulk-synchronous pjit programs; nothing
+here assumes a particular parallelism layout.
+"""
+
+from __future__ import annotations
+
+import signal
+import time
+from typing import Any, Callable, NamedTuple
+
+import jax
+import numpy as np
+
+from .checkpoint import CheckpointManager
+
+
+class TrainLoopConfig(NamedTuple):
+    total_steps: int
+    ckpt_dir: str | None = None
+    ckpt_every: int = 200
+    ckpt_keep: int = 3
+    log_every: int = 10
+    max_consecutive_skips: int = 10
+    step_timeout_s: float | None = None   # watchdog (None = off)
+    tokens_per_step: int | None = None
+
+
+class TrainLoopResult(NamedTuple):
+    state: Any
+    steps_run: int
+    skipped: int
+    metrics_history: list
+
+
+def run_train_loop(step_fn: Callable, state, batches, cfg: TrainLoopConfig,
+                   *, log_fn=print) -> TrainLoopResult:
+    """Run `step_fn` over `batches` (an iterator) with fault tolerance."""
+    manager = None
+    start_step = 0
+    if cfg.ckpt_dir:
+        manager = CheckpointManager(cfg.ckpt_dir, save_every=cfg.ckpt_every,
+                                    keep=cfg.ckpt_keep)
+        state, start_step, _ = manager.restore_or_init(state)
+        if start_step:
+            log_fn(f"[trainer] resumed from step {start_step}")
+
+    stop_requested = {"flag": False}
+
+    def _handler(signum, frame):
+        stop_requested["flag"] = True
+        log_fn(f"[trainer] signal {signum}: checkpoint-and-exit requested")
+
+    old_handlers = {}
+    for sig in (signal.SIGTERM, signal.SIGINT):
+        try:
+            old_handlers[sig] = signal.signal(sig, _handler)
+        except ValueError:  # not on main thread (tests)
+            pass
+
+    history: list = []
+    skipped = 0
+    consecutive_skips = 0
+    step = start_step
+    t_last = time.time()
+    try:
+        while step < cfg.total_steps and not stop_requested["flag"]:
+            batch = next(batches)
+            t0 = time.time()
+            new_state, metrics = step_fn(state, batch)
+            metrics = jax.device_get(metrics)
+            dt = time.time() - t0
+
+            bad = any(not np.all(np.isfinite(v)) for v in jax.tree.leaves(metrics))
+            timed_out = (cfg.step_timeout_s is not None and dt > cfg.step_timeout_s)
+            if bad or timed_out:
+                skipped += 1
+                consecutive_skips += 1
+                reason = "non-finite metrics" if bad else f"timeout {dt:.1f}s"
+                log_fn(f"[trainer] step {step}: SKIPPED ({reason}); state rolled back")
+                if consecutive_skips > cfg.max_consecutive_skips:
+                    raise RuntimeError(
+                        f"{consecutive_skips} consecutive skipped steps — aborting")
+                continue  # state NOT advanced: gradient-skip fault containment
+            consecutive_skips = 0
+            state = new_state
+            step += 1
+            history.append(metrics)
+
+            if step % cfg.log_every == 0:
+                rate = cfg.log_every / max(time.time() - t_last, 1e-9)
+                t_last = time.time()
+                extra = ""
+                if cfg.tokens_per_step:
+                    extra = f" tok/s={cfg.tokens_per_step * rate:,.0f}"
+                log_fn(f"[trainer] step {step}: {_fmt(metrics)} "
+                       f"steps/s={rate:.3f}{extra}")
+            if manager:
+                manager.maybe_save(step, state, {"wall": time.time()})
+    finally:
+        if manager and step > start_step:
+            manager.maybe_save(step, state, {"wall": time.time(),
+                                             "final": True}, force=True)
+        for sig, h in old_handlers.items():
+            signal.signal(sig, h)
+
+    return TrainLoopResult(state=state, steps_run=step - start_step,
+                           skipped=skipped, metrics_history=history)
+
+
+def _fmt(metrics) -> str:
+    flat, _ = jax.tree_util.tree_flatten_with_path(metrics)
+    parts = []
+    for path, v in flat:
+        name = jax.tree_util.keystr(path).strip("[]'\"")
+        v = np.asarray(v)
+        parts.append(f"{name}={float(v.mean()):.4f}")
+    return " ".join(parts)

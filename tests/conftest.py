@@ -1,0 +1,29 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests see 1 real CPU device;
+only launch/dryrun.py (and explicit subprocess tests) request 512/8 fake
+devices."""
+
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_gp_data(rng, n=200, d=4, noise=0.1, dtype="float64"):
+    import jax.numpy as jnp
+
+    X = jnp.asarray(rng.normal(size=(n, d)).astype(dtype))
+    w = rng.normal(size=(d,))
+    y = jnp.asarray((np.sin(np.asarray(X) @ w) +
+                     noise * rng.normal(size=n)).astype(dtype))
+    return X, y
+
+
+@pytest.fixture
+def gp_data(rng):
+    return make_gp_data(rng)

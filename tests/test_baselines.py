@@ -1,0 +1,104 @@
+"""SGPR / SVGP baselines: limiting-case exactness + variational bounds."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    SGPRParams, dense_khat, dense_mll, init_params, init_sgpr_params,
+    init_svgp_params, kernel_diag, kernel_matrix, sgpr_elbo, sgpr_precompute,
+    sgpr_predict, svgp_elbo, svgp_predict,
+)
+
+
+def test_sgpr_full_inducing_equals_exact_mll(gp_data):
+    X, y = gp_data
+    params = init_params(noise=0.2, dtype=jnp.float64)
+    sp = SGPRParams(gp=params, Z=X)
+    elbo = float(sgpr_elbo("matern32", X, y, sp, noise_floor=0.0))
+    mll = float(dense_mll("matern32", X, y, params, noise_floor=0.0))
+    assert abs(elbo - mll) < 1e-2
+
+
+def test_sgpr_elbo_lower_bounds_mll(gp_data):
+    X, y = gp_data
+    params = init_params(noise=0.2, dtype=jnp.float64)
+    key = jax.random.PRNGKey(0)
+    for m in (8, 32, 128):
+        sp = init_sgpr_params(key, X, m, dtype=jnp.float64)
+        sp = SGPRParams(gp=params, Z=sp.Z)
+        elbo = float(sgpr_elbo("matern32", X, y, sp))
+        mll = float(dense_mll("matern32", X, y, params))
+        assert elbo <= mll + 1e-6
+
+
+def test_sgpr_elbo_improves_with_inducing_count(gp_data):
+    """Paper Fig. 3: more inducing points -> tighter bound (monotone here
+    because Z_m is nested in Z_{m'})."""
+    X, y = gp_data
+    params = init_params(noise=0.2, dtype=jnp.float64)
+    perm = np.random.default_rng(0).permutation(X.shape[0])
+    prev = -np.inf
+    for m in (8, 32, 128):
+        sp = SGPRParams(gp=params, Z=X[perm[:m]])
+        elbo = float(sgpr_elbo("matern32", X, y, sp))
+        assert elbo >= prev - 1e-9
+        prev = elbo
+
+
+def test_sgpr_full_inducing_predictions_exact(gp_data, rng):
+    X, y = gp_data
+    params = init_params(noise=0.2, dtype=jnp.float64)
+    sp = SGPRParams(gp=params, Z=X)
+    cache = sgpr_precompute("matern32", X, y, sp)
+    Xs = jnp.asarray(rng.normal(size=(20, X.shape[1])))
+    mean, var = sgpr_predict("matern32", Xs, sp, cache, include_noise=False)
+    Khat = dense_khat("matern32", X, params)
+    Ks = kernel_matrix("matern32", Xs, X, params)
+    mean_o = Ks @ jnp.linalg.solve(Khat, y)
+    var_o = kernel_diag("matern32", Xs, params) - jnp.sum(
+        Ks * jnp.linalg.solve(Khat, Ks.T).T, axis=1)
+    np.testing.assert_allclose(np.asarray(mean), np.asarray(mean_o), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(var), np.asarray(var_o), atol=1e-4)
+
+
+def test_svgp_elbo_lower_bounds_mll(gp_data):
+    X, y = gp_data
+    params = init_params(noise=0.2, dtype=jnp.float64)
+    vp = init_svgp_params(jax.random.PRNGKey(0), X, 32, dtype=jnp.float64)
+    vp = vp._replace(gp=params)
+    elbo = float(svgp_elbo("matern32", X, y, vp, X.shape[0]))
+    assert elbo <= float(dense_mll("matern32", X, y, params)) + 1e-6
+
+
+def test_svgp_minibatch_unbiased(gp_data):
+    """E_batch[minibatch ELBO] == full-batch ELBO (same params)."""
+    X, y = gp_data
+    n = X.shape[0]
+    vp = init_svgp_params(jax.random.PRNGKey(0), X, 16, dtype=jnp.float64)
+    full = float(svgp_elbo("matern32", X, y, vp, n))
+    rng = np.random.default_rng(0)
+    vals = []
+    for _ in range(300):
+        idx = rng.choice(n, 50, replace=False)
+        vals.append(float(svgp_elbo("matern32", X[idx], y[idx], vp, n)))
+    assert abs(np.mean(vals) - full) < 0.05 * abs(full)
+
+
+def test_svgp_training_improves_elbo(gp_data):
+    from repro.train.gp_trainer import fit_svgp
+
+    X, y = gp_data
+    X32, y32 = X.astype(jnp.float32), y.astype(jnp.float32)
+    params, trace, _ = fit_svgp("matern32", X32, y32, num_inducing=16,
+                                epochs=20, batch=64, lr=0.05)
+    assert trace[-1] < trace[0]
+
+
+def test_svgp_predict_shapes(gp_data, rng):
+    X, y = gp_data
+    vp = init_svgp_params(jax.random.PRNGKey(0), X, 16, dtype=jnp.float64)
+    Xs = jnp.asarray(rng.normal(size=(7, X.shape[1])))
+    mean, var = svgp_predict("matern32", Xs, vp)
+    assert mean.shape == (7,) and var.shape == (7,)
+    assert np.all(np.asarray(var) > 0)

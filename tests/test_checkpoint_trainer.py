@@ -1,0 +1,169 @@
+"""Fault tolerance: atomic checkpoints, corruption detection, resume,
+gradient-skip fault containment, elastic mesh reshape."""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train.checkpoint import (
+    CheckpointManager, load_checkpoint, save_checkpoint,
+)
+from repro.train.trainer import TrainLoopConfig, run_train_loop
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"w": jax.random.normal(k, (8, 8)),
+            "stats": {"mu": jnp.zeros((8,)), "step": jnp.asarray(3)}}
+
+
+def test_save_load_bitwise(tmp_path):
+    tree = _tree()
+    save_checkpoint(str(tmp_path), 7, tree, {"note": "x"})
+    loaded, step, meta = load_checkpoint(str(tmp_path), tree)
+    assert step == 7 and meta["note"] == "x"
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(loaded)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert np.asarray(a).dtype == np.asarray(b).dtype
+
+
+def test_corruption_detected(tmp_path):
+    tree = _tree()
+    path = save_checkpoint(str(tmp_path), 1, tree)
+    npz = os.path.join(path, "arrays.npz")
+    data = open(npz, "rb").read()
+    # flip bytes inside the zip payload
+    corrupted = data[:200] + bytes([data[200] ^ 0xFF]) + data[201:]
+    open(npz, "wb").write(corrupted)
+    with pytest.raises(Exception):
+        load_checkpoint(str(tmp_path), tree)
+
+
+def test_incomplete_checkpoint_ignored(tmp_path):
+    tree = _tree()
+    save_checkpoint(str(tmp_path), 1, tree)
+    # simulate a preempted writer: directory without .COMPLETE
+    os.makedirs(tmp_path / "step_00000002")
+    loaded, step, _ = load_checkpoint(str(tmp_path), tree)
+    assert step == 1
+
+
+def test_retention(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), save_every=1, keep=2)
+    tree = _tree()
+    for s in range(1, 6):
+        mgr.maybe_save(s, tree)
+    steps = sorted(int(p.split("_")[1]) for p in os.listdir(tmp_path)
+                   if p.startswith("step_"))
+    assert steps == [4, 5]
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    save_checkpoint(str(tmp_path), 1, {"w": jnp.zeros((4,))})
+    with pytest.raises(ValueError):
+        load_checkpoint(str(tmp_path), {"w": jnp.zeros((5,))})
+
+
+def _quadratic_step(state, batch):
+    w = state["w"] - 0.1 * (state["w"] - batch)
+    loss = jnp.sum((w - batch) ** 2)
+    return {"w": w}, {"loss": loss}
+
+
+def _batches(n=10000, bad_at=None):
+    i = 0
+    while True:
+        if bad_at is not None and i == bad_at:
+            yield jnp.full((4,), jnp.nan)
+        else:
+            yield jnp.ones((4,)) * (i % 3)
+        i += 1
+
+
+def test_train_loop_runs_and_checkpoints(tmp_path):
+    cfg = TrainLoopConfig(total_steps=12, ckpt_dir=str(tmp_path),
+                          ckpt_every=5, log_every=100)
+    res = run_train_loop(_quadratic_step, {"w": jnp.zeros((4,))},
+                         _batches(), cfg, log_fn=lambda *_: None)
+    assert res.steps_run == 12
+    mgr = CheckpointManager(str(tmp_path))
+    assert mgr.latest_step() == 12  # final forced save
+
+
+def test_train_loop_resumes(tmp_path):
+    cfg = TrainLoopConfig(total_steps=5, ckpt_dir=str(tmp_path),
+                          ckpt_every=100, log_every=100)
+    run_train_loop(_quadratic_step, {"w": jnp.zeros((4,))}, _batches(), cfg,
+                   log_fn=lambda *_: None)
+    cfg2 = cfg._replace(total_steps=9)
+    res = run_train_loop(_quadratic_step, {"w": jnp.zeros((4,))}, _batches(),
+                         cfg2, log_fn=lambda *_: None)
+    assert res.steps_run == 4  # resumed from 5
+
+
+def test_train_loop_skips_nan_steps():
+    """Fault containment: a NaN step is skipped, state NOT advanced."""
+    cfg = TrainLoopConfig(total_steps=6, log_every=100)
+    res = run_train_loop(_quadratic_step, {"w": jnp.zeros((4,))},
+                         _batches(bad_at=2), cfg, log_fn=lambda *_: None)
+    assert res.steps_run == 6
+    assert res.skipped == 1
+    assert np.all(np.isfinite(np.asarray(res.state["w"])))
+
+
+def test_train_loop_aborts_on_persistent_failure():
+    cfg = TrainLoopConfig(total_steps=10, max_consecutive_skips=3,
+                          log_every=100)
+
+    def all_nan(state, batch):
+        return state, {"loss": jnp.nan}
+
+    with pytest.raises(RuntimeError, match="consecutive"):
+        run_train_loop(all_nan, {"w": jnp.zeros((2,))}, _batches(), cfg,
+                       log_fn=lambda *_: None)
+
+
+ELASTIC_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.train.checkpoint import save_checkpoint, load_checkpoint
+from repro.train.elastic import reshard, validate_divisibility
+
+ckpt_dir = sys.argv[1]
+
+# phase 1: "train" on a dp=4 mesh, save host-canonical
+mesh4 = jax.make_mesh((4, 2), ("data", "model"))
+w = jax.device_put(jnp.arange(64, dtype=jnp.float32).reshape(8, 8),
+                   NamedSharding(mesh4, P("data", "model")))
+state = {"w": w, "step": jnp.asarray(5)}
+save_checkpoint(ckpt_dir, 5, state)
+
+# phase 2: restore onto a dp=2 mesh (simulated node loss -> rescale)
+mesh2 = jax.make_mesh((2, 4), ("data", "model"))
+loaded, step, _ = load_checkpoint(ckpt_dir, state)
+def pspec(path, leaf):
+    return P("data", "model") if getattr(leaf, "ndim", 0) == 2 else P()
+assert validate_divisibility(loaded, mesh2, pspec) == []
+placed = reshard(loaded, mesh2, pspec)
+np.testing.assert_array_equal(np.asarray(placed["w"]), np.asarray(w))
+assert placed["w"].sharding.mesh.devices.shape == (2, 4)
+print("ELASTIC_OK")
+"""
+
+
+def test_elastic_reshard_across_meshes(tmp_path):
+    """dp=4 -> dp=2 restore (subprocess: needs its own device count)."""
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run([sys.executable, "-c", ELASTIC_SCRIPT,
+                          str(tmp_path / "ck")],
+                         capture_output=True, text=True, env=env, timeout=300)
+    assert "ELASTIC_OK" in out.stdout, out.stderr[-2000:]

@@ -1,0 +1,101 @@
+"""Unit + property tests for the kernel math layer."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import kernels_math as km
+
+KINDS = list(km.KERNEL_KINDS)
+
+
+def params64(**kw):
+    return km.init_params(dtype=jnp.float64, **kw)
+
+
+def test_inv_softplus_roundtrip():
+    for v in (0.01, 0.1, 0.693, 1.0, 5.0):
+        assert np.isclose(float(km.softplus(km.inv_softplus(v))), v, rtol=1e-6)
+
+
+def test_init_params_constrained_values():
+    p = params64(lengthscale=0.7, outputscale=1.3, noise=0.25, mean=0.4)
+    assert np.isclose(float(km.lengthscale(p)), 0.7, rtol=1e-6)
+    assert np.isclose(float(km.outputscale(p)), 1.3, rtol=1e-6)
+    assert np.isclose(float(km.noise_variance(p, 0.0)), 0.25, rtol=1e-6)
+    assert float(km.constant_mean(p)) == pytest.approx(0.4)
+
+
+def test_sq_dist_matches_numpy(rng):
+    X1 = rng.normal(size=(17, 5))
+    X2 = rng.normal(size=(23, 5))
+    d2 = np.asarray(km.sq_dist(jnp.asarray(X1), jnp.asarray(X2)))
+    ref = ((X1[:, None] - X2[None]) ** 2).sum(-1)
+    np.testing.assert_allclose(d2, ref, atol=1e-10)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_kernel_known_values(kind):
+    """k(x, x) = outputscale; k at distance r matches the closed form."""
+    p = params64(lengthscale=1.0, outputscale=2.0)
+    X = jnp.asarray([[0.0], [1.0]])
+    K = np.asarray(km.kernel_matrix(kind, X, X, p))
+    assert np.allclose(np.diag(K), 2.0)
+    r = 1.0
+    expected = {
+        "rbf": math.exp(-0.5),
+        "matern12": math.exp(-1.0),
+        "matern32": (1 + math.sqrt(3) * r) * math.exp(-math.sqrt(3) * r),
+        "matern52": (1 + math.sqrt(5) * r + 5 * r * r / 3) * math.exp(-math.sqrt(5) * r),
+    }[kind]
+    assert np.isclose(K[0, 1], 2.0 * expected, rtol=1e-9)
+
+
+@settings(deadline=None, max_examples=20)
+@given(n=st.integers(3, 24), d=st.integers(1, 6),
+       kind=st.sampled_from(KINDS), seed=st.integers(0, 2**16))
+def test_kernel_matrix_psd_and_symmetric(n, d, kind, seed):
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.normal(size=(n, d)))
+    p = params64(lengthscale=float(rng.uniform(0.3, 2.0)))
+    K = np.asarray(km.kernel_matrix(kind, X, X, p))
+    np.testing.assert_allclose(K, K.T, atol=1e-12)
+    evals = np.linalg.eigvalsh(K)
+    assert evals.min() > -1e-8  # PSD up to round-off
+
+
+@settings(deadline=None, max_examples=10)
+@given(seed=st.integers(0, 2**16), kind=st.sampled_from(KINDS))
+def test_ard_equals_shared_when_isotropic(seed, kind):
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.normal(size=(12, 3)))
+    shared = params64(lengthscale=0.8)
+    ard = km.init_params(ard_dims=3, lengthscale=0.8, dtype=jnp.float64)
+    K1 = km.kernel_matrix(kind, X, X, shared)
+    K2 = km.kernel_matrix(kind, X, X, ard)
+    np.testing.assert_allclose(np.asarray(K1), np.asarray(K2), atol=1e-12)
+
+
+def test_dense_khat_adds_noise(gp_data):
+    X, _ = gp_data
+    p = params64(noise=0.3)
+    K = km.kernel_matrix("matern32", X, X, p)
+    Khat = km.dense_khat("matern32", X, p, noise_floor=0.0)
+    np.testing.assert_allclose(np.asarray(Khat - K),
+                               0.3 * np.eye(X.shape[0]), atol=1e-8)
+
+
+def test_kernel_gradients_finite(gp_data):
+    X, _ = gp_data
+    p = params64()
+
+    def f(p):
+        return jnp.sum(km.kernel_matrix("matern32", X, X, p))
+
+    g = jax.grad(f)(p)
+    for leaf in jax.tree.leaves(g):
+        assert np.all(np.isfinite(np.asarray(leaf)))

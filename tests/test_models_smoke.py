@@ -1,0 +1,146 @@
+"""Per-arch smoke: reduced config, one forward/train step, shapes + no NaNs,
+prefill+decode consistency with the full forward. (Assignment deliverable f.)
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import (
+    count_active_params, count_params, decode_step, get_arch, init_params,
+    list_archs, train_loss,
+)
+from repro.models.model import forward_hidden, init_decode_state, prefill
+
+ARCHS = [a for a in list_archs() if a != "gp-exact-1m"]
+B, S = 2, 64
+
+
+def _batch(cfg, key):
+    tok = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    tgt = jax.random.randint(jax.random.fold_in(key, 1), (B, S), 0, cfg.vocab)
+    batch = {"tokens": tok, "targets": tgt}
+    if cfg.is_encdec:
+        batch["enc_embeds"] = 0.1 * jax.random.normal(
+            key, (B, S, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        batch["embeds"] = 0.1 * jax.random.normal(
+            key, (B, S, cfg.d_model), jnp.float32)
+        batch["embed_mask"] = jnp.zeros((B, S), bool).at[:, :8].set(True)
+    return batch
+
+
+@pytest.mark.parametrize("arch_id", ARCHS)
+def test_arch_smoke_train_step(arch_id):
+    cfg = get_arch(arch_id).reduced()
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key, dtype=jnp.float32)
+    batch = _batch(cfg, key)
+
+    (loss, metrics), grads = jax.value_and_grad(
+        lambda p: train_loss(cfg, p, batch), has_aux=True)(params)
+    h, _ = forward_hidden(cfg, params, batch)
+
+    assert h.shape == (B, S, cfg.d_model)
+    assert np.isfinite(float(loss))
+    assert float(loss) > 0
+    for leaf in jax.tree.leaves(grads):
+        assert np.all(np.isfinite(np.asarray(leaf, np.float32)))
+    # one SGD step moves the loss
+    params2 = jax.tree.map(lambda p, g: p - 0.5 * g, params, grads)
+    loss2, _ = train_loss(cfg, params2, batch)
+    assert float(loss2) != float(loss)
+
+
+@pytest.mark.parametrize("arch_id", ARCHS)
+def test_arch_smoke_decode_consistency(arch_id):
+    cfg = get_arch(arch_id).reduced()
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key, dtype=jnp.float32)
+    batch = _batch(cfg, key)
+    tok = batch["tokens"]
+
+    state = init_decode_state(cfg, B, S, jnp.float32,
+                              enc_len=S if cfg.is_encdec else 0)
+    pre_batch = {k: (v[:, :S - 1] if k in ("tokens", "embed_mask", "embeds")
+                     else v) for k, v in batch.items() if k != "targets"}
+    state, _ = prefill(cfg, params, state, pre_batch)
+    assert int(state["t"]) == S - 1
+    state, logits_dec = decode_step(cfg, params, state, tok[:, S - 1])
+    assert int(state["t"]) == S
+    assert logits_dec.shape == (B, cfg.vocab)
+
+    h_full, _ = forward_hidden(cfg, params, batch)
+    logits_full = h_full[:, -1].astype(jnp.float32) @ params["embed"].T.astype(
+        jnp.float32)
+    rel = float(jnp.max(jnp.abs(logits_dec - logits_full))) / (
+        float(jnp.max(jnp.abs(logits_full))) + 1e-9)
+    assert rel < 2e-3, rel
+
+
+@pytest.mark.parametrize("arch_id", ARCHS)
+def test_arch_full_config_param_count(arch_id):
+    """eval_shape-only check of the FULL config (no allocation): parameter
+    count lands in the family's expected range."""
+    cfg = get_arch(arch_id)
+    total = count_params(cfg)
+    active = count_active_params(cfg)
+    expected = {
+        "qwen2-moe-a2.7b": (10e9, 16e9),     # 60 experts total ~14B
+        "granite-moe-3b-a800m": (2.5e9, 4.5e9),
+        # backbone-only (speech frontend is a stub per the assignment)
+        "seamless-m4t-large-v2": (1.2e9, 2.8e9),
+        "smollm-360m": (0.25e9, 0.5e9),
+        "mistral-large-123b": (110e9, 135e9),
+        "deepseek-coder-33b": (28e9, 38e9),
+        "olmo-1b": (0.9e9, 1.6e9),
+        "hymba-1.5b": (1.1e9, 2.2e9),
+        "mamba2-130m": (0.1e9, 0.22e9),
+        "qwen2-vl-7b": (6.5e9, 9e9),
+    }[arch_id]
+    assert expected[0] <= total <= expected[1], (arch_id, total)
+    assert active <= total
+    if get_arch(arch_id).n_experts:
+        assert active < total
+
+
+def test_hymba_window_schedule():
+    from repro.models.model import _win_schedule
+    cfg = get_arch("hymba-1.5b")
+    win = np.asarray(_win_schedule(cfg))
+    assert win.shape == (32,)
+    assert win[0] == 0 and win[15] == 0 and win[31] == 0  # global layers
+    assert np.all(win[1:15] == 1024) and np.all(win[16:31] == 1024)
+
+
+def test_long_context_eligibility():
+    from repro.launch.specs import cell_for
+    for arch_id in ARCHS:
+        cfg = get_arch(arch_id)
+        cell = cell_for(cfg, "long_500k")
+        if cfg.family in ("ssm", "hybrid"):
+            assert not cell.skip, arch_id
+        else:
+            assert cell.skip, arch_id
+
+
+def test_mamba2_train_decode_state_equivalence():
+    """Chunked SSD prefill state == sequential decode state."""
+    from repro.models.ssd import ssd_apply, ssd_decode_step, ssd_init_state, \
+        ssd_params
+
+    cfg = get_arch("mamba2-130m").reduced()
+    key = jax.random.PRNGKey(0)
+    p = ssd_params(key, cfg, jnp.float32)
+    x = 0.5 * jax.random.normal(key, (1, 32, cfg.d_model), jnp.float32)
+
+    y_par = ssd_apply(p, cfg, x)
+    state = ssd_init_state(cfg, 1, jnp.float32)
+    ys = []
+    for t in range(32):
+        y_t, state = ssd_decode_step(p, cfg, state, x[:, t:t + 1])
+        ys.append(y_t)
+    y_seq = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_seq),
+                               rtol=2e-3, atol=2e-3)

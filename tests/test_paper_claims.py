@@ -1,0 +1,156 @@
+"""Mechanical checks of the paper's qualitative claims at CPU scale.
+
+Full-scale versions live in benchmarks/ (Tables 1-2, Figs. 1-4); these are
+the fast regression guards.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ExactGP, ExactGPConfig, init_params, rmse
+from repro.data import make_regression_dataset
+from repro.train.gp_trainer import (
+    GPTrainConfig, fit_exact_gp, fit_sgpr, fit_svgp,
+)
+
+
+@pytest.fixture(scope="module")
+def splits():
+    return make_regression_dataset("bike", max_points=1100, seed=1)
+
+
+@pytest.fixture(scope="module")
+def fitted(splits):
+    X = jnp.asarray(splits.X_train, jnp.float32)
+    y = jnp.asarray(splits.y_train, jnp.float32)
+    gp = ExactGP(ExactGPConfig(precond_rank=20, row_block=256,
+                               train_max_cg_iters=30, lanczos_rank=64))
+    cfg = GPTrainConfig(pretrain_subset=300, pretrain_lbfgs_steps=5,
+                        pretrain_adam_steps=5, finetune_adam_steps=3)
+    res = fit_exact_gp(gp, X, y, cfg=cfg)
+    cache = gp.precompute(X, y, res.params, jax.random.PRNGKey(0))
+    return gp, res, cache, X, y
+
+
+def test_exact_gp_beats_approximations(splits, fitted):
+    """Table 1's headline: exact GP RMSE < SGPR/SVGP RMSE."""
+    gp, res, cache, X, y = fitted
+    Xt = jnp.asarray(splits.X_test, jnp.float32)
+    yt = jnp.asarray(splits.y_test, jnp.float32)
+    mean, _ = gp.predict(X, Xt, res.params, cache)
+    exact_rmse = float(rmse(mean, yt))
+
+    from repro.core.sgpr import sgpr_precompute, sgpr_predict
+    sp, _, _ = fit_sgpr("matern32", X, y, num_inducing=32, steps=30)
+    c = sgpr_precompute("matern32", X, y, sp)
+    m_s, _ = sgpr_predict("matern32", Xt, sp, c)
+    sgpr_rmse = float(rmse(m_s, yt))
+
+    from repro.core.svgp import svgp_predict
+    vp, _, _ = fit_svgp("matern32", X, y, num_inducing=32, epochs=15,
+                        batch=128, lr=0.05)
+    m_v, _ = svgp_predict("matern32", Xt, vp)
+    svgp_rmse = float(rmse(m_v, yt))
+
+    assert exact_rmse < sgpr_rmse, (exact_rmse, sgpr_rmse)
+    assert exact_rmse < svgp_rmse, (exact_rmse, svgp_rmse)
+
+
+def test_subset_of_data_monotone(splits):
+    """Fig. 4: test RMSE decreases as training data grows."""
+    Xt = jnp.asarray(splits.X_test, jnp.float32)
+    yt = jnp.asarray(splits.y_test, jnp.float32)
+    params = init_params(noise=0.1, dtype=jnp.float32)
+    gp = ExactGP(ExactGPConfig(precond_rank=20, row_block=256,
+                               pred_max_cg_iters=200))
+    errs = []
+    for frac in (0.125, 0.5, 1.0):
+        n = int(splits.X_train.shape[0] * frac)
+        X = jnp.asarray(splits.X_train[:n], jnp.float32)
+        y = jnp.asarray(splits.y_train[:n], jnp.float32)
+        cache = gp.precompute(X, y, params, jax.random.PRNGKey(0))
+        mean, _ = gp.predict(X, Xt, params, cache)
+        errs.append(float(rmse(mean, yt)))
+    assert errs[2] < errs[0], errs
+
+
+def test_loose_training_tolerance_suffices(splits):
+    """Paper Sec. 3: eps = 1 during training barely moves final accuracy."""
+    X = jnp.asarray(splits.X_train[:400], jnp.float32)
+    y = jnp.asarray(splits.y_train[:400], jnp.float32)
+    Xt = jnp.asarray(splits.X_test, jnp.float32)
+    yt = jnp.asarray(splits.y_test, jnp.float32)
+    cfg = GPTrainConfig(pretrain_subset=200, pretrain_lbfgs_steps=3,
+                        pretrain_adam_steps=3, finetune_adam_steps=2)
+    errs = {}
+    for tol in (1.0, 0.01):
+        gp = ExactGP(ExactGPConfig(precond_rank=20, row_block=128,
+                                   train_cg_tol=tol, train_max_cg_iters=100))
+        res = fit_exact_gp(gp, X, y, cfg=cfg)
+        cache = gp.precompute(X, y, res.params, jax.random.PRNGKey(0))
+        mean, _ = gp.predict(X, Xt, res.params, cache)
+        errs[tol] = float(rmse(mean, yt))
+    assert abs(errs[1.0] - errs[0.01]) < 0.1, errs
+
+
+def test_pretrain_initialization_competitive(splits):
+    """Fig. 1: subset-pretrain + 3 steps ~ matches plain Adam training."""
+    X = jnp.asarray(splits.X_train[:400], jnp.float32)
+    y = jnp.asarray(splits.y_train[:400], jnp.float32)
+    Xt = jnp.asarray(splits.X_test, jnp.float32)
+    yt = jnp.asarray(splits.y_test, jnp.float32)
+    gp = ExactGP(ExactGPConfig(precond_rank=20, row_block=128,
+                               train_max_cg_iters=30))
+    cfg = GPTrainConfig(pretrain_subset=200, pretrain_lbfgs_steps=5,
+                        pretrain_adam_steps=5, finetune_adam_steps=3,
+                        plain_adam_steps=30)
+    r_pre = fit_exact_gp(gp, X, y, cfg=cfg, method="pretrain")
+    r_adam = fit_exact_gp(gp, X, y, cfg=cfg, method="adam")
+    for res in (r_pre, r_adam):
+        cache = gp.precompute(X, y, res.params, jax.random.PRNGKey(0))
+        mean, _ = gp.predict(X, Xt, res.params, cache)
+        res_rmse = float(rmse(mean, yt))
+        assert np.isfinite(res_rmse)
+    # pretrain path must be close to (or better than) plain adam
+    cache_p = gp.precompute(X, y, r_pre.params, jax.random.PRNGKey(0))
+    cache_a = gp.precompute(X, y, r_adam.params, jax.random.PRNGKey(0))
+    e_p = float(rmse(gp.predict(X, Xt, r_pre.params, cache_p)[0], yt))
+    e_a = float(rmse(gp.predict(X, Xt, r_adam.params, cache_a)[0], yt))
+    assert e_p < e_a * 1.25, (e_p, e_a)
+
+
+def test_dkl_end_to_end(rng):
+    """DKL: MLP features + exact GP head train jointly (grads through X)."""
+    from repro.core.dkl import make_mlp_dkl
+    from repro.optim import adam_init, adam_update
+
+    n, d = 300, 6
+    X = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    y = jnp.asarray(np.sin(2 * np.asarray(X[:, 0])) +
+                    0.05 * rng.normal(size=n), jnp.float32)
+    model, phi = make_mlp_dkl(jax.random.PRNGKey(0), d, feature_dim=4,
+                              hidden=(32,))
+    gp_params = model.gp.init_params(4, noise=0.2)
+    params = {"phi": phi, "gp": gp_params}
+    state = adam_init(params)
+
+    @jax.jit
+    def step(params, state, key):
+        def loss_fn(p):
+            l, _ = model.loss(X, y, p["phi"], p["gp"], key)
+            return l
+        l, g = jax.value_and_grad(loss_fn)(params)
+        params, state = adam_update(params, g, state, 0.01)
+        return params, state, l
+
+    losses = []
+    for i in range(20):
+        params, state, l = step(params, state, jax.random.PRNGKey(i))
+        losses.append(float(l))
+    assert losses[-1] < losses[0]
+    # gradient actually reached the MLP
+    diff = jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()),
+                        params["phi"], phi)
+    assert max(jax.tree.leaves(diff)) > 1e-5

@@ -1,0 +1,100 @@
+"""PCG/mBCG: solve accuracy, pipelined equivalence, convergence masking."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    dense_khat, init_params, kmvm, make_preconditioner, pcg,
+)
+
+P64 = dict(dtype=jnp.float64)
+
+
+def _setup(rng, n=120, d=3, noise=0.3):
+    X = jnp.asarray(rng.normal(size=(n, d)))
+    params = init_params(noise=noise, **P64)
+    Khat = dense_khat("matern32", X, params)
+    mvm = lambda V: kmvm("matern32", X, V, params, row_block=32)
+    return X, params, Khat, mvm
+
+
+def test_pcg_matches_direct_solve(rng):
+    X, params, Khat, mvm = _setup(rng)
+    B = jnp.asarray(rng.normal(size=(X.shape[0], 3)))
+    pre = make_preconditioner("matern32", X, params, 30)
+    res = pcg(mvm, B, pre.solve, max_iters=200, tol=1e-10, min_iters=5)
+    direct = jnp.linalg.solve(Khat, B)
+    np.testing.assert_allclose(np.asarray(res.solution), np.asarray(direct),
+                               atol=1e-6)
+    assert np.all(np.asarray(res.rel_residual) < 1e-8)
+
+
+def test_pipelined_equals_standard(rng):
+    X, params, Khat, mvm = _setup(rng)
+    B = jnp.asarray(rng.normal(size=(X.shape[0], 2)))
+    pre = make_preconditioner("matern32", X, params, 30)
+    r1 = pcg(mvm, B, pre.solve, max_iters=150, tol=1e-10, min_iters=5)
+    r2 = pcg(mvm, B, pre.solve, max_iters=150, tol=1e-10, min_iters=5,
+             method="pipelined")
+    np.testing.assert_allclose(np.asarray(r1.solution),
+                               np.asarray(r2.solution), atol=1e-6)
+
+
+def test_preconditioner_reduces_iterations(rng):
+    X, params, Khat, mvm = _setup(rng, n=200, noise=0.05)
+    y = jnp.asarray(rng.normal(size=(X.shape[0], 1)))
+    r_no = pcg(mvm, y, None, max_iters=300, tol=1e-6, min_iters=2)
+    pre = make_preconditioner("matern32", X, params, 60)
+    r_pre = pcg(mvm, y, pre.solve, max_iters=300, tol=1e-6, min_iters=2)
+    assert int(r_pre.iterations[0]) < int(r_no.iterations[0])
+
+
+def test_convergence_masking_freezes_columns(rng):
+    """A converged column's coefficients are zeroed; others keep iterating."""
+    X, params, Khat, mvm = _setup(rng)
+    easy = np.zeros((X.shape[0], 1))
+    easy[0] = 1e-3
+    hard = rng.normal(size=(X.shape[0], 1))
+    B = jnp.asarray(np.concatenate([easy, hard], 1))
+    res = pcg(mvm, B, None, max_iters=100, tol=1e-4, min_iters=2)
+    assert int(res.iterations[0]) <= int(res.iterations[1])
+    # frozen iterations have alpha == 0
+    n_active0 = int(res.iterations[0])
+    assert np.allclose(np.asarray(res.alphas)[n_active0:, 0], 0.0)
+
+
+def test_1d_rhs_roundtrip(rng):
+    X, params, Khat, mvm = _setup(rng)
+    y = jnp.asarray(rng.normal(size=X.shape[0]))
+    res = pcg(mvm, y, None, max_iters=200, tol=1e-10, min_iters=5)
+    assert res.solution.shape == y.shape
+    np.testing.assert_allclose(np.asarray(res.solution),
+                               np.asarray(jnp.linalg.solve(Khat, y)), atol=1e-6)
+
+
+@settings(deadline=None, max_examples=8)
+@given(seed=st.integers(0, 2**16), t=st.integers(1, 4),
+       method=st.sampled_from(["standard", "pipelined"]))
+def test_pcg_property_random_spd(seed, t, method):
+    """Property: for any kernel SPD system, PCG @ tight tol == direct solve."""
+    rng = np.random.default_rng(seed)
+    X, params, Khat, mvm = _setup(rng, n=64, noise=0.5)
+    B = jnp.asarray(rng.normal(size=(64, t)))
+    res = pcg(mvm, B, None, max_iters=200, tol=1e-11, min_iters=5,
+              method=method)
+    np.testing.assert_allclose(np.asarray(res.solution),
+                               np.asarray(jnp.linalg.solve(Khat, B)),
+                               atol=1e-5)
+
+
+def test_loose_tolerance_stops_early(rng):
+    """Paper: eps = 1 training tolerance => far fewer iterations."""
+    X, params, Khat, mvm = _setup(rng, n=200, noise=0.1)
+    y = jnp.asarray(rng.normal(size=(X.shape[0], 1)))
+    pre = make_preconditioner("matern32", X, params, 30)
+    loose = pcg(mvm, y, pre.solve, max_iters=200, tol=1.0, min_iters=2)
+    tight = pcg(mvm, y, pre.solve, max_iters=200, tol=1e-8, min_iters=2)
+    assert int(loose.iterations[0]) < int(tight.iterations[0])

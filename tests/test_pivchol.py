@@ -1,0 +1,85 @@
+"""Partial pivoted Cholesky preconditioner: factor quality + Woodbury ops."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    dense_khat, init_params, kernel_matrix, make_preconditioner,
+    pivoted_cholesky,
+)
+
+
+def test_full_rank_factor_is_exact(rng):
+    X = jnp.asarray(rng.normal(size=(40, 3)))
+    p = init_params(dtype=jnp.float64)
+    K = kernel_matrix("matern32", X, X, p)
+    L = pivoted_cholesky("matern32", X, p, 40)
+    np.testing.assert_allclose(np.asarray(L @ L.T), np.asarray(K), atol=1e-7)
+
+
+def test_residual_decreases_with_rank(rng):
+    X = jnp.asarray(rng.normal(size=(100, 3)))
+    p = init_params(dtype=jnp.float64)
+    K = np.asarray(kernel_matrix("matern32", X, X, p))
+    prev = np.inf
+    for rank in (5, 20, 60):
+        L = np.asarray(pivoted_cholesky("matern32", X, p, rank))
+        resid = np.linalg.norm(K - L @ L.T)
+        assert resid < prev + 1e-12
+        prev = resid
+
+
+def test_woodbury_solve_matches_dense(rng):
+    X = jnp.asarray(rng.normal(size=(60, 3)))
+    p = init_params(noise=0.2, dtype=jnp.float64)
+    pre = make_preconditioner("matern32", X, p, 25, noise_floor=0.0)
+    P = np.asarray(pre.L @ pre.L.T) + float(pre.sigma2) * np.eye(60)
+    V = jnp.asarray(rng.normal(size=(60, 4)))
+    # jitter (1e-6 I) inside chol_inner perturbs the solve at ~1e-5
+    np.testing.assert_allclose(np.asarray(pre.solve(V)),
+                               np.linalg.solve(P, np.asarray(V)), atol=1e-4)
+
+
+def test_logdet_matches_dense(rng):
+    X = jnp.asarray(rng.normal(size=(60, 3)))
+    p = init_params(noise=0.2, dtype=jnp.float64)
+    pre = make_preconditioner("matern32", X, p, 25, noise_floor=0.0)
+    P = np.asarray(pre.L @ pre.L.T) + float(pre.sigma2) * np.eye(60)
+    sign, logdet = np.linalg.slogdet(P)
+    assert sign > 0
+    assert np.isclose(float(pre.logdet()), logdet, rtol=1e-6)
+
+
+def test_sample_covariance_is_P(rng):
+    import jax
+
+    X = jnp.asarray(rng.normal(size=(30, 2)))
+    p = init_params(noise=0.5, dtype=jnp.float64)
+    pre = make_preconditioner("matern32", X, p, 10, noise_floor=0.0)
+    P = np.asarray(pre.L @ pre.L.T) + float(pre.sigma2) * np.eye(30)
+    Z = np.asarray(pre.sample(jax.random.PRNGKey(0), 20000))
+    emp = Z @ Z.T / Z.shape[1]
+    assert np.abs(emp - P).max() < 0.15  # statistical tolerance
+
+
+def test_rank_zero_is_noise_only(rng):
+    X = jnp.asarray(rng.normal(size=(20, 2)))
+    p = init_params(noise=0.3, dtype=jnp.float64)
+    pre = make_preconditioner("matern32", X, p, 0, noise_floor=0.0)
+    V = jnp.asarray(rng.normal(size=(20, 2)))
+    np.testing.assert_allclose(np.asarray(pre.solve(V)),
+                               np.asarray(V) / 0.3, rtol=1e-6)
+
+
+@settings(deadline=None, max_examples=8)
+@given(seed=st.integers(0, 2**16), rank=st.integers(1, 30))
+def test_pivchol_property_psd_residual(seed, rank):
+    """The greedy residual K - L L^T stays PSD (trace decreasing)."""
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.normal(size=(32, 2)))
+    p = init_params(dtype=jnp.float64)
+    K = np.asarray(kernel_matrix("rbf", X, X, p))
+    L = np.asarray(pivoted_cholesky("rbf", X, p, rank))
+    resid = K - L @ L.T
+    assert np.linalg.eigvalsh(resid).min() > -1e-6
