@@ -1,10 +1,14 @@
 """Section 3 ablation (beyond a single line in the paper): CG tolerance at
-TRAIN time vs at PREDICTION time. Training tolerates eps=1; prediction
-needs tight solves."""
+TRAIN time vs at PREDICTION time (training tolerates eps=1; prediction
+needs tight solves) — plus the KernelOperator compute-dtype ablation:
+solve quality (final PCG relative residual + held-out RMSE) for the fp32
+exact path vs the bf16-compute / fp32-accumulate fast path, at both the
+paper's train tolerance (eps=1) and the prediction tolerance (0.01).
+See EXPERIMENTS.md §Mixed precision."""
 
 import jax
 
-from repro.core import ExactGP, rmse
+from repro.core import ExactGP, pcg, rmse
 from repro.train.gp_trainer import GPTrainConfig, fit_exact_gp
 
 from .common import default_gp, load, write_rows
@@ -39,7 +43,31 @@ def run():
         rows.append(["pred_tol", tol, round(float(rmse(mean, yt)), 4)])
         print(f"[tol] pred eps={tol}: rmse={rows[-1][2]}")
 
-    write_rows("ablation_tolerance", ["phase", "tolerance", "rmse"], rows)
+    # (c) operator compute-dtype sweep: same trained model, same solves,
+    # fp32 vs bf16-compute MVMs — the mixed-precision headline's quality side
+    from repro.core.kernels_math import constant_mean
+    key = jax.random.PRNGKey(0)
+    yc = (y - constant_mean(res.params))[:, None]
+    # the preconditioner depends on neither the tolerance nor compute_dtype
+    pre = gp.operator(X, res.params).preconditioner(gp.config.precond_rank)
+    for dtype in (None, "bfloat16"):
+        gp_d = ExactGP(gp.config._replace(compute_dtype=dtype))
+        label = dtype or "float32"
+        op = gp_d.operator(X, res.params)
+        for tol in (1.0, 0.01):
+            sol = pcg(op, yc, pre.solve, max_iters=400, min_iters=3, tol=tol)
+            rows.append([f"dtype_{label}", tol,
+                         round(float(sol.rel_residual[0]), 6)])
+            print(f"[tol] dtype={label} eps={tol}: "
+                  f"rel_residual={rows[-1][2]} "
+                  f"iters={int(sol.iterations[0])}")
+        cache = gp_d.precompute(X, y, res.params, key)
+        mean, _ = gp_d.predict(X, Xt, res.params, cache)
+        rows.append([f"dtype_{label}_rmse", 0.0,
+                     round(float(rmse(mean, yt)), 4)])
+        print(f"[tol] dtype={label}: rmse={rows[-1][2]}")
+
+    write_rows("ablation_tolerance", ["phase", "tolerance", "value"], rows)
     return rows
 
 

@@ -70,7 +70,14 @@ def eval_exact(gp: ExactGP, X, y, Xt, yt, params, key):
             pre_s, pred_s)
 
 
-def default_gp(n: int) -> ExactGP:
+def default_gp(n: int, backend: str = "partitioned",
+               compute_dtype: str | None = None) -> ExactGP:
+    """Benchmark-default ExactGP on the given KernelOperator backend.
+
+    backend/compute_dtype select the MVM engine (see repro.core.operators):
+    "dense" | "partitioned" | "pallas", optionally with the bf16-compute
+    fast path — every benchmark can sweep them without other changes.
+    """
     return ExactGP(ExactGPConfig(
         kernel="matern32",
         precond_rank=min(100, max(20, n // 50)),
@@ -78,4 +85,6 @@ def default_gp(n: int) -> ExactGP:
         train_max_cg_iters=50,
         pred_max_cg_iters=400,
         lanczos_rank=min(128, n // 2),
+        backend=backend,
+        compute_dtype=compute_dtype,
     ))

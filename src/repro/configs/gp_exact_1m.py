@@ -20,6 +20,10 @@ class GPWorkloadConfig(NamedTuple):
     pred_cg_iters: int = 100
     mode: str = "2d"           # "1d" = paper-faithful, "2d" = beyond-paper
     row_block: int = 1024
+    # KernelOperator knobs: inner slab backend per device tile and the MXU
+    # compute dtype ("bfloat16" = mixed-precision fast path, fp32 accum)
+    backend: str = "partitioned"
+    compute_dtype: str | None = None
 
 
 CONFIG = GPWorkloadConfig()

@@ -4,15 +4,21 @@ The paper's contribution as a composable JAX library. Layering (bottom-up):
 
     kernels_math   stationary kernels + hyperparameter transforms
     partitioned    O(n)-memory blockwise K_hat @ V (the paper's core trick)
+    operators      KernelOperator protocol + backend registry (dense /
+                   partitioned / pallas / sharded) + bf16-compute fast path
     pivchol        rank-k pivoted-Cholesky preconditioner
     pcg            batched PCG (mBCG) with tridiag tracking; pipelined variant
     slq            stochastic Lanczos quadrature log-determinant
     mll            BBMM marginal likelihood w/ custom VJP (Eq. 1 & 2)
     predcache      mean cache + LOVE-style variance cache (O(n) predictions)
     gp             ExactGP user API
-    distributed    shard_map row/2-D partitioned engine for TPU meshes
+    distributed    ShardedOperator: shard_map row/2-D engine for TPU meshes
     sgpr, svgp     the paper's approximate-GP baselines
     dkl            deep-kernel-learning head (architecture integration)
+
+Every consumer of the kernel matrix (pcg, slq, mll, predcache, the
+launchers and benchmarks) goes through `operators.make_operator` — no
+`(kind, X, params)` dispatch outside the registry.
 """
 
 from .gp import ExactGP, ExactGPConfig, gaussian_nll, rmse
@@ -27,7 +33,17 @@ from .kernels_math import (
     noise_variance,
     outputscale,
 )
-from .mll import MLLConfig, dense_mll, exact_mll
+from .mll import MLLConfig, dense_mll, exact_mll, operator_mll_forward
+from .operators import (
+    DenseOperator,
+    KernelOperator,
+    OperatorConfig,
+    PallasFusedOperator,
+    PartitionedOperator,
+    make_operator,
+    operator_backends,
+    register_operator,
+)
 from .partitioned import kmvm, quad_form
 from .pcg import PCGResult, pcg
 from .pivchol import Preconditioner, make_preconditioner, pivoted_cholesky
@@ -39,7 +55,7 @@ from .predcache import (
     predict_var_cached,
     predict_var_exact,
 )
-from .slq import exact_logdet, slq_logdet_correction
+from .slq import exact_logdet, slq_logdet, slq_logdet_correction
 from .sgpr import (
     SGPRParams, init_sgpr_params, sgpr_elbo, sgpr_loss, sgpr_precompute,
     sgpr_predict,
@@ -50,14 +66,18 @@ from .svgp import (
 from .dkl import DKLModel, make_mlp_dkl
 
 __all__ = [
-    "ExactGP", "ExactGPConfig", "GPParams", "KERNEL_KINDS", "MLLConfig",
-    "PCGResult", "PredictionCache", "Preconditioner",
+    "DenseOperator", "ExactGP", "ExactGPConfig", "GPParams", "KERNEL_KINDS",
+    "KernelOperator", "MLLConfig", "OperatorConfig", "PCGResult",
+    "PallasFusedOperator", "PartitionedOperator", "PredictionCache",
+    "Preconditioner",
     "build_prediction_cache", "dense_khat", "dense_mll", "exact_logdet",
     "exact_mll", "gaussian_nll", "init_params", "kernel_diag",
-    "kernel_matrix", "kmvm", "lanczos", "lengthscale", "make_preconditioner",
-    "noise_variance", "outputscale", "pcg", "pivoted_cholesky",
+    "kernel_matrix", "kmvm", "lanczos", "lengthscale", "make_operator",
+    "make_preconditioner",
+    "noise_variance", "operator_backends", "operator_mll_forward",
+    "outputscale", "pcg", "pivoted_cholesky",
     "predict_mean", "predict_var_cached", "predict_var_exact", "quad_form",
-    "rmse", "slq_logdet_correction",
+    "register_operator", "rmse", "slq_logdet", "slq_logdet_correction",
     "SGPRParams", "init_sgpr_params", "sgpr_elbo", "sgpr_loss",
     "sgpr_precompute", "sgpr_predict",
     "SVGPParams", "init_svgp_params", "svgp_elbo", "svgp_loss", "svgp_predict",

@@ -28,11 +28,18 @@ sharded form below. X (n, d) is replicated: at n = 10^6, d <= 400 this is
 <= 1.6 GB fp32 and is the paper's own assumption ("requires access to the
 full training set X, which we assume fits in memory"); the pivoted-Cholesky
 factor and all CG state are sharded.
+
+The engine plugs into the rest of the stack as `ShardedOperator`, the
+"sharded" entry of the `repro.core.operators` registry: it exposes the same
+matvec/preconditioner/allreduce/quad_form_grads surface as the
+single-device backends (composing any inner slab backend — dense jnp,
+mixed-precision, or the fused Pallas kernel — for the local tiles), so the
+MLL forward is literally `mll.operator_mll_forward` running inside
+shard_map.
 """
 
 from __future__ import annotations
 
-import math
 from functools import partial
 from typing import Callable, NamedTuple
 
@@ -48,11 +55,16 @@ from .kernels_math import (
     kernel_diag,
     kernel_matrix,
     noise_variance,
-    scale_inputs,
+)
+from .operators import (
+    KernelOperator,
+    OperatorConfig,
+    register_operator,
+    slab_block_fn_for,
 )
 from .partitioned import kmvm_rect, quad_form_partials
 from .pcg import pcg
-from .slq import slq_logdet_correction
+from .mll import operator_mll_forward, operator_mll_quad_grads
 
 
 class DistGeometry(NamedTuple):
@@ -283,6 +295,155 @@ def make_dist_preconditioner(geom: DistGeometry, kind: str, X: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# ShardedOperator — the "sharded" registry backend (valid inside shard_map)
+# ---------------------------------------------------------------------------
+
+
+class _BoundDistPreconditioner(NamedTuple):
+    """DistPreconditioner with geom bound in, matching the single-device
+    `Preconditioner.solve/logdet/sample` surface the solvers expect."""
+
+    geom: DistGeometry
+    pre: DistPreconditioner
+
+    def solve(self, V_local: jax.Array) -> jax.Array:
+        return self.pre.solve(self.geom, V_local)
+
+    def logdet(self) -> jax.Array:
+        return self.pre.logdet()
+
+    def sample(self, key: jax.Array, num: int, dtype=None) -> jax.Array:
+        del dtype  # probes inherit the sharded factor's dtype
+        return self.pre.sample(self.geom, key, num)
+
+
+@register_operator("sharded")
+class ShardedOperator(KernelOperator):
+    """K_hat over a TPU mesh: rows (and optionally columns) sharded per
+    `config.geom` (a DistGeometry), composing any inner slab backend for
+    the local tiles (`config.inner_backend`: "partitioned" = dense jnp
+    slabs, "pallas" = the fused kernel; both honor `compute_dtype`).
+
+    Only meaningful INSIDE shard_map over geom's mesh: matvec takes and
+    returns this device's (n_local, t) chunk, scalar reductions must go
+    through `allreduce`, and `quad_form_grads` returns this device's
+    PARTIAL gradients (the MLL custom VJP psums them — see
+    `make_dist_mll`). shape/`shape[0]` report the GLOBAL n.
+
+    Prediction-time surfaces (cross_matvec / kernel_rows) are single-device
+    by design — the paper runs predictions on one device from the gathered
+    mean cache (`make_mean_cache_solve`).
+    """
+
+    def __init__(self, config: OperatorConfig, X: jax.Array,
+                 params: GPParams):
+        super().__init__(config, X, params)
+        if config.geom is None:
+            raise ValueError("backend='sharded' requires OperatorConfig.geom")
+        self.geom: DistGeometry = config.geom
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return (self.geom.n, self.geom.n)
+
+    @classmethod
+    def slab_block_fn(cls, config: OperatorConfig, operand_dtype):
+        raise ValueError("'sharded' cannot be an inner slab backend")
+
+    def _inner_block_fn(self) -> Callable | None:
+        # registry-resolved: a new slab backend registers once and is
+        # immediately composable here; unknown names raise
+        return slab_block_fn_for(
+            self.config.inner_backend, self.config, self.dtype)
+
+    def matvec(self, V_local: jax.Array) -> jax.Array:
+        return dist_kmvm(
+            self.geom, self.config.kernel, self.X, V_local, self.params,
+            add_noise=self.config.add_noise,
+            noise_floor=self.config.noise_floor,
+            block_fn=self._inner_block_fn())
+
+    def allreduce(self, x: jax.Array) -> jax.Array:
+        return _psum_all(self.geom, x)
+
+    def preconditioner(self, rank: int) -> _BoundDistPreconditioner:
+        return _BoundDistPreconditioner(
+            self.geom,
+            make_dist_preconditioner(
+                self.geom, self.config.kernel, self.X, self.params, rank,
+                self.config.noise_floor))
+
+    def cross_matvec(self, Z, V):
+        raise NotImplementedError(
+            "ShardedOperator is solve-only; gather the mean cache "
+            "(make_mean_cache_solve) and predict with a single-device "
+            "operator")
+
+    def kernel_rows(self, Z):
+        raise NotImplementedError(
+            "ShardedOperator is solve-only; see cross_matvec")
+
+    def quad_form_grads(self, A_loc: jax.Array, V_loc: jax.Array):
+        """This device's PARTIAL (g_params, g_X) of sum_j a_j^T K_hat v_j.
+
+        Identity: with o = psum_scatter(partial_rows), sum_dev <A_loc, o_loc>
+        = sum_dev <A_rows, partial_rows> where A_rows = all_gather(A_loc)
+        over the COLUMN axes — so each device owns the disjoint tile term
+        <A[B_i], K(B_i, C_j) V[C_j]> and its gradient, evaluated blockwise
+        with bounded memory by `quad_form_partials`. The caller psums the
+        results. (AD through the forward would over-count by the device
+        count: under shard_map(check_rep=False) the transpose of a trailing
+        psum is psum again.)
+        """
+        geom = self.geom
+        X = self.X
+        params = self.params
+        if A_loc.ndim == 1:
+            A_loc = A_loc[:, None]
+        if V_loc.ndim == 1:
+            V_loc = V_loc[:, None]
+        v_cols = jax.lax.all_gather(V_loc, geom.row_axes, axis=0, tiled=True)
+        if geom.col_axes:
+            a_rows = jax.lax.all_gather(A_loc, geom.col_axes, axis=0,
+                                        tiled=True)
+        else:
+            a_rows = A_loc
+        x_rows = _x_rows(geom, X)
+        x_cols = _x_cols(geom, X)
+        gp, g_rows, g_cols = quad_form_partials(
+            self.config.kernel, x_rows, x_cols, a_rows, v_cols, params,
+            row_block=max(geom.row_block // 2, 64))
+
+        # noise diagonal (vector-chunk layout): sigma^2 * sum(A_loc o V_loc)
+        dot_ab = jnp.sum(A_loc * V_loc)
+        gp_noise = jax.grad(
+            lambda p: noise_variance(p, self.config.noise_floor) * dot_ab)(
+                params)
+        gp = jax.tree.map(jnp.add, gp, gp_noise)
+
+        # scatter row/col gradients back into the replicated-X layout
+        g_X = jnp.zeros_like(X)
+        if geom.row_axes:
+            i = _linear_index(geom.row_axes, _axis_sizes(geom.row_axes))
+            g_X = jax.lax.dynamic_update_slice_in_dim(
+                g_X, g_rows, i * geom.rows_local, axis=0)
+        else:
+            g_X = g_X + g_rows
+        if geom.col_axes:
+            j = _linear_index(geom.col_axes, _axis_sizes(geom.col_axes))
+            gc = jnp.zeros((geom.d_row, geom.d_col * geom.n_local, geom.d),
+                           X.dtype)
+            zero = jnp.zeros((), j.dtype)
+            gc = jax.lax.dynamic_update_slice(
+                gc, g_cols.reshape(geom.d_row, geom.n_local, geom.d),
+                (zero, j * geom.n_local, zero))
+            g_X = g_X + gc.reshape(geom.n, geom.d)
+        else:
+            g_X = g_X + g_cols
+        return gp, g_X
+
+
+# ---------------------------------------------------------------------------
 # distributed MLL with custom VJP (paper Eq. 1 & 2, sharded)
 # ---------------------------------------------------------------------------
 
@@ -296,106 +457,31 @@ class DistMLLConfig(NamedTuple):
     cg_tol: float = 1.0
     noise_floor: float = 1e-4
     pcg_method: str = "standard"
+    backend: str = "partitioned"          # inner slab backend per tile
+    compute_dtype: str | None = None      # "bfloat16" = MXU fast path
 
-
-def _dist_quad_form(geom, cfg, X, A_loc, B_loc, params, *, reduce=True):
-    """sum_j a_j^T K_hat b_j (value only; gradients go through
-    `_dist_quad_grads` — see there for why not AD).
-
-    With reduce=False returns this device's PARTIAL sum. Note: under
-    shard_map(check_rep=False) the transpose of a trailing `psum` is `psum`
-    again (replication of the cotangent cannot be assumed), which would
-    over-count any AD gradient by the device count — partial-per-device +
-    explicit gradient psum is the correct pattern.
-    """
-    if A_loc.ndim == 1:
-        A_loc = A_loc[:, None]
-    if B_loc.ndim == 1:
-        B_loc = B_loc[:, None]
-    KB = dist_kmvm(geom, cfg.kernel, X, B_loc, params,
-                   add_noise=True, noise_floor=cfg.noise_floor)
-    local = jnp.sum(A_loc * KB)
-    return _psum_all(geom, local) if reduce else local
-
-
-def _dist_quad_grads(geom, cfg, X, A_loc, B_loc, params):
-    """This device's PARTIAL (g_params, g_X) of sum_j a_j^T K_hat b_j.
-
-    Identity: with o = psum_scatter(partial_rows), sum_dev <A_loc, o_loc> =
-    sum_dev <A_rows, partial_rows> where A_rows = all_gather(A_loc) over
-    the COLUMN axes — so each device owns the disjoint tile term
-    <A[B_i], K(B_i, C_j) V[C_j]> and its gradient, evaluated blockwise with
-    bounded memory by `quad_form_partials`. The caller psums the results.
-    """
-    if A_loc.ndim == 1:
-        A_loc = A_loc[:, None]
-    if B_loc.ndim == 1:
-        B_loc = B_loc[:, None]
-    v_cols = jax.lax.all_gather(B_loc, geom.row_axes, axis=0, tiled=True)
-    if geom.col_axes:
-        a_rows = jax.lax.all_gather(A_loc, geom.col_axes, axis=0, tiled=True)
-    else:
-        a_rows = A_loc
-    x_rows = _x_rows(geom, X)
-    x_cols = _x_cols(geom, X)
-    gp, g_rows, g_cols = quad_form_partials(
-        cfg.kernel, x_rows, x_cols, a_rows, v_cols, params,
-        row_block=max(geom.row_block // 2, 64))
-
-    # noise diagonal (vector-chunk layout): sigma^2 * sum(A_loc o B_loc)
-    dot_ab = jnp.sum(A_loc * B_loc)
-    gp_noise = jax.grad(
-        lambda p: noise_variance(p, cfg.noise_floor) * dot_ab)(params)
-    gp = jax.tree.map(jnp.add, gp, gp_noise)
-
-    # scatter row/col gradients back into the replicated-X layout
-    g_X = jnp.zeros_like(X)
-    if geom.row_axes:
-        i = _linear_index(geom.row_axes, _axis_sizes(geom.row_axes))
-        g_X = jax.lax.dynamic_update_slice_in_dim(
-            g_X, g_rows, i * geom.rows_local, axis=0)
-    else:
-        g_X = g_X + g_rows
-    if geom.col_axes:
-        j = _linear_index(geom.col_axes, _axis_sizes(geom.col_axes))
-        gc = jnp.zeros((geom.d_row, geom.d_col * geom.n_local, geom.d),
-                       X.dtype)
-        zero = jnp.zeros((), j.dtype)
-        gc = jax.lax.dynamic_update_slice(
-            gc, g_cols.reshape(geom.d_row, geom.n_local, geom.d),
-            (zero, j * geom.n_local, zero))
-        g_X = g_X + gc.reshape(geom.n, geom.d)
-    else:
-        g_X = g_X + g_cols
-    return gp, g_X
+    def operator_config(self, geom: DistGeometry) -> OperatorConfig:
+        return OperatorConfig(
+            kernel=self.kernel,
+            backend="sharded",
+            row_block=geom.row_block,
+            add_noise=True,
+            noise_floor=self.noise_floor,
+            compute_dtype=self.compute_dtype,
+            geom=geom,
+            inner_backend=self.backend,
+        )
 
 
 def _dist_mll_forward(geom, cfg, X, y_loc, params, key):
-    n = geom.n
-    yc = y_loc - constant_mean(params)
-    precond = make_dist_preconditioner(
-        geom, cfg.kernel, X, params, cfg.precond_rank, cfg.noise_floor)
-    probes = precond.sample(geom, key, cfg.num_probes)
-    B = jnp.concatenate([yc[:, None], probes], axis=1)
-
-    def mvm(V):
-        return dist_kmvm(geom, cfg.kernel, X, V, params,
-                         add_noise=True, noise_floor=cfg.noise_floor)
-
-    res = pcg(mvm, B, lambda V: precond.solve(geom, V),
-              max_iters=cfg.max_cg_iters, min_iters=cfg.min_cg_iters,
-              tol=cfg.cg_tol, allreduce=lambda x: _psum_all(geom, x),
-              method=cfg.pcg_method)
-    u_y = res.solution[:, 0]
-    U = res.solution[:, 1:]
-    pinv_z = precond.solve(geom, probes)
-
-    # alphas/betas/rz0 are replicated scalars -> SLQ runs redundantly
-    logdet = precond.logdet() + slq_logdet_correction(
-        res.alphas[:, 1:], res.betas[:, 1:], res.active[:, 1:], res.rz0[1:])
-    quad = _psum_all(geom, jnp.dot(yc, u_y))
-    value = -0.5 * (quad + logdet + n * math.log(2.0 * math.pi))
-    aux = (logdet, quad, res.iterations, res.rel_residual)
+    op = ShardedOperator(cfg.operator_config(geom), X, params)
+    (value, aux), (yc, u_y, U, pinv_z) = operator_mll_forward(
+        op, y_loc, key,
+        precond_rank=cfg.precond_rank, num_probes=cfg.num_probes,
+        max_cg_iters=cfg.max_cg_iters, min_cg_iters=cfg.min_cg_iters,
+        cg_tol=cfg.cg_tol, pcg_method=cfg.pcg_method)
+    # plain tuple: shard_map out_specs are written as tuples, not MLLAux
+    aux = (aux.logdet, aux.quad, aux.cg_iterations, aux.rel_residual)
     saved = (X, params, yc, u_y, U, pinv_z)
     return (value, aux), saved
 
@@ -416,18 +502,13 @@ def make_dist_mll(geom: DistGeometry, cfg: DistMLLConfig):
     def bwd(saved, cotangents):
         g_value = cotangents[0]
         X, params, yc, u_y, U, pinv_z = saved
-        t = max(U.shape[1], 1)
-
-        # explicit blockwise partials per device tile (bounded memory),
-        # then one psum — NOT AD through the distributed forward
-        gp_d, gx_d = _dist_quad_grads(geom, cfg, X, u_y, u_y, params)
-        # gate the second chain on the first (bitwise identity) so the two
-        # block chains cannot be scheduled concurrently
-        link = jax.lax.optimization_barrier(
-            jnp.zeros((), X.dtype)) * gx_d[0, 0]
-        gp_t, gx_t = _dist_quad_grads(geom, cfg, X + link, U, pinv_z, params)
-        g_params = jax.tree.map(lambda a, b: -0.5 * (-a + b / t), gp_d, gp_t)
-        g_X = -0.5 * (-gx_d + gx_t / t)
+        # backward always contracts in full precision (see mll module doc);
+        # ShardedOperator.quad_form_grads returns PER-DEVICE partials
+        # (explicit blockwise tiles, NOT AD through the distributed
+        # forward), so the shared Eq. 2 assembly yields partials too
+        bwd_cfg = cfg.operator_config(geom)._replace(compute_dtype=None)
+        g_params, g_X = operator_mll_quad_grads(
+            lambda x: ShardedOperator(bwd_cfg, x, params), X, u_y, U, pinv_z)
         # local partials -> global sums (replicated outputs)
         g_params = jax.tree.map(lambda a: _psum_all(geom, a), g_params)
         g_X = _psum_all(geom, g_X)
@@ -485,16 +566,10 @@ def make_mean_cache_solve(mesh: Mesh, geom: DistGeometry, cfg: DistMLLConfig,
 
     def local_fn(X, y_loc, params):
         yc = y_loc - constant_mean(params)
-        precond = make_dist_preconditioner(
-            geom, cfg.kernel, X, params, cfg.precond_rank, cfg.noise_floor)
-
-        def mvm(V):
-            return dist_kmvm(geom, cfg.kernel, X, V, params,
-                             add_noise=True, noise_floor=cfg.noise_floor)
-
-        res = pcg(mvm, yc[:, None], lambda V: precond.solve(geom, V),
-                  max_iters=max_iters, min_iters=10, tol=tol,
-                  allreduce=lambda x: _psum_all(geom, x))
+        op = ShardedOperator(cfg.operator_config(geom), X, params)
+        precond = op.preconditioner(cfg.precond_rank)
+        res = pcg(op, yc[:, None], precond.solve,
+                  max_iters=max_iters, min_iters=10, tol=tol)
         a_loc = res.solution[:, 0]
         a_full = jax.lax.all_gather(a_loc, geom.all_axes, axis=0, tiled=True)
         return a_full, res.rel_residual

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from .kernels_math import GPParams, init_params, noise_variance
 from .mll import MLLConfig, exact_mll
+from .operators import OperatorConfig, make_operator
 from .predcache import (
     PredictionCache,
     build_prediction_cache,
@@ -41,6 +42,8 @@ class ExactGPConfig(NamedTuple):
     row_block: int = 1024
     noise_floor: float = 1e-4
     pcg_method: str = "standard"      # "pipelined" = beyond-paper variant
+    backend: str = "partitioned"      # KernelOperator registry key
+    compute_dtype: str | None = None  # "bfloat16" = MXU fast path
 
     def mll_config(self) -> MLLConfig:
         return MLLConfig(
@@ -52,7 +55,12 @@ class ExactGPConfig(NamedTuple):
             row_block=self.row_block,
             noise_floor=self.noise_floor,
             pcg_method=self.pcg_method,
+            backend=self.backend,
+            compute_dtype=self.compute_dtype,
         )
+
+    def operator_config(self) -> OperatorConfig:
+        return self.mll_config().operator_config()
 
 
 class ExactGP:
@@ -66,6 +74,12 @@ class ExactGP:
     def init_params(self, d: int, noise: float = 0.5, dtype=jnp.float32) -> GPParams:
         ard_dims = d if self.config.ard else None
         return init_params(ard_dims=ard_dims, noise=noise, dtype=dtype)
+
+    # -- the kernel operator ------------------------------------------------
+
+    def operator(self, X, params: GPParams):
+        """The KernelOperator every solve/prediction below goes through."""
+        return make_operator(self.config.operator_config(), X, params)
 
     # -- training objective -------------------------------------------------
 
@@ -83,25 +97,24 @@ class ExactGP:
     def precompute(self, X, y, params: GPParams, key) -> PredictionCache:
         c = self.config
         return build_prediction_cache(
-            c.kernel, X, y, params, key,
+            self.operator(X, params), y, key,
             precond_rank=c.precond_rank, lanczos_rank=c.lanczos_rank,
-            pred_tol=c.pred_cg_tol, max_cg_iters=c.pred_max_cg_iters,
-            row_block=c.row_block, noise_floor=c.noise_floor)
+            pred_tol=c.pred_cg_tol, max_cg_iters=c.pred_max_cg_iters)
 
     def predict(self, X, Xstar, params: GPParams, cache: PredictionCache,
                 exact_variance: bool = False, include_noise: bool = True):
         c = self.config
-        mean = predict_mean(c.kernel, X, Xstar, params, cache)
+        op = self.operator(X, params)
+        mean = predict_mean(op, Xstar, cache)
         if exact_variance:
             var = predict_var_exact(
-                c.kernel, X, Xstar, params,
+                op, Xstar,
                 precond_rank=c.precond_rank, pred_tol=c.pred_cg_tol,
-                max_cg_iters=c.pred_max_cg_iters, row_block=c.row_block,
-                noise_floor=c.noise_floor, include_noise=include_noise)
+                max_cg_iters=c.pred_max_cg_iters,
+                include_noise=include_noise)
         else:
             var = predict_var_cached(
-                c.kernel, X, Xstar, params, cache,
-                noise_floor=c.noise_floor, include_noise=include_noise)
+                op, Xstar, cache, include_noise=include_noise)
         return mean, var
 
 

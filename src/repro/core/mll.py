@@ -4,10 +4,17 @@ Forward (paper Eq. 1): one mBCG call solves K_hat^{-1}[y_c, z_1..z_t] and
 yields the SLQ log-determinant; the MLL value is
     -0.5 * ( y_c^T K_hat^{-1} y_c + logdet(K_hat) + n log 2pi ).
 
+All kernel access goes through a `repro.core.operators.KernelOperator`
+built by `MLLConfig.operator_config()` — the dense / partitioned /
+Pallas-fused backends (and their bf16-compute fast path) are
+interchangeable here, and `operator_mll_forward` is shared verbatim by the
+sharded engine (`repro.core.distributed`), which passes its ShardedOperator
+instead.
+
 Backward (paper Eq. 2): instead of differentiating through the CG iterations
 (which would store every intermediate), the VJP contracts the saved solves
-against dK/dtheta through the differentiable blockwise quadratic form
-`partitioned.quad_form`:
+against dK/dtheta through the operator's differentiable blockwise quadratic
+form `KernelOperator.quad_form_grads`:
 
     d/dth [ y^T K^-1 y ]    = - u_y^T (dK/dth) u_y,          u_y = K^{-1} y_c
     d/dth [ logdet K ]      =   tr(K^{-1} dK/dth)
@@ -18,7 +25,9 @@ Everything stays O(row_block * n) memory. Gradients flow to the kernel
 hyperparameters AND to X (enabling deep kernel learning, `repro.core.dkl`).
 Probe draws and the preconditioner are treated as constants of the
 estimator (standard BBMM practice; the estimator of the gradient remains
-unbiased for fixed P).
+unbiased for fixed P). The backward always contracts in full precision
+even when the forward ran bf16-compute solves — gradient noise comes from
+the trace estimator, not from the matmul dtype.
 """
 
 from __future__ import annotations
@@ -31,28 +40,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .kernels_math import GPParams, constant_mean, dense_khat, noise_variance
-from .partitioned import kmvm, quad_form, quad_form_partials
+from .kernels_math import GPParams, constant_mean, dense_khat
+from .operators import OperatorConfig, make_operator
 from .pcg import pcg
-from .pivchol import make_preconditioner
 from .slq import slq_logdet_correction
-
-
-def _khat_quad_grads(kind, X, A, V, params, *, row_block, noise_floor):
-    """(g_params, g_X) of q = sum_j a_j^T K_hat v_j, bounded-memory blocks.
-
-    Kernel part via `quad_form_partials` (one slab live at a time); the
-    sigma^2 * sum(A o V) diagonal term in closed form. Half-size blocks:
-    the VJP holds ~6 slab-sized residual buffers per block vs the forward's
-    one, so the backward runs at row_block/2 to keep peak memory level.
-    """
-    gp, g_rows, g_cols = quad_form_partials(
-        kind, X, X, A, V, params, row_block=max(row_block // 2, 64))
-    dot_av = jnp.sum(A * V)
-    gp_noise = jax.grad(
-        lambda p: noise_variance(p, noise_floor) * dot_av)(params)
-    gp = jax.tree.map(jnp.add, gp, gp_noise)
-    return gp, g_rows + g_cols
 
 
 class MLLConfig(NamedTuple):
@@ -67,6 +58,18 @@ class MLLConfig(NamedTuple):
     row_block: int = 1024
     noise_floor: float = 1e-4
     pcg_method: str = "standard"
+    backend: str = "partitioned"          # operator registry key
+    compute_dtype: str | None = None      # "bfloat16" = MXU fast path
+
+    def operator_config(self) -> OperatorConfig:
+        return OperatorConfig(
+            kernel=self.kernel,
+            backend=self.backend,
+            row_block=self.row_block,
+            add_noise=True,
+            noise_floor=self.noise_floor,
+            compute_dtype=self.compute_dtype,
+        )
 
 
 class MLLAux(NamedTuple):
@@ -78,32 +81,70 @@ class MLLAux(NamedTuple):
     rel_residual: jax.Array
 
 
-def _mll_forward_impl(cfg: MLLConfig, X, y, params, key):
-    n = X.shape[0]
-    yc = y - constant_mean(params)
-    precond = make_preconditioner(
-        cfg.kernel, X, params, cfg.precond_rank, cfg.noise_floor)
-    probes = precond.sample(key, cfg.num_probes, dtype=X.dtype)
+def operator_mll_forward(op, y, key, *, precond_rank: int, num_probes: int,
+                         max_cg_iters: int, min_cg_iters: int, cg_tol: float,
+                         pcg_method: str = "standard"):
+    """Paper Eq. 1 against ANY KernelOperator (single-device or sharded).
+
+    y is the operator-local slice of the targets (the full vector on one
+    device, the row-shard chunk inside shard_map); scalar reductions go
+    through op.allreduce, so the same code runs in both worlds.
+
+    Returns ((value, aux), (yc, u_y, U, pinv_z)) — the saved solves the
+    custom VJPs contract against dK/dtheta.
+    """
+    n = op.shape[0]
+    yc = y - constant_mean(op.params)
+    precond = op.preconditioner(precond_rank)
+    probes = precond.sample(key, num_probes, dtype=yc.dtype)
     B = jnp.concatenate([yc[:, None], probes], axis=1)
 
-    def mvm(V):
-        return kmvm(cfg.kernel, X, V, params,
-                    row_block=cfg.row_block, add_noise=True,
-                    noise_floor=cfg.noise_floor)
-
-    res = pcg(mvm, B, precond.solve,
-              max_iters=cfg.max_cg_iters, min_iters=cfg.min_cg_iters,
-              tol=cfg.cg_tol, method=cfg.pcg_method)
+    res = pcg(op, B, precond.solve,
+              max_iters=max_cg_iters, min_iters=min_cg_iters,
+              tol=cg_tol, method=pcg_method)
     u_y = res.solution[:, 0]
     U = res.solution[:, 1:]
     pinv_z = precond.solve(probes)
 
+    # alphas/betas/rz0 are replicated scalars under sharding -> SLQ is free
     logdet = precond.logdet() + slq_logdet_correction(
         res.alphas[:, 1:], res.betas[:, 1:], res.active[:, 1:], res.rz0[1:])
-    quad = jnp.dot(yc, u_y)
+    quad = op.allreduce(jnp.dot(yc, u_y))
     value = -0.5 * (quad + logdet + n * math.log(2.0 * math.pi))
     aux = MLLAux(logdet=logdet, quad=quad,
                  cg_iterations=res.iterations, rel_residual=res.rel_residual)
+    return (value, aux), (yc, u_y, U, pinv_z)
+
+
+def operator_mll_quad_grads(make_op, X, u_y, U, pinv_z):
+    """Paper Eq. 2 assembly, shared by the single-device and sharded VJPs.
+
+    make_op: X -> KernelOperator (full precision — see module docstring).
+    Returns (g_params, g_X) of the MLL w.r.t. (theta, X) BEFORE any
+    cross-device reduction, g_value scaling, or the raw_mean term — the
+    callers layer those on (the sharded VJP psums partials first).
+    """
+    t = max(U.shape[1], 1)
+    op = make_op(X)
+    gp_d, gx_d = op.quad_form_grads(u_y, u_y)
+    # gate the second chain on the first (opaque zero, bitwise identity):
+    # two concurrent block chains would double peak memory
+    link = jax.lax.optimization_barrier(
+        jnp.zeros((), X.dtype)) * gx_d[0, 0]
+    op2 = make_op(X + link)
+    gp_t, gx_t = op2.quad_form_grads(U, pinv_z)
+    g_params = jax.tree.map(lambda a, b: -0.5 * (-a + b / t), gp_d, gp_t)
+    g_X = -0.5 * (-gx_d + gx_t / t)
+    return g_params, g_X
+
+
+def _mll_forward_impl(cfg: MLLConfig, X, y, params, key):
+    op = make_operator(cfg.operator_config(), X, params)
+    (value, aux), (yc, u_y, U, pinv_z) = operator_mll_forward(
+        op, y, key,
+        precond_rank=cfg.precond_rank, num_probes=cfg.num_probes,
+        max_cg_iters=cfg.max_cg_iters, min_cg_iters=cfg.min_cg_iters,
+        cg_tol=cfg.cg_tol, pcg_method=cfg.pcg_method)
     saved = (X, params, yc, u_y, U, pinv_z)
     return (value, aux), saved
 
@@ -126,24 +167,16 @@ def _mll_fwd(cfg, X, y, params, key):
 def _mll_bwd(cfg, saved, cotangents):
     g_value = cotangents[0]  # aux cotangents are ignored (diagnostics)
     X, params, yc, u_y, U, pinv_z = saved
-    t = max(U.shape[1], 1)
+    # the backward surface is operator-owned too, but always full precision;
+    # backend is pinned to "partitioned": quad_form_grads is identical for
+    # every single-device backend (base-class blockwise partials — NOT AD
+    # through the forward, see partitioned.quad_form_partials for why)
+    bwd_cfg = cfg.operator_config()._replace(
+        compute_dtype=None, backend="partitioned")
 
     # d(-0.5[-u_y^T Khat u_y + (1/t) sum_i u_i^T Khat P^{-1}z_i])/d(theta, X)
-    # via explicit blockwise partials (NOT AD through the partitioned
-    # forward — see quad_form_partials for why)
-    u_y2 = u_y[:, None]
-    gp_d, gx_d = _khat_quad_grads(cfg.kernel, X, u_y2, u_y2, params,
-                                  row_block=cfg.row_block,
-                                  noise_floor=cfg.noise_floor)
-    # gate the second chain on the first (opaque zero, bitwise identity):
-    # two concurrent block chains would double peak memory
-    link = jax.lax.optimization_barrier(
-        jnp.zeros((), X.dtype)) * gx_d[0, 0]
-    gp_t, gx_t = _khat_quad_grads(cfg.kernel, X + link, U, pinv_z, params,
-                                  row_block=cfg.row_block,
-                                  noise_floor=cfg.noise_floor)
-    g_params = jax.tree.map(lambda a, b: -0.5 * (-a + b / t), gp_d, gp_t)
-    g_X = -0.5 * (-gx_d + gx_t / t)
+    g_params, g_X = operator_mll_quad_grads(
+        lambda x: make_operator(bwd_cfg, x, params), X, u_y, U, pinv_z)
     # mean parameter: d mll / d mu = sum(u_y); noise & kernel already covered.
     g_params = g_params._replace(
         raw_mean=g_params.raw_mean + jnp.sum(u_y))

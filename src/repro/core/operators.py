@@ -1,0 +1,408 @@
+"""KernelOperator — the single MVM access point for the whole BBMM engine.
+
+The paper's thesis is that exact GP training and prediction need the kernel
+matrix K_hat = K_XX + sigma^2 I only through matrix multiplication. This
+module makes that access pattern a first-class object instead of a
+convention: every consumer (PCG, SLQ, the MLL custom VJP, the prediction
+caches, the benchmarks and launchers) takes a ``KernelOperator`` and never
+dispatches on ``(kind, X, params)`` tuples itself.
+
+Protocol
+--------
+A ``KernelOperator`` binds an ``OperatorConfig`` (kernel family, backend,
+blocking, noise and dtype policy) to concrete training inputs ``X`` and
+hyperparameters ``params`` and exposes:
+
+    matvec(V)            K_hat @ V        (n, t) -> (n, t); the hot path
+    diag()               diag(K_hat)      (n,)
+    shape, dtype         (n, n) and the operand dtype
+    cross_matvec(Z, V)   K(Z, X) @ V      rectangular MVM for prediction
+    kernel_rows(Z)       K(Z, X)          dense rows (prediction RHS only)
+    prior_diag(Z)        diag(K(Z, Z))    prior variance at query points
+    preconditioner(k)    rank-k pivoted-Cholesky preconditioner of K_hat
+    allreduce(x)         sums per-shard partial reductions (identity on a
+                         single device; psum inside the sharded backend)
+    quad_form_grads(A,V) (g_params, g_X) of sum_j a_j^T K_hat v_j — the
+                         bounded-memory backward surface of the MLL VJP
+
+``matvec``/``cross_matvec`` always RETURN the operand dtype; any reduced
+internal precision (see below) never leaks into CG/Lanczos state.
+
+Registry
+--------
+Implementations register under a string name (mirroring
+``repro.models.registry``) and are selected by ``make_operator``:
+
+    dense         materialize K_hat once; O(n^2) memory reference/oracle
+    partitioned   row-block slabs, checkpointed backward — the paper's
+                  O(n)-memory path (`repro.core.partitioned`)
+    pallas        partitioned outer loop + fused Pallas slab MVM
+                  (`repro.kernels.ops.kmvm_block`): the slab never reaches
+                  HBM at all
+    sharded       shard_map over the kernel row axis on a TPU mesh,
+                  composing any inner backend (`repro.core.distributed`;
+                  registered lazily so single-device imports stay light)
+
+    op = make_operator(OperatorConfig(backend="pallas"), X, params)
+    res = pcg(op, B, op.preconditioner(100).solve)
+
+Adding a backend (sparse/compactly-supported kernels, a new accelerator,
+a multi-host mesh) is one registered class; no consumer changes.
+
+Mixed precision
+---------------
+``OperatorConfig.compute_dtype="bfloat16"`` switches the two large matmuls
+of every backend — the distance cross-term X_i X_j^T and the slab-times-RHS
+contraction K V — to bf16 operands with fp32 MXU accumulation
+(``preferred_element_type=float32``). The elementwise kernel phi(d2), the
+noise diagonal, and all CG/Lanczos vectors stay fp32 (or fp64 under x64).
+See EXPERIMENTS.md §Mixed precision for the solve-quality ablation and
+``benchmarks/ablation_tolerance.py`` for the hook.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels_math import (
+    GPParams,
+    kernel_diag,
+    kernel_from_sqdist,
+    kernel_matrix,
+    noise_variance,
+    outputscale,
+    scale_inputs,
+)
+from . import partitioned
+from .pivchol import make_preconditioner
+
+
+class OperatorConfig(NamedTuple):
+    """Static (hashable) kernel-operator configuration.
+
+    kernel:        stationary kernel family (see KERNEL_KINDS).
+    backend:       registry key — "dense" | "partitioned" | "pallas" |
+                   "sharded" (or any registered extension).
+    row_block:     rows per partition slab (partitioned/pallas backends).
+    add_noise:     whether matvec applies K_hat (True) or plain K (False).
+    noise_floor:   sigma^2 floor (see kernels_math.noise_variance).
+    compute_dtype: None = matmuls run in the operand dtype (exact path);
+                   "bfloat16" = bf16 operands + fp32 accumulation in the
+                   two large matmuls (the speed headline on MXU hardware).
+    interpret:     Pallas interpret-mode override (None = auto: interpret
+                   off TPU). Ignored by non-Pallas backends.
+    geom:          DistGeometry for the sharded backend (None otherwise).
+    inner_backend: slab backend composed by the sharded operator.
+    """
+
+    kernel: str = "matern32"
+    backend: str = "partitioned"
+    row_block: int = 1024
+    add_noise: bool = True
+    noise_floor: float = 1e-4
+    compute_dtype: str | None = None
+    interpret: bool | None = None
+    geom: object | None = None
+    inner_backend: str = "partitioned"
+
+
+_REGISTRY: dict[str, type] = {}
+
+
+def register_operator(name: str) -> Callable[[type], type]:
+    """Class decorator: register a KernelOperator backend under `name`."""
+
+    def deco(cls: type) -> type:
+        _REGISTRY[name] = cls
+        cls.backend_name = name
+        return cls
+
+    return deco
+
+
+def operator_backends() -> tuple[str, ...]:
+    """Registered backend names (triggers the lazy sharded registration)."""
+    _ensure_sharded_registered()
+    return tuple(sorted(_REGISTRY))
+
+
+def _ensure_sharded_registered() -> None:
+    if "sharded" not in _REGISTRY:
+        # distributed.py registers ShardedOperator on import; kept lazy so
+        # single-device users never pay for shard_map machinery.
+        from . import distributed  # noqa: F401
+
+
+def _resolve_backend(name: str) -> type:
+    if name not in _REGISTRY:
+        _ensure_sharded_registered()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown operator backend {name!r} "
+            f"(registered: {operator_backends()})") from None
+
+
+def make_operator(config: OperatorConfig, X: jax.Array,
+                  params: GPParams) -> "KernelOperator":
+    """The single factory every consumer goes through."""
+    return _resolve_backend(config.backend)(config, X, params)
+
+
+def _compute_dtype_of(config: OperatorConfig, operand_dtype) -> jnp.dtype | None:
+    """Resolve the matmul dtype; None means 'exact path, no casting'.
+
+    The reference path is only a valid substitute when the operands are
+    already FULL precision: with X *stored* in bf16 and
+    compute_dtype="bfloat16", the mixed path must still engage — it is
+    what provides the fp32 MXU accumulation and fp32 norms/phi the module
+    docstring guarantees (the plain jnp slab would run the distance
+    cancellation and both contractions entirely in bf16)."""
+    if config.compute_dtype is None:
+        return None
+    cdt = jnp.dtype(config.compute_dtype)
+    if cdt == jnp.dtype(operand_dtype) and cdt.itemsize >= 4:
+        return None
+    return cdt
+
+
+def mixed_block_fn(kind: str, compute_dtype) -> Callable:
+    """Per-slab K(Xb, X) @ V with reduced-precision matmuls.
+
+    Matches `partitioned._block_kmvm_dense` semantics (no noise term) but:
+      * the -2<x,y> cross term runs on `compute_dtype` operands with fp32
+        accumulation (preferred_element_type) — the MXU fast path;
+      * norms, phi(d2) and the outputscale stay fp32;
+      * the K @ V contraction again uses `compute_dtype` operands with fp32
+        accumulation, cast back to V.dtype on the way out.
+    """
+    cdt = jnp.dtype(compute_dtype)
+
+    def fn(Xb: jax.Array, X: jax.Array, V: jax.Array,
+           params: GPParams) -> jax.Array:
+        Xb_c = scale_inputs(Xb, params).astype(cdt)
+        X_c = scale_inputs(X, params).astype(cdt)
+        g = jax.lax.dot_general(
+            Xb_c, X_c, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        ni = jnp.sum(jnp.square(Xb_c.astype(jnp.float32)), -1, keepdims=True)
+        nj = jnp.sum(jnp.square(X_c.astype(jnp.float32)), -1, keepdims=True).T
+        d2 = jnp.maximum(ni + nj - 2.0 * g, 0.0)
+        K = kernel_from_sqdist(kind, d2)
+        K = (outputscale(params).astype(jnp.float32) * K).astype(cdt)
+        KV = jax.lax.dot_general(
+            K, V.astype(cdt), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return KV.astype(V.dtype)
+
+    return fn
+
+
+class KernelOperator:
+    """Base class: binds (config, X, params); see the module docstring.
+
+    Subclasses must implement `matvec`; everything else has a sensible
+    single-device default they may override (the sharded backend overrides
+    nearly all of it).
+    """
+
+    backend_name = "abstract"
+
+    def __init__(self, config: OperatorConfig, X: jax.Array,
+                 params: GPParams):
+        self.config = config
+        self.X = X
+        self.params = params
+
+    # -- protocol surface ---------------------------------------------------
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        n = self.X.shape[0]
+        return (n, n)
+
+    @property
+    def dtype(self):
+        return self.X.dtype
+
+    @property
+    def kernel(self) -> str:
+        return self.config.kernel
+
+    def matvec(self, V: jax.Array) -> jax.Array:
+        """K_hat @ V (or K @ V when config.add_noise is False)."""
+        raise NotImplementedError
+
+    def __call__(self, V: jax.Array) -> jax.Array:
+        return self.matvec(V)
+
+    def diag(self) -> jax.Array:
+        d = kernel_diag(self.config.kernel, self.X, self.params)
+        if self.config.add_noise:
+            d = d + noise_variance(self.params, self.config.noise_floor)
+        return d
+
+    def _add_noise(self, out: jax.Array, V: jax.Array) -> jax.Array:
+        if self.config.add_noise:
+            out = out + noise_variance(
+                self.params, self.config.noise_floor) * V
+        return out
+
+    # -- prediction-time surface -------------------------------------------
+
+    def cross_matvec(self, Z: jax.Array, V: jax.Array) -> jax.Array:
+        """K(Z, X) @ V — rectangular, never any noise term."""
+        squeeze = V.ndim == 1
+        if squeeze:
+            V = V[:, None]
+        out = partitioned.kmvm_rect(
+            self.config.kernel, Z, self.X, V, self.params,
+            row_block=self.config.row_block, block_fn=self._block_fn())
+        return out[:, 0] if squeeze else out
+
+    def kernel_rows(self, Z: jax.Array) -> jax.Array:
+        """Dense K(Z, X) rows — O(|Z| n); prediction right-hand sides."""
+        return kernel_matrix(self.config.kernel, Z, self.X, self.params)
+
+    def prior_diag(self, Z: jax.Array) -> jax.Array:
+        return kernel_diag(self.config.kernel, Z, self.params)
+
+    def noise(self) -> jax.Array:
+        return noise_variance(self.params, self.config.noise_floor)
+
+    # -- solver hooks -------------------------------------------------------
+
+    def preconditioner(self, rank: int):
+        """Rank-k pivoted-Cholesky preconditioner of K_hat."""
+        return make_preconditioner(
+            self.config.kernel, self.X, self.params, rank,
+            self.config.noise_floor)
+
+    def allreduce(self, x: jax.Array) -> jax.Array:
+        """Sum partial reductions over row shards (identity here)."""
+        return x
+
+    def quad_form_grads(self, A: jax.Array, V: jax.Array):
+        """(g_params, g_X) of q = sum_j a_j^T K_hat v_j, bounded memory.
+
+        Kernel part via `partitioned.quad_form_partials` (one slab + its
+        VJP residuals live at a time); the sigma^2 sum(A o V) diagonal in
+        closed form. Half-size blocks: the VJP holds ~6 slab-sized residual
+        buffers per block vs the forward's one.
+        """
+        if A.ndim == 1:
+            A = A[:, None]
+        if V.ndim == 1:
+            V = V[:, None]
+        gp, g_rows, g_cols = partitioned.quad_form_partials(
+            self.config.kernel, self.X, self.X, A, V, self.params,
+            row_block=max(self.config.row_block // 2, 64))
+        dot_av = jnp.sum(A * V)
+        gp_noise = jax.grad(
+            lambda p: noise_variance(p, self.config.noise_floor) * dot_av)(
+                self.params)
+        gp = jax.tree.map(jnp.add, gp, gp_noise)
+        return gp, g_rows + g_cols
+
+    # -- internals ----------------------------------------------------------
+
+    @classmethod
+    def slab_block_fn(cls, config: OperatorConfig,
+                      operand_dtype) -> Callable | None:
+        """Per-slab MVM override for a partitioned outer loop. Class-level
+        so composing backends (ShardedOperator) resolve an inner backend's
+        slab math through the registry (`slab_block_fn_for`) without
+        constructing the inner operator. None = the dense jnp slab path."""
+        cdt = _compute_dtype_of(config, operand_dtype)
+        if cdt is None:
+            return None
+        return mixed_block_fn(config.kernel, cdt)
+
+    def _block_fn(self) -> Callable | None:
+        return type(self).slab_block_fn(self.config, self.dtype)
+
+
+@register_operator("dense")
+class DenseOperator(KernelOperator):
+    """Reference backend: materializes K_hat once — O(n^2) memory.
+
+    This is what the paper says standard implementations do and cannot
+    scale; it exists as the oracle the scalable backends are tested
+    against, and as the fastest choice at small n where the slab loop's
+    overhead dominates.
+    """
+
+    def __init__(self, config: OperatorConfig, X: jax.Array,
+                 params: GPParams):
+        super().__init__(config, X, params)
+        self._K_cached: jax.Array | None = None
+
+    def _khat(self) -> jax.Array:
+        """K_hat, built on first matvec. Cached ONLY when concrete: caching
+        a tracer (first call inside a scan/jit trace) would leak it into
+        later traces. Under jit the rebuild is free anyway — XLA CSE/LICM
+        dedups and hoists the X-only computation — and prediction paths
+        that never matvec (cross_matvec/diag) never pay the O(n^2) build."""
+        if self._K_cached is not None:
+            return self._K_cached
+        K = kernel_matrix(self.config.kernel, self.X, self.X, self.params)
+        if self.config.add_noise:
+            K = K + noise_variance(
+                self.params, self.config.noise_floor) * jnp.eye(
+                    self.X.shape[0], dtype=K.dtype)
+        if not isinstance(K, jax.core.Tracer):
+            self._K_cached = K
+        return K
+
+    def matvec(self, V: jax.Array) -> jax.Array:
+        K = self._khat()
+        cdt = _compute_dtype_of(self.config, self.dtype)
+        if cdt is None:
+            return K @ V
+        out = jax.lax.dot_general(
+            K.astype(cdt), V.astype(cdt), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return out.astype(V.dtype)
+
+
+@register_operator("partitioned")
+class PartitionedOperator(KernelOperator):
+    """The paper's O(n)-memory path: row-block slabs, checkpointed backward
+    (`repro.core.partitioned.kmvm`)."""
+
+    def matvec(self, V: jax.Array) -> jax.Array:
+        return partitioned.kmvm(
+            self.config.kernel, self.X, V, self.params,
+            row_block=self.config.row_block,
+            add_noise=self.config.add_noise,
+            noise_floor=self.config.noise_floor,
+            block_fn=self._block_fn())
+
+
+@register_operator("pallas")
+class PallasFusedOperator(PartitionedOperator):
+    """Partitioned outer loop + fused Pallas slab MVM: the (row_block, n)
+    kernel slab lives tile-by-tile in VMEM and never reaches HBM
+    (`repro.kernels.ops.kmvm_block`). Interpret mode runs the same kernel
+    body on CPU."""
+
+    @classmethod
+    def slab_block_fn(cls, config: OperatorConfig, operand_dtype) -> Callable:
+        del operand_dtype  # the wrapper handles dtype policy itself
+        from repro.kernels.ops import pallas_block_fn  # lazy: avoids cycle
+
+        return pallas_block_fn(
+            config.kernel,
+            interpret=config.interpret,
+            compute_dtype=config.compute_dtype)
+
+
+def slab_block_fn_for(backend: str, config: OperatorConfig,
+                      operand_dtype) -> Callable | None:
+    """Resolve a backend's per-slab MVM through the registry — the single
+    dispatch point for operators that compose an inner backend (sharded)."""
+    return _resolve_backend(backend).slab_block_fn(config, operand_dtype)

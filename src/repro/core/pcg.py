@@ -22,9 +22,12 @@ masking instead of a data-dependent while_loop: on a 256-chip mesh every
 device executes the same schedule (no ragged iteration counts -> no
 stragglers), and the compiled HLO is identical across steps.
 
-Distribution is injected through `allreduce`: a function summing per-shard
-partial reductions across the row axis (identity on a single device,
-`lax.psum` under shard_map) — see `repro.core.distributed`.
+Kernel access is injected as a `repro.core.operators.KernelOperator`: one
+object supplies both the MVM (dense / partitioned / Pallas-fused / sharded,
+optionally with a bf16-compute fast path) and the matching `allreduce` — a
+function summing per-shard partial reductions across the row axis (identity
+on a single device, `lax.psum` under shard_map) — see
+`repro.core.distributed`.
 """
 
 from __future__ import annotations
@@ -50,7 +53,7 @@ def _identity(x: jax.Array) -> jax.Array:
 
 
 def pcg(
-    mvm: Callable[[jax.Array], jax.Array],
+    A,
     B: jax.Array,
     precond_solve: Callable[[jax.Array], jax.Array] | None = None,
     *,
@@ -63,16 +66,26 @@ def pcg(
     """Solve K_hat U = B for all columns of B at once.
 
     Args:
-      mvm: v (n, t) -> K_hat v (n, t). The only access to the kernel matrix.
-        Under the distributed engine n is the per-shard row count.
-      B: (n, t) right-hand sides.
+      A: a `repro.core.operators.KernelOperator` (preferred — its `matvec`
+        is the only access to the kernel matrix, and its `allreduce` is
+        picked up automatically), or a bare callable v (n, t) -> K_hat v.
+        Under the sharded backend n is the per-shard row count.
+      B: (n, t) right-hand sides. CG state (residuals, directions,
+        reductions) lives in B.dtype regardless of the operator's internal
+        compute dtype — the mixed-precision path never touches it.
       precond_solve: v -> P^{-1} v; identity if None.
       tol: relative residual threshold ||r||/||b|| (paper: 1.0 for training,
         <= 0.01 for prediction solves).
       allreduce: sums partial scalar reductions over row shards; identity on
-        one device.
+        one device. Defaults to A.allreduce for operator inputs.
       method: "standard" | "pipelined".
     """
+    if hasattr(A, "matvec"):
+        mvm = A.matvec
+        if allreduce is None:
+            allreduce = A.allreduce
+    else:
+        mvm = A
     if B.ndim == 1:
         res = pcg(mvm, B[:, None], precond_solve, max_iters=max_iters,
                   min_iters=min_iters, tol=tol, allreduce=allreduce, method=method)

@@ -4,7 +4,7 @@ After training, two training-data-dependent caches make test-time O(n):
 
   * mean cache  a = K_hat^{-1} y_c  — one tight-tolerance PCG solve
     (paper: eps <= 0.01 is critical at test time). The predictive mean is
-    then mu + K_{x* X} a: a single partitioned MVM, no solves.
+    then mu + K_{x* X} a: a single rectangular MVM, no solves.
   * variance cache — a rank-r Lanczos decomposition Q T Q^T ~= K_hat
     restricted to the Krylov subspace (LOVE-style, Pleiss et al. [28]):
     Var(x*) ~= k** - k_{X x*}^T Q T^{-1} Q^T k_{X x*}, an O(n r) product per
@@ -14,6 +14,11 @@ After training, two training-data-dependent caches make test-time O(n):
 
 Both caches are computed once (the paper's "precomputation" column in
 Table 2) and reused for every prediction.
+
+Every function here takes a `repro.core.operators.KernelOperator` — the
+solves use `op.matvec`, the test-time products use `op.cross_matvec`
+(which runs on the same backend, so e.g. the Pallas-fused path serves
+predictions too), and the preconditioner comes from `op.preconditioner`.
 """
 
 from __future__ import annotations
@@ -23,17 +28,16 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .kernels_math import GPParams, constant_mean, kernel_diag, kernel_matrix
-from .partitioned import kmvm
+from .kernels_math import constant_mean
 from .pcg import pcg
-from .pivchol import make_preconditioner
 
 
 def lanczos(mvm, v0: jax.Array, rank: int):
     """Lanczos with full reorthogonalization.
 
     Returns Q (n, rank), T (rank, rank) symmetric tridiagonal with
-    Q^T A Q = T. Fixed trip count; rank is expected << n.
+    Q^T A Q = T. Fixed trip count; rank is expected << n. State stays in
+    v0.dtype (the operator's reduced compute dtype never leaks in).
     """
     n = v0.shape[0]
     q = v0 / jnp.linalg.norm(v0)
@@ -70,92 +74,68 @@ class PredictionCache(NamedTuple):
 
 
 def build_prediction_cache(
-    kind: str,
-    X: jax.Array,
+    op,
     y: jax.Array,
-    params: GPParams,
     key: jax.Array,
     *,
     precond_rank: int = 100,
     lanczos_rank: int = 128,
     pred_tol: float = 0.01,
     max_cg_iters: int = 400,
-    row_block: int = 1024,
-    noise_floor: float = 1e-4,
 ) -> PredictionCache:
     """The paper's one-time precomputation (tight-tolerance solves)."""
-    yc = y - constant_mean(params)
-    precond = make_preconditioner(kind, X, params, precond_rank, noise_floor)
+    yc = y - constant_mean(op.params)
+    precond = op.preconditioner(precond_rank)
 
-    def mvm(V):
-        return kmvm(kind, X, V, params, row_block=row_block,
-                    add_noise=True, noise_floor=noise_floor)
-
-    res = pcg(mvm, yc[:, None], precond.solve,
+    res = pcg(op, yc[:, None], precond.solve,
               max_iters=max_cg_iters, min_iters=10, tol=pred_tol)
     mean_cache = res.solution[:, 0]
 
-    r = min(lanczos_rank, X.shape[0])
-    v0 = jax.random.normal(key, (X.shape[0],), X.dtype)
-    Q, T = lanczos(mvm, v0, r)
+    n = op.shape[0]
+    r = min(lanczos_rank, n)
+    v0 = jax.random.normal(key, (n,), op.dtype)
+    Q, T = lanczos(op.matvec, v0, r)
     T = T + 1e-6 * jnp.eye(r, dtype=T.dtype)
     T_chol = jnp.linalg.cholesky(T)
     return PredictionCache(mean_cache, Q, T_chol, res.rel_residual)
 
 
-def predict_mean(
-    kind: str, X: jax.Array, Xstar: jax.Array, params: GPParams,
-    cache: PredictionCache,
-) -> jax.Array:
+def predict_mean(op, Xstar: jax.Array, cache: PredictionCache) -> jax.Array:
     """mu + K_{x* X} a — no solves (paper: <1s for 1000 points at n>10^6)."""
-    Kstar = kernel_matrix(kind, Xstar, X, params)
-    return constant_mean(params) + Kstar @ cache.mean_cache
+    return constant_mean(op.params) + op.cross_matvec(Xstar, cache.mean_cache)
 
 
 def predict_var_cached(
-    kind: str, X: jax.Array, Xstar: jax.Array, params: GPParams,
-    cache: PredictionCache, noise_floor: float = 1e-4, include_noise: bool = False,
+    op, Xstar: jax.Array, cache: PredictionCache,
+    include_noise: bool = False,
 ) -> jax.Array:
     """LOVE-style O(n r) predictive variance from the Lanczos cache."""
-    from .kernels_math import noise_variance
-
-    Kstar = kernel_matrix(kind, Xstar, X, params)     # (n*, n)
-    proj = Kstar @ cache.var_Q                         # (n*, r)
+    proj = op.cross_matvec(Xstar, cache.var_Q)         # (n*, r)
     sol = jax.scipy.linalg.cho_solve((cache.var_T_chol, True), proj.T)  # (r, n*)
     correction = jnp.sum(proj * sol.T, axis=1)
-    kss = kernel_diag(kind, Xstar, params)
-    var = jnp.maximum(kss - correction, 1e-10)
+    var = jnp.maximum(op.prior_diag(Xstar) - correction, 1e-10)
     if include_noise:
-        var = var + noise_variance(params, noise_floor)
+        var = var + op.noise()
     return var
 
 
 def predict_var_exact(
-    kind: str, X: jax.Array, Xstar: jax.Array, params: GPParams,
+    op, Xstar: jax.Array,
     *,
     precond_rank: int = 100,
     pred_tol: float = 0.01,
     max_cg_iters: int = 400,
-    row_block: int = 1024,
-    noise_floor: float = 1e-4,
     include_noise: bool = False,
 ) -> jax.Array:
     """Exact predictive variance: PCG-solve K_hat^{-1} k_{X x*} per test point
     (batched over the test set as mBCG columns)."""
-    from .kernels_math import noise_variance
+    precond = op.preconditioner(precond_rank)
 
-    precond = make_preconditioner(kind, X, params, precond_rank, noise_floor)
-
-    def mvm(V):
-        return kmvm(kind, X, V, params, row_block=row_block,
-                    add_noise=True, noise_floor=noise_floor)
-
-    Kxs = kernel_matrix(kind, X, Xstar, params)        # (n, n*)
-    res = pcg(mvm, Kxs, precond.solve,
+    Kxs = op.kernel_rows(Xstar).T                      # (n, n*)
+    res = pcg(op, Kxs, precond.solve,
               max_iters=max_cg_iters, min_iters=10, tol=pred_tol)
     correction = jnp.sum(Kxs * res.solution, axis=0)
-    kss = kernel_diag(kind, Xstar, params)
-    var = jnp.maximum(kss - correction, 1e-10)
+    var = jnp.maximum(op.prior_diag(Xstar) - correction, 1e-10)
     if include_noise:
-        var = var + noise_variance(params, noise_floor)
+        var = var + op.noise()
     return var

@@ -78,6 +78,34 @@ def slq_logdet_correction(
     return jnp.mean(per_probe)
 
 
+def slq_logdet(
+    op,
+    key: jax.Array,
+    *,
+    num_probes: int = 8,
+    precond_rank: int = 100,
+    max_iters: int = 100,
+    tol: float = 1e-8,
+    method: str = "standard",
+) -> jax.Array:
+    """Standalone SLQ estimate of logdet(K_hat) from a KernelOperator.
+
+    Runs one mBCG solve on probes z ~ N(0, P) drawn from the operator's
+    pivoted-Cholesky preconditioner and assembles logdet(P) + the Lanczos
+    correction. This is the logdet the MLL forward gets for free from its
+    shared solve (`repro.core.mll`); use this entry point when only the
+    log-determinant is needed (e.g. model comparison, ablations).
+    """
+    from .pcg import pcg  # local import: pcg has no slq dependency
+
+    precond = op.preconditioner(precond_rank)
+    probes = precond.sample(key, num_probes, dtype=op.dtype)
+    res = pcg(op, probes, precond.solve, max_iters=max_iters,
+              min_iters=3, tol=tol, method=method)
+    return precond.logdet() + slq_logdet_correction(
+        res.alphas, res.betas, res.active, res.rz0)
+
+
 def exact_logdet(A: jax.Array) -> jax.Array:
     """Dense reference: logdet via Cholesky. Test oracle only."""
     L = jnp.linalg.cholesky(A)

@@ -47,34 +47,47 @@ from repro.core.kernels_math import kernel_from_sqdist
 DEFAULT_BM = 256
 DEFAULT_BN = 512
 
+# renamed TPUCompilerParams -> CompilerParams across jax versions
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
 
-def _kmvm_kernel(kind: str, xi_ref, xj_ref, v_ref, out_ref):
-    """One (i, j) grid step: out[i] += phi(d2(Xi_i, Xj_j)) @ V_j."""
+
+def _kmvm_kernel(kind: str, compute_dtype, xi_ref, xj_ref, v_ref, out_ref):
+    """One (i, j) grid step: out[i] += phi(d2(Xi_i, Xj_j)) @ V_j.
+
+    compute_dtype is the MXU operand dtype of the two matmuls (fp32 by
+    default, bf16 on the mixed-precision path); BOTH accumulate in fp32
+    via preferred_element_type, and phi/norms always run fp32 on the VPU.
+    """
     j = pl.program_id(1)
 
     @pl.when(j == 0)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    xi = xi_ref[...].astype(jnp.float32)   # (bm, d)
-    xj = xj_ref[...].astype(jnp.float32)   # (bn, d)
-    v = v_ref[...].astype(jnp.float32)     # (bn, t)
+    xi = xi_ref[...].astype(compute_dtype)   # (bm, d)
+    xj = xj_ref[...].astype(compute_dtype)   # (bn, d)
+    v = v_ref[...].astype(compute_dtype)     # (bn, t)
 
-    # MXU: cross term; VPU: norms
+    # MXU: cross term (fp32 accumulation); VPU: norms in fp32
     g = jax.lax.dot_general(
         xi, xj, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
-    ni = jnp.sum(xi * xi, axis=1, keepdims=True)       # (bm, 1)
-    nj = jnp.sum(xj * xj, axis=1, keepdims=True).T     # (1, bn)
+    xi32 = xi.astype(jnp.float32)
+    xj32 = xj.astype(jnp.float32)
+    ni = jnp.sum(xi32 * xi32, axis=1, keepdims=True)       # (bm, 1)
+    nj = jnp.sum(xj32 * xj32, axis=1, keepdims=True).T     # (1, bn)
     d2 = jnp.maximum(ni + nj - 2.0 * g, 0.0)
 
     k = kernel_from_sqdist(kind, d2)                   # (bm, bn) in VMEM only
 
     out_ref[...] += jax.lax.dot_general(
-        k, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        k.astype(compute_dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("kind", "bm", "bn", "interpret"))
+    jax.jit, static_argnames=("kind", "bm", "bn", "interpret",
+                              "compute_dtype"))
 def kmvm_pallas(
     kind: str,
     Xi: jax.Array,   # (m, d)  pre-scaled rows, m % bm == 0
@@ -84,6 +97,7 @@ def kmvm_pallas(
     bm: int = DEFAULT_BM,
     bn: int = DEFAULT_BN,
     interpret: bool = False,
+    compute_dtype: str = "float32",
 ) -> jax.Array:
     """Fused phi(dist(Xi, Xj)) @ V. Shapes must be pre-padded (see ops.py)."""
     m, d = Xi.shape
@@ -93,7 +107,7 @@ def kmvm_pallas(
 
     grid = (m // bm, n // bn)
     return pl.pallas_call(
-        functools.partial(_kmvm_kernel, kind),
+        functools.partial(_kmvm_kernel, kind, jnp.dtype(compute_dtype)),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
@@ -102,7 +116,7 @@ def kmvm_pallas(
         ],
         out_specs=pl.BlockSpec((bm, t), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((m, t), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(Xi, Xj, V)

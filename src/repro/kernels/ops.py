@@ -45,32 +45,42 @@ def kmvm_block(
     bm: int = DEFAULT_BM,
     bn: int = DEFAULT_BN,
     interpret: bool | None = None,
+    compute_dtype: str | None = None,
 ) -> jax.Array:
     """K(Xi, Xj) @ V via the fused Pallas kernel; arbitrary shapes/dtypes.
 
     Semantics identical to `repro.kernels.ref.kmvm_ref` (no noise term —
     the diagonal sigma^2 V is the caller's O(n) epilogue).
+
+    compute_dtype: MXU operand dtype of the in-kernel matmuls. "bfloat16"
+    halves the HBM operand traffic as well (tiles are stored pre-cast) and
+    accumulates in fp32; None/"float32" is the exact path.
     """
     if interpret is None:
         interpret = _auto_interpret()
+    cdt = jnp.dtype(compute_dtype if compute_dtype is not None else jnp.float32)
     squeeze = V.ndim == 1
     if squeeze:
         V = V[:, None]
     m, _ = Xi.shape
     n, t = V.shape
 
-    Xi_s = scale_inputs(Xi, params).astype(jnp.float32)
-    Xj_s = scale_inputs(Xj, params).astype(jnp.float32)
-    Vs = (outputscale(params) * V).astype(jnp.float32)
+    Xi_s = scale_inputs(Xi, params).astype(cdt)
+    Xj_s = scale_inputs(Xj, params).astype(cdt)
+    Vs = (outputscale(params) * V.astype(jnp.float32)).astype(cdt)
 
-    bm_eff = min(bm, _round_up(m, 8))
-    bn_eff = min(bn, _round_up(n, _LANE))
+    # sublane tiling: fp32 wants multiples of 8, 16-bit dtypes of 16 —
+    # Xi blocks are (bm, d) and Xj/V blocks are (bn, d)/(bn, t), so BOTH
+    # block row counts must honor the operand dtype's sublane multiple
+    sublane = 16 if cdt.itemsize < 4 else 8
+    bm_eff = min(_round_up(bm, sublane), _round_up(m, sublane))
+    bn_eff = min(_round_up(bn, sublane), _round_up(n, _LANE))
     Xi_p = _pad_axis(_pad_axis(Xi_s, 0, bm_eff), 1, _LANE)
     Xj_p = _pad_axis(_pad_axis(Xj_s, 0, bn_eff), 1, _LANE)
     V_p = _pad_axis(_pad_axis(Vs, 0, bn_eff), 1, _LANE)
 
     out = kmvm_pallas(kind, Xi_p, Xj_p, V_p, bm=bm_eff, bn=bn_eff,
-                      interpret=interpret)
+                      interpret=interpret, compute_dtype=str(cdt))
     out = out[:m, :t].astype(V.dtype)
     return out[:, 0] if squeeze else out
 
@@ -80,12 +90,13 @@ def _round_up(x: int, m: int) -> int:
 
 
 def pallas_block_fn(kind: str, *, bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
-                    interpret: bool | None = None):
+                    interpret: bool | None = None,
+                    compute_dtype: str | None = None):
     """Adapter for `partitioned.kmvm(..., block_fn=...)`: per-partition slab
     MVMs go through the fused kernel instead of the dense jnp path."""
 
     def fn(Xb, X, V, params):
         return kmvm_block(kind, Xb, X, V, params, bm=bm, bn=bn,
-                          interpret=interpret)
+                          interpret=interpret, compute_dtype=compute_dtype)
 
     return fn

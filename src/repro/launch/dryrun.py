@@ -120,7 +120,10 @@ def _two_pass(build_lowered, cfg, cell, n_devices: int, depth: int) -> dict:
     cost = {"flops": total["flops"], "bytes accessed": total["bytes"],
             "transcendentals": total["transcendentals"]}
     mf = rl.model_flops_for(cfg, cell)
-    roof = rl.analyze(cost, total["coll"], mf, n_devices)
+    # GP cells: charge the operator's matmul dtype (fp32 default, bf16 on
+    # the mixed-precision path); LM cells train in bf16
+    cdt = getattr(cfg, "compute_dtype", "bf16") or "float32"
+    roof = rl.analyze(cost, total["coll"], mf, n_devices, compute_dtype=cdt)
     return {
         "cost": cost,
         "collectives": total["coll"],
@@ -194,9 +197,25 @@ def run_lm_cell(arch_id: str, shape_name: str, mesh, *, lr=3e-4,
     return res
 
 
-def run_gp_cell(kind: str, mesh, pcg_method="standard", mode=None) -> dict:
+def run_gp_cell(kind: str, mesh, pcg_method="standard", mode=None,
+                backend=None, compute_dtype=None) -> dict:
     from repro.configs.gp_exact_1m import CONFIG
     GP = CONFIG if mode is None else CONFIG._replace(mode=mode)
+    if backend == "pallas":
+        # Off-TPU the Pallas kernel auto-selects interpret mode, so the
+        # compiled artifact would be the interpreter's emulation HLO —
+        # cost_analysis would report the emulation's flops/bytes (every
+        # kernel tile materialized), describing neither the fused kernel's
+        # compute nor its HBM traffic. Refuse rather than dump bogus cells;
+        # run this on real TPU hosts where the kernel actually lowers.
+        raise ValueError(
+            "--gp-backend pallas is only meaningful on a TPU host: the "
+            "CPU dry-run would measure the Pallas interpreter, not the "
+            "fused kernel (see repro.kernels.ops._auto_interpret)")
+    if backend is not None:
+        GP = GP._replace(backend=backend)
+    if compute_dtype is not None:
+        GP = GP._replace(compute_dtype=compute_dtype)
     cell = [c for c in gp_cells(GP) if c.kind == kind][0]
     n_devices = mesh.devices.size
     xs = gp_input_specs(GP)
@@ -226,7 +245,8 @@ def run_gp_cell(kind: str, mesh, pcg_method="standard", mode=None) -> dict:
     res = _two_pass(build, GP, cell, n_devices, depth)
     res.update({"cell": cell._asdict(), "status": "ok",
                 "n_devices": n_devices, "gp_mode": GP.mode,
-                "pcg_method": pcg_method})
+                "pcg_method": pcg_method, "gp_backend": GP.backend,
+                "gp_compute_dtype": GP.compute_dtype or "float32"})
     return res
 
 
@@ -241,6 +261,9 @@ def main():
     ap.add_argument("--gp-mode", default=None, choices=("1d", "2d"))
     ap.add_argument("--pcg-method", default="standard",
                     choices=("standard", "pipelined"))
+    ap.add_argument("--gp-backend", default=None,
+                    choices=("partitioned", "pallas"))
+    ap.add_argument("--gp-dtype", default=None, choices=("bfloat16",))
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--tag", default="", help="suffix for output filenames")
     ap.add_argument("--override", default="",
@@ -268,7 +291,9 @@ def main():
                 tag = f"{arch}__{kind}__{mesh_name}{args.tag}"
                 try:
                     r = run_gp_cell(kind, mesh, pcg_method=args.pcg_method,
-                                    mode=args.gp_mode)
+                                    mode=args.gp_mode,
+                                    backend=args.gp_backend,
+                                    compute_dtype=args.gp_dtype)
                 except Exception:
                     r = {"cell": {"arch": arch, "shape": kind}, "status": "error",
                          "traceback": traceback.format_exc()}

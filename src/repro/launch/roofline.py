@@ -28,8 +28,25 @@ from typing import NamedTuple
 
 # TPU v5e per-chip constants (assignment-specified)
 PEAK_FLOPS = 197e12        # bf16 FLOP/s
+PEAK_FLOPS_FP32 = PEAK_FLOPS / 2   # MXU fp32 operands run at half rate
 HBM_BW = 819e9             # bytes/s
 LINK_BW = 50e9             # bytes/s per ICI link
+
+
+def peak_flops_for(compute_dtype: str | None) -> float:
+    """MXU peak for the cell's matmul operand dtype. The KernelOperator
+    mixed-precision path ("bfloat16") earns the full bf16 peak; fp32
+    operands (the exact GP default) are charged at half — this is exactly
+    the 2x the bf16-compute operator option buys on compute-bound cells.
+
+    Known coarseness: one dtype is charged for the WHOLE cell. A bf16
+    gp_train cell's MLL backward is pinned to fp32 (see mll._mll_bwd), so
+    its ~10-12% backward flop share (EXPERIMENTS.md §Roofline) is
+    over-credited 2x — a <= ~6% optimistic skew on t_compute, consistent
+    across cells."""
+    if compute_dtype in (None, "fp32", "float32", "f32"):
+        return PEAK_FLOPS_FP32
+    return PEAK_FLOPS
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
@@ -134,12 +151,12 @@ class Roofline(NamedTuple):
 
 
 def analyze(cost: dict, coll: dict, model_flops_global: float,
-            n_devices: int) -> Roofline:
+            n_devices: int, compute_dtype: str = "bf16") -> Roofline:
     flops = float(cost.get("flops", 0.0) or 0.0)
     byts = float(cost.get("bytes accessed", 0.0) or 0.0)
     cb = float(coll["total"])
     wb = float(coll.get("wire", cb))
-    t_c = flops / PEAK_FLOPS
+    t_c = flops / peak_flops_for(compute_dtype)
     t_m = byts / HBM_BW
     t_x = cb / LINK_BW
     t_w = wb / LINK_BW

@@ -138,7 +138,9 @@ def make_gp_train_step(gp_cfg, mesh: Mesh, *, lr: float = 0.1,
     cfg = DistMLLConfig(kernel=gp_cfg.kernel, precond_rank=gp_cfg.precond_rank,
                         num_probes=gp_cfg.num_probes,
                         max_cg_iters=gp_cfg.train_cg_iters,
-                        pcg_method=pcg_method)
+                        pcg_method=pcg_method,
+                        backend=gp_cfg.backend,
+                        compute_dtype=gp_cfg.compute_dtype)
     mll = make_dist_mll(geom, cfg)
     vec = geom.vector_pspec()
 
@@ -165,6 +167,8 @@ def make_gp_predict_setup(gp_cfg, mesh: Mesh):
 
     geom = make_geometry(mesh, gp_cfg.n, gp_cfg.d, mode=gp_cfg.mode,
                          row_block=gp_cfg.row_block)
-    cfg = DistMLLConfig(kernel=gp_cfg.kernel, precond_rank=gp_cfg.precond_rank)
+    cfg = DistMLLConfig(kernel=gp_cfg.kernel, precond_rank=gp_cfg.precond_rank,
+                        backend=gp_cfg.backend,
+                        compute_dtype=gp_cfg.compute_dtype)
     return make_mean_cache_solve(mesh, geom, cfg, tol=0.01,
                                  max_iters=gp_cfg.pred_cg_iters), geom

@@ -38,6 +38,12 @@ def main():
     ap.add_argument("--ckpt", default="checkpoints")
     ap.add_argument("--gp-mode", default="2d", choices=("1d", "2d"))
     ap.add_argument("--gp-n", type=int, default=8192)
+    ap.add_argument("--gp-backend", default="partitioned",
+                    choices=("partitioned", "pallas"),
+                    help="inner KernelOperator slab backend per device tile")
+    ap.add_argument("--gp-dtype", default="float32",
+                    choices=("float32", "bfloat16"),
+                    help="operator compute dtype (bf16 = MXU fast path)")
     args = ap.parse_args()
     _maybe_init_distributed()
 
@@ -90,13 +96,16 @@ def _train_gp(args):
     X = jnp.asarray(s.X_train[:n], jnp.float32)
     y = jnp.asarray(s.y_train[:n], jnp.float32)
     geom = make_geometry(mesh, n, X.shape[1], mode=args.gp_mode)
+    gp_dtype = None if args.gp_dtype == "float32" else args.gp_dtype
     cfg = DistMLLConfig(precond_rank=100, num_probes=8, max_cg_iters=20,
-                        cg_tol=1.0)
+                        cg_tol=1.0, backend=args.gp_backend,
+                        compute_dtype=gp_dtype)
     vg = make_mll_value_and_grad(mesh, geom, cfg)
     params = init_params(noise=0.3, dtype=jnp.float32)
     state = adam_init(params)
     Xr, ys = replicate(mesh, X), shard_vector(mesh, geom, y)
-    print(f"[train-gp] n={n} mode={args.gp_mode} "
+    print(f"[train-gp] n={n} mode={args.gp_mode} backend={args.gp_backend} "
+          f"dtype={args.gp_dtype} "
           f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
     for step_i in range(args.steps):
         loss, aux, grads = vg(Xr, ys, replicate(mesh, params),

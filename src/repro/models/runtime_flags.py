@@ -20,6 +20,30 @@ def unroll_enabled() -> bool:
     return os.environ.get("REPRO_DRYRUN_UNROLL", "0") == "1"
 
 
+@jax.custom_vjp
+def materialize(x):
+    """Differentiable `optimization_barrier`: pins a value as a fusion /
+    scheduling boundary on BOTH passes. `jax.lax.optimization_barrier` has
+    no differentiation rule (the raw primitive is only safe on constants or
+    outside grad), so activations on the grad path — e.g. the conv chain
+    and chunk cumsums in `repro.models.ssd`, which fusion would otherwise
+    recompute inside every chunk consumer — go through this wrapper. The
+    cotangent is barriered too: the backward has the same duplication
+    hazard."""
+    return jax.lax.optimization_barrier(x)
+
+
+def _materialize_fwd(x):
+    return jax.lax.optimization_barrier(x), None
+
+
+def _materialize_bwd(_, g):
+    return (jax.lax.optimization_barrier(g),)
+
+
+materialize.defvjp(_materialize_fwd, _materialize_bwd)
+
+
 def scan_unroll():
     """For INNER fixed-trip loops (attention/CE/SSD chunks, kernel blocks):
     fully unrolled under the dry-run flag."""

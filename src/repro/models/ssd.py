@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from .layers import rmsnorm
+from .runtime_flags import materialize
 
 
 def ssd_params(key, cfg, dtype):
@@ -73,7 +74,7 @@ def ssd_apply(p, cfg, x):
     # fusion otherwise RECOMPUTES it inside each consumer kernel (~640
     # duplicated (B,S,conv_dim) elementwise passes in the unrolled 32-chunk
     # program — 3.4e10 of 3.1e11 total flops; see EXPERIMENTS §Perf)
-    xbc = jax.lax.optimization_barrier(xbc)
+    xbc = materialize(xbc)
     xs = xbc[..., :dinner].reshape(bsz, s, h, pdim)
     Bm = xbc[..., dinner:dinner + n]                        # (B, S, N)
     Cm = xbc[..., dinner + n:]                              # (B, S, N)
@@ -88,7 +89,7 @@ def ssd_apply(p, cfg, x):
     la_c = jnp.cumsum(a_log.reshape(bsz, nc, q, h), axis=2)  # within-chunk cumlog
     # same fusion-duplication hazard for the cumsum (a reduce-window feeding
     # every chunk): one materialization instead of nc recomputes
-    la_c = jax.lax.optimization_barrier(la_c)
+    la_c = materialize(la_c)
 
     def chunk_step(Hstate, inputs):
         xc, Bc, Cc, dtc, lac = inputs  # (B, q, ...) for this chunk
@@ -120,7 +121,7 @@ def ssd_apply(p, cfg, x):
         # duplicates the whole carry chain into every consumer — chunk i's
         # state recomputed from scratch i times, an O(nc^2/2) flop blowup
         # (measured 2-5x on 32-128 chunks; see EXPERIMENTS §Perf)
-        Hstate = jax.lax.optimization_barrier(Hstate)
+        Hstate = materialize(Hstate)
         return Hstate, y
 
     from .runtime_flags import scan_unroll

@@ -17,13 +17,18 @@ import numpy as np
 def _ravel(pytree):
     leaves, tdef = jax.tree.flatten(pytree)
     shapes = [l.shape for l in leaves]
+    dtypes = [l.dtype for l in leaves]
     sizes = [int(np.prod(s)) if s else 1 for s in shapes]
     flat = jnp.concatenate([jnp.reshape(l, (-1,)) for l in leaves]) if leaves else jnp.zeros((0,))
 
     def unravel(vec):
+        # restore each leaf's ORIGINAL dtype: the optimizer promotes the
+        # flat vector to fp64 under x64, and fp64 params meeting fp32 data
+        # downstream would rely on implicit promotion (and trip the
+        # scatter-dtype FutureWarning in e.g. pivoted_cholesky)
         out, off = [], 0
-        for s, sz in zip(shapes, sizes):
-            out.append(jnp.reshape(vec[off:off + sz], s))
+        for s, dt, sz in zip(shapes, dtypes, sizes):
+            out.append(jnp.reshape(vec[off:off + sz], s).astype(dt))
             off += sz
         return tdef.unflatten(out)
 

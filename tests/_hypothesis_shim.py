@@ -1,0 +1,90 @@
+"""Deterministic fallback for the optional `hypothesis` dependency.
+
+The property tests are written against the real hypothesis API; when it is
+installed they get shrinking, example databases, and adaptive generation.
+This container does not ship it, so the test modules fall back to this shim:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_shim import given, settings, strategies as st
+
+The shim replays each property on `max_examples` pseudo-random samples
+drawn from a generator seeded by the test name — fully deterministic across
+runs, no external dependency, same assertion surface. Only the strategy
+combinators the suite uses are provided (integers, floats, sampled_from).
+"""
+
+from __future__ import annotations
+
+import zlib
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def _integers(min_value, max_value):
+    return _Strategy(lambda r: int(r.integers(min_value, max_value + 1)))
+
+
+def _floats(min_value, max_value):
+    return _Strategy(lambda r: float(r.uniform(min_value, max_value)))
+
+
+def _sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda r: elements[int(r.integers(0, len(elements)))])
+
+
+class _StrategiesNamespace:
+    integers = staticmethod(_integers)
+    floats = staticmethod(_floats)
+    sampled_from = staticmethod(_sampled_from)
+
+
+strategies = _StrategiesNamespace()
+
+
+def settings(deadline=None, max_examples: int = 10, **_ignored):
+    """Record max_examples on the wrapped test; other knobs are no-ops."""
+
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strats):
+    """Run the test body on deterministic samples of the strategies.
+
+    Deliberately does NOT functools.wraps the test: pytest must see the
+    (*args, **kwargs) signature, not the property's parameters, or it would
+    try to resolve them as fixtures.
+    """
+
+    def deco(fn):
+        def run(*args, **kwargs):
+            n = getattr(run, "_shim_max_examples",
+                        getattr(fn, "_shim_max_examples", 10))
+            rng = np.random.default_rng(
+                zlib.adler32(fn.__name__.encode()) & 0xFFFFFFFF)
+            for i in range(n):
+                drawn = {k: s.draw(rng) for k, s in strats.items()}
+                try:
+                    fn(*args, **{**kwargs, **drawn})
+                except Exception as e:  # surface the failing example
+                    raise AssertionError(
+                        f"{fn.__name__} failed on shim example {i}: "
+                        f"{drawn!r}") from e
+
+        run.__name__ = fn.__name__
+        run.__doc__ = fn.__doc__
+        run._shim_max_examples = getattr(fn, "_shim_max_examples", 10)
+        return run
+
+    return deco

@@ -8,7 +8,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep; deterministic fallback (conftest dir is on sys.path)
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core.kernels_math import init_params
 from repro.kernels.ops import kmvm_block, pallas_block_fn

@@ -2,7 +2,10 @@
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep; deterministic fallback (conftest dir is on sys.path)
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core import (
     dense_khat, init_params, kernel_matrix, make_preconditioner,

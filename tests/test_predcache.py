@@ -84,6 +84,6 @@ def test_prediction_reuses_cache_without_solves(gp_data, rng):
     cache = gp.precompute(X, y, params, jax.random.PRNGKey(0))
     Xs = jnp.asarray(rng.normal(size=(5, X.shape[1])))
     from repro.core.predcache import predict_mean
-    jaxpr = jax.make_jaxpr(
-        lambda xs: predict_mean("matern32", X, xs, params, cache))(Xs)
+    op = gp.operator(X, params)
+    jaxpr = jax.make_jaxpr(lambda xs: predict_mean(op, xs, cache))(Xs)
     assert "while" not in str(jaxpr) and "scan" not in str(jaxpr)
