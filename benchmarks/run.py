@@ -9,6 +9,7 @@ One module per paper table/figure (+ extra ablations):
     fig4_subset         Fig 4    subset-of-data curves
     ablation_tolerance  Sec 3    CG tolerance train vs predict
     roofline_report     §Roofline tables from experiments/dryrun/*.json
+    serve_latency       §Serving p50/p99/QPS: backend x chunk x batch sweep
 """
 
 import argparse
@@ -26,7 +27,7 @@ def main():
 
     from . import (ablation_tolerance, fig1_fig5_init, fig2_multidevice,
                    fig3_inducing, fig4_subset, roofline_report,
-                   table1_accuracy, table2_timing)
+                   serve_latency, table1_accuracy, table2_timing)
 
     benches = {
         "table1_accuracy": (lambda: table1_accuracy.run(
@@ -38,6 +39,7 @@ def main():
         "fig4_subset": fig4_subset.run,
         "ablation_tolerance": ablation_tolerance.run,
         "roofline_report": roofline_report.run,
+        "serve_latency": serve_latency.run,
     }
     if args.only:
         keep = args.only.split(",")

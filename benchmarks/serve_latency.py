@@ -1,0 +1,84 @@
+"""Serving latency: backend x chunk size x batch size sweep.
+
+Beyond-paper companion to Table 2: that table establishes that prediction
+cost is cache-dominated; this bench measures the SERVING side of the claim
+— end-to-end request latency (p50/p99) and throughput (QPS) for many small
+concurrent requests riding the micro-batched PredictionEngine
+(`repro.serve`). Sweeps the operator backend the artifact is restored onto,
+the engine's fixed chunk size, and the batcher's max_batch. CPU numbers
+document the comparison shape (bigger launches amortize dispatch; chunk
+size trades tail latency against launch count); rerun on TPU hardware for
+the absolute columns in EXPERIMENTS.md §Serving.
+"""
+
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import OperatorConfig, init_params, make_operator
+from repro.serve import BatcherConfig, MicroBatcher, PredictionEngine, fit_posterior
+
+from .common import load, write_rows
+
+BACKENDS = ("dense", "partitioned")
+CHUNKS = (128, 512)
+MAX_BATCH = (32, 256)
+N_REQ = 120
+POINTS_PER_REQ = 4
+CLIENTS = 8
+
+
+def run():
+    X, y, _, _, Xt, _ = load("bike", 2400)
+    # latency is hyperparameter-independent: skip fitting, build the caches
+    # from the default init (tol 0.01 solve is still the real precompute)
+    params = init_params(noise=0.2, dtype=jnp.float32)
+    op = make_operator(OperatorConfig(kernel="matern32",
+                                      backend="partitioned", row_block=512),
+                       X, params)
+    art = fit_posterior(op, y, jax.random.PRNGKey(0),
+                        precond_rank=50, lanczos_rank=64)
+
+    rng = np.random.default_rng(0)
+    pool = np.asarray(Xt)
+    queries = [pool[rng.integers(0, pool.shape[0], size=POINTS_PER_REQ)]
+               for _ in range(N_REQ)]
+
+    rows = []
+    for backend in BACKENDS:
+        for chunk in CHUNKS:
+            engine = PredictionEngine(art, backend=backend, chunk_size=chunk)
+            engine.warmup()
+            for mb in MAX_BATCH:
+                batcher = MicroBatcher(engine, BatcherConfig(
+                    max_batch=mb, max_wait_ms=2.0,
+                    bucket_sizes=(16, 64, max(mb, 64))))
+
+                def one(q):
+                    t0 = time.perf_counter()
+                    batcher.predict(q)
+                    return time.perf_counter() - t0
+
+                with ThreadPoolExecutor(CLIENTS) as ex:
+                    t0 = time.perf_counter()
+                    lats = np.asarray(list(ex.map(one, queries)))
+                    wall = time.perf_counter() - t0
+                batcher.close()
+                p50, p99 = np.percentile(lats, (50, 99)) * 1e3
+                rows.append([backend, chunk, mb,
+                             round(float(p50), 2), round(float(p99), 2),
+                             round(N_REQ / wall, 1), batcher.batches_run])
+                print(f"[serve_latency] {backend} chunk={chunk} "
+                      f"max_batch={mb}: p50={p50:.1f}ms p99={p99:.1f}ms "
+                      f"qps={N_REQ / wall:.0f} launches={batcher.batches_run}")
+
+    write_rows("serve_latency",
+               ["backend", "chunk", "max_batch", "p50_ms", "p99_ms", "qps",
+                "launches"], rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,8 +1,12 @@
-"""Quickstart: train an exact GP with BBMM + partitioned MVMs, predict, and
-compare against the SGPR/SVGP baselines — the paper in ~60 lines.
+"""Quickstart: train an exact GP with BBMM + partitioned MVMs, predict,
+compare against the SGPR/SVGP baselines, then save the posterior as a
+servable artifact and predict through the batched engine — the paper plus
+its serving story in ~80 lines.
 
     PYTHONPATH=src python examples/quickstart.py
 """
+
+import time
 
 import jax
 import jax.numpy as jnp
@@ -11,6 +15,7 @@ from repro.core import ExactGP, ExactGPConfig, rmse, gaussian_nll
 from repro.core.sgpr import sgpr_precompute, sgpr_predict
 from repro.core.svgp import svgp_predict
 from repro.data import make_regression_dataset
+from repro.serve import PredictionEngine, fit_posterior, load_artifact, save_artifact
 from repro.train.gp_trainer import GPTrainConfig, fit_exact_gp, fit_sgpr, fit_svgp
 
 
@@ -36,8 +41,11 @@ def main():
                         pretrain_lbfgs_steps=5, pretrain_adam_steps=5,
                         finetune_adam_steps=3)
     res = fit_exact_gp(gp, X, y, cfg=cfg, verbose=True)
-    cache = gp.precompute(X, y, res.params, jax.random.PRNGKey(0))
-    mean, var = gp.predict(X, Xt, res.params, cache)
+    # one-time precomputation as a servable PosteriorArtifact (same caches
+    # gp.precompute would build, plus everything restore needs)
+    art = fit_posterior(gp.operator(X, res.params), y, jax.random.PRNGKey(0),
+                        precond_rank=50, lanczos_rank=100)
+    mean, var = gp.predict(X, Xt, res.params, art.cache())
     print(f"exact GP  : rmse={float(rmse(mean, yt)):.4f} "
           f"nll={float(gaussian_nll(mean, var, yt)):.4f} "
           f"({res.seconds:.1f}s train)")
@@ -54,6 +62,17 @@ def main():
     mv, vv = svgp_predict("matern32", Xt, vp)
     print(f"SVGP m=128: rmse={float(rmse(mv, yt)):.4f} "
           f"nll={float(gaussian_nll(mv, vv, yt)):.4f} ({secs:.1f}s train)")
+
+    # --- serving: save the artifact, restore, predict through the engine --
+    path = save_artifact("artifacts/quickstart", art)
+    engine = PredictionEngine(load_artifact("artifacts/quickstart"),
+                              chunk_size=256)
+    t0 = time.time()
+    mean_e, var_e = engine.predict(Xt)
+    print(f"engine    : rmse={float(rmse(mean_e, yt)):.4f} "
+          f"nll={float(gaussian_nll(mean_e, var_e, yt)):.4f} "
+          f"({(time.time() - t0) * 1e3:.0f} ms for {Xt.shape[0]} points, "
+          f"artifact={path})")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,78 @@
+"""Quick serving-stack smoke: artifact round-trip, engine, batcher (not a
+test; the second CI job — keep it under a minute on CPU)."""
+import tempfile
+from concurrent.futures import ThreadPoolExecutor
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import OperatorConfig, init_params, make_operator
+from repro.core.predcache import (
+    predict_mean, predict_var_cached, predict_var_exact,
+)
+from repro.serve import (
+    BatcherConfig, MicroBatcher, PredictionEngine, fit_posterior,
+    load_artifact, save_artifact,
+)
+
+rng = np.random.default_rng(0)
+n, d = 300, 4
+X = jnp.asarray(rng.normal(size=(n, d)))
+w = rng.normal(size=(d,))
+y = jnp.asarray(np.sin(np.asarray(X) @ w) + 0.1 * rng.normal(size=n))
+params = init_params(noise=0.2, dtype=jnp.float64)
+op = make_operator(OperatorConfig(kernel="matern32", backend="partitioned",
+                                  row_block=64), X, params)
+
+# 1. fit + save/load round-trip (bitwise)
+art = fit_posterior(op, y, jax.random.PRNGKey(0), precond_rank=50,
+                    lanczos_rank=80, pred_tol=1e-4)
+tmp = tempfile.mkdtemp(prefix="gp_artifact_")
+save_artifact(tmp, art)
+art2 = load_artifact(tmp)
+np.testing.assert_array_equal(np.asarray(art.mean_cache),
+                              np.asarray(art2.mean_cache))
+np.testing.assert_array_equal(np.asarray(art.var_Q), np.asarray(art2.var_Q))
+assert art2.config == art.config._replace(geom=None)
+print("artifact round-trip: bitwise OK "
+      f"(rel_residual={art.meta['solve_rel_residual']:.2e})")
+
+# 2. restored engine == unchunked predcache reference, across backends
+Xs = jnp.asarray(rng.normal(size=(133, d)))
+for backend in ("dense", "partitioned"):
+    eng = PredictionEngine(art2, backend=backend, chunk_size=32)
+    mean, var = eng.predict(Xs)
+    ref_m = predict_mean(eng.op, Xs, art.cache())
+    ref_v = predict_var_cached(eng.op, Xs, art.cache(), include_noise=True)
+    err = max(float(jnp.max(jnp.abs(mean - ref_m))),
+              float(jnp.max(jnp.abs(var - ref_v))))
+    print(f"engine[{backend}] vs reference: max abs err {err:.2e} "
+          f"({eng.chunks_run} chunks)")
+    assert err < 1e-10
+
+# 3. N concurrent requests through the batcher == direct predictions
+eng = PredictionEngine(art2, chunk_size=64)
+with MicroBatcher(eng, BatcherConfig(max_batch=64, max_wait_ms=5.0)) as mb:
+    reqs = [np.asarray(rng.normal(size=(int(rng.integers(1, 9)), d)))
+            for _ in range(24)]
+    with ThreadPoolExecutor(8) as ex:
+        outs = list(ex.map(mb.predict, reqs))
+    for q, (m, v) in zip(reqs, outs):
+        rm, rv = eng.predict(q)
+        np.testing.assert_allclose(m, np.asarray(rm), rtol=1e-12)
+        np.testing.assert_allclose(v, np.asarray(rv), rtol=1e-12)
+    print(f"batcher: {mb.requests_served} requests in {mb.batches_run} "
+          f"launches, {mb.rows_padded} padded rows — matches direct")
+
+# 4. chunked exact-variance oracle == unchunked
+v_all = predict_var_exact(op, Xs, precond_rank=50, pred_tol=1e-4,
+                          xstar_chunk=None)
+v_chk = predict_var_exact(op, Xs, precond_rank=50, pred_tol=1e-4,
+                          xstar_chunk=17)
+np.testing.assert_allclose(np.asarray(v_chk), np.asarray(v_all), rtol=1e-8)
+print("chunked exact variance: OK")
+print("OK")

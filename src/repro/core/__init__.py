@@ -44,12 +44,13 @@ from .operators import (
     operator_backends,
     register_operator,
 )
-from .partitioned import kmvm, quad_form
+from .partitioned import kmvm, map_row_chunks, quad_form
 from .pcg import PCGResult, pcg
 from .pivchol import Preconditioner, make_preconditioner, pivoted_cholesky
 from .predcache import (
     PredictionCache,
     build_prediction_cache,
+    build_variance_cache,
     lanczos,
     predict_mean,
     predict_var_cached,
@@ -70,10 +71,11 @@ __all__ = [
     "KernelOperator", "MLLConfig", "OperatorConfig", "PCGResult",
     "PallasFusedOperator", "PartitionedOperator", "PredictionCache",
     "Preconditioner",
-    "build_prediction_cache", "dense_khat", "dense_mll", "exact_logdet",
+    "build_prediction_cache", "build_variance_cache", "dense_khat",
+    "dense_mll", "exact_logdet",
     "exact_mll", "gaussian_nll", "init_params", "kernel_diag",
     "kernel_matrix", "kmvm", "lanczos", "lengthscale", "make_operator",
-    "make_preconditioner",
+    "make_preconditioner", "map_row_chunks",
     "noise_variance", "operator_backends", "operator_mll_forward",
     "outputscale", "pcg", "pivoted_cholesky",
     "predict_mean", "predict_var_cached", "predict_var_exact", "quad_form",

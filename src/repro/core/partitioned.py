@@ -41,6 +41,30 @@ def pad_rows(A: jax.Array, multiple: int) -> tuple[jax.Array, int]:
     return jnp.pad(A, pad_width), rem
 
 
+def map_row_chunks(fn, Z: jax.Array, chunk_size: int):
+    """Apply `fn` to fixed-shape row chunks of Z; concatenate, strip padding.
+
+    Z is zero-padded up to a multiple of `chunk_size`, so every call sees the
+    SAME (chunk_size, ...) leading shape — one jit compilation of `fn` serves
+    any number of rows (the serving engine's no-recompile contract,
+    `repro.serve.engine`). `fn` may return an array or a pytree of arrays
+    whose leading axis is the chunk axis. The loop is Python-level and
+    sequential: nothing (n_rows, n)-sized is ever live at once, which is what
+    lets O(n)-memory consumers (`predcache.predict_var_exact`, the engine's
+    predict path) stream arbitrarily large test sets.
+    """
+    n = Z.shape[0]
+    Zp, _ = pad_rows(Z, chunk_size)
+    if Zp.shape[0] == 0:  # empty query: one all-padding chunk, sliced to 0
+        Zp = jnp.zeros((chunk_size,) + Z.shape[1:], Z.dtype)
+    outs = [fn(Zp[i:i + chunk_size]) for i in range(0, Zp.shape[0], chunk_size)]
+    if len(outs) == 1:
+        cat = outs[0]
+    else:
+        cat = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *outs)
+    return jax.tree.map(lambda x: x[:n], cat)
+
+
 def default_row_block(n: int, d: int, t: int, hbm_budget_bytes: int = 2 << 30) -> int:
     """Pick a row block so the transient (rb, n) fp32 slab fits the budget.
 

@@ -32,8 +32,13 @@ def pivoted_cholesky(kind: str, X: jax.Array, params: GPParams, rank: int) -> ja
     """
     n = X.shape[0]
     d0 = kernel_diag(kind, X, params)
+    # Factor state is at least fp32 (like all solver/cache state, see
+    # predcache.solver_dtype): kernel rows promote with the fp32 hyper-
+    # parameters anyway, and a bf16 L would both downcast them on scatter
+    # and degrade the Woodbury solve.
+    d0 = d0.astype(jnp.promote_types(d0.dtype, jnp.float32))
 
-    L0 = jnp.zeros((rank, n), X.dtype)
+    L0 = jnp.zeros((rank, n), d0.dtype)
 
     def body(i, carry):
         L, diag = carry

@@ -29,7 +29,22 @@ import jax
 import jax.numpy as jnp
 
 from .kernels_math import constant_mean
+from .partitioned import map_row_chunks
 from .pcg import pcg
+
+
+def solver_dtype(op, *operands) -> jnp.dtype:
+    """Dtype for solver/cache state: at least fp32, regardless of backend.
+
+    Reduced-precision operands (X stored in bf16, or a bf16 compute_dtype
+    backend) must never set the dtype of CG residuals, Lanczos vectors or
+    the caches themselves — the paper's eps <= 0.01 prediction tolerance is
+    unreachable in bf16 state. fp64 operands (x64 mode) keep fp64.
+    """
+    dt = jnp.dtype(op.dtype)
+    for a in operands:
+        dt = jnp.promote_types(dt, jnp.result_type(a))
+    return jnp.promote_types(dt, jnp.float32)
 
 
 def lanczos(mvm, v0: jax.Array, rank: int):
@@ -83,21 +98,36 @@ def build_prediction_cache(
     pred_tol: float = 0.01,
     max_cg_iters: int = 400,
 ) -> PredictionCache:
-    """The paper's one-time precomputation (tight-tolerance solves)."""
-    yc = y - constant_mean(op.params)
+    """The paper's one-time precomputation (tight-tolerance solves).
+
+    Solver and cache state are forced to at least fp32 (`solver_dtype`) so a
+    reduced-precision operator backend only affects the matvecs, never the
+    CG/Lanczos state or the cache the engine serves from.
+    """
+    sdt = solver_dtype(op, y)
+    yc = (y - constant_mean(op.params)).astype(sdt)
     precond = op.preconditioner(precond_rank)
 
     res = pcg(op, yc[:, None], precond.solve,
               max_iters=max_cg_iters, min_iters=10, tol=pred_tol)
     mean_cache = res.solution[:, 0]
 
+    Q, T_chol = build_variance_cache(op, key, lanczos_rank=lanczos_rank)
+    return PredictionCache(mean_cache, Q, T_chol, res.rel_residual)
+
+
+def build_variance_cache(op, key: jax.Array, *, lanczos_rank: int = 128):
+    """The Lanczos half of the precomputation: (Q, chol(T)) for the LOVE
+    variance. Split out so callers that already hold a mean cache (e.g. from
+    a distributed tight solve, see `repro.serve.artifact`) only pay the r
+    extra MVMs. State is at least fp32 (`solver_dtype`)."""
     n = op.shape[0]
     r = min(lanczos_rank, n)
-    v0 = jax.random.normal(key, (n,), op.dtype)
+    v0 = jax.random.normal(key, (n,), solver_dtype(op))
     Q, T = lanczos(op.matvec, v0, r)
     T = T + 1e-6 * jnp.eye(r, dtype=T.dtype)
     T_chol = jnp.linalg.cholesky(T)
-    return PredictionCache(mean_cache, Q, T_chol, res.rel_residual)
+    return Q, T_chol
 
 
 def predict_mean(op, Xstar: jax.Array, cache: PredictionCache) -> jax.Array:
@@ -126,15 +156,28 @@ def predict_var_exact(
     pred_tol: float = 0.01,
     max_cg_iters: int = 400,
     include_noise: bool = False,
+    xstar_chunk: int | None = 1024,
 ) -> jax.Array:
     """Exact predictive variance: PCG-solve K_hat^{-1} k_{X x*} per test point
-    (batched over the test set as mBCG columns)."""
+    (batched over the test set as mBCG columns).
+
+    Chunked over Xstar (`map_row_chunks`, `xstar_chunk` columns of RHS at a
+    time) so only an (n, chunk) block is ever live — the oracle works at test
+    sizes where the full (n, n*) RHS would not fit. mBCG columns are
+    independent, so chunking is exact. None = one unchunked solve.
+    """
     precond = op.preconditioner(precond_rank)
 
-    Kxs = op.kernel_rows(Xstar).T                      # (n, n*)
-    res = pcg(op, Kxs, precond.solve,
-              max_iters=max_cg_iters, min_iters=10, tol=pred_tol)
-    correction = jnp.sum(Kxs * res.solution, axis=0)
+    def one_chunk(Xc: jax.Array) -> jax.Array:
+        Kxs = op.kernel_rows(Xc).T                     # (n, chunk)
+        res = pcg(op, Kxs.astype(solver_dtype(op)), precond.solve,
+                  max_iters=max_cg_iters, min_iters=10, tol=pred_tol)
+        return jnp.sum(Kxs * res.solution, axis=0)
+
+    if xstar_chunk is None or Xstar.shape[0] <= xstar_chunk:
+        correction = one_chunk(Xstar)
+    else:
+        correction = map_row_chunks(one_chunk, Xstar, xstar_chunk)
     var = jnp.maximum(op.prior_diag(Xstar) - correction, 1e-10)
     if include_noise:
         var = var + op.noise()

@@ -1,0 +1,156 @@
+"""GP serving launcher: fit-or-load a posterior artifact, serve traffic.
+
+    PYTHONPATH=src python -m repro.launch.serve_gp --backend partitioned \
+        [--artifact artifacts/gp] [--n 2048] [--requests 200]
+
+End-to-end path of `repro.serve`: fit the paper's exact GP (or load a saved
+PosteriorArtifact), restore it onto the requested KernelOperator backend,
+verify the chunked engine against the unchunked predcache reference, then
+drive synthetic concurrent query traffic through the micro-batcher and
+report p50/p99 request latency and QPS. CPU runs use reduced sizes; the
+same flags serve a TPU host (`--backend pallas --dtype bfloat16`).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ExactGP, ExactGPConfig
+from repro.core.predcache import predict_mean, predict_var_cached
+from repro.data import make_regression_dataset
+from repro.serve import (
+    BatcherConfig, MicroBatcher, PredictionEngine, fit_posterior,
+    load_artifact, save_artifact,
+)
+from repro.train.gp_trainer import GPTrainConfig, fit_exact_gp
+
+
+def _fit_or_load(args):
+    if args.artifact:
+        try:
+            art = load_artifact(args.artifact)
+            print(f"[serve-gp] loaded artifact: n={art.n} "
+                  f"r={art.lanczos_rank} from {args.artifact}")
+            return art
+        except FileNotFoundError:
+            print(f"[serve-gp] no artifact under {args.artifact!r}; fitting")
+
+    s = make_regression_dataset(args.dataset, max_points=args.n * 9 // 4)
+    n = min(args.n, s.X_train.shape[0])
+    X = jnp.asarray(s.X_train[:n], jnp.float32)
+    y = jnp.asarray(s.y_train[:n], jnp.float32)
+    gp = ExactGP(ExactGPConfig(
+        kernel="matern32", backend=args.backend, row_block=512,
+        precond_rank=min(100, max(20, n // 20)),
+        lanczos_rank=min(128, n // 2),
+        compute_dtype=args.dtype if args.dtype != "float32" else None))
+    cfg = GPTrainConfig(pretrain_subset=min(n, 512), pretrain_lbfgs_steps=3,
+                        pretrain_adam_steps=3, finetune_adam_steps=2)
+    t0 = time.time()
+    res = fit_exact_gp(gp, X, y, cfg=cfg)
+    print(f"[serve-gp] fit n={n} d={X.shape[1]} in {time.time() - t0:.1f}s "
+          f"(final loss {res.loss_trace[-1]:.4f})")
+    t0 = time.time()
+    art = fit_posterior(gp.operator(X, res.params), y, jax.random.PRNGKey(0),
+                        precond_rank=gp.config.precond_rank,
+                        lanczos_rank=gp.config.lanczos_rank,
+                        pred_tol=gp.config.pred_cg_tol,
+                        max_cg_iters=gp.config.pred_max_cg_iters)
+    print(f"[serve-gp] precompute {time.time() - t0:.1f}s "
+          f"rel_residual={art.meta['solve_rel_residual']:.2e}")
+    if args.artifact:
+        print(f"[serve-gp] saved artifact: {save_artifact(args.artifact, art)}")
+    return art
+
+
+def _verify(engine: PredictionEngine, Xq: jax.Array) -> float:
+    """Max rel. error of the chunked engine vs the unchunked predcache
+    reference on the SAME operator (the acceptance oracle)."""
+    mean, var = engine.predict(Xq)
+    cache = engine.artifact.cache()
+    ref_m = predict_mean(engine.op, Xq, cache)
+    ref_v = predict_var_cached(engine.op, Xq, cache,
+                               include_noise=engine.include_noise)
+    # scale-relative: max |delta| over the reference scale (element-wise
+    # relative error is meaningless where the whitened mean crosses zero)
+    rel = max(
+        float(jnp.max(jnp.abs(mean - ref_m)) / jnp.max(jnp.abs(ref_m))),
+        float(jnp.max(jnp.abs(var - ref_v)) / jnp.max(jnp.abs(ref_v))))
+    return rel
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="partitioned",
+                    choices=("dense", "partitioned", "pallas"))
+    ap.add_argument("--dtype", default="float32",
+                    choices=("float32", "bfloat16"),
+                    help="engine cross-MVM compute dtype")
+    ap.add_argument("--dataset", default="bike")
+    ap.add_argument("--n", type=int, default=2048, help="train points to fit")
+    ap.add_argument("--artifact", default="",
+                    help="artifact dir: load if complete, else fit + save")
+    ap.add_argument("--chunk", type=int, default=256,
+                    help="engine test-set chunk (rows per launch)")
+    ap.add_argument("--requests", type=int, default=200)
+    ap.add_argument("--points-per-request", type=int, default=8)
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=128)
+    ap.add_argument("--max-wait-ms", type=float, default=2.0)
+    args = ap.parse_args()
+
+    art = _fit_or_load(args)
+    engine = PredictionEngine(
+        art, backend=args.backend, chunk_size=args.chunk,
+        compute_dtype=args.dtype if args.dtype != "float32" else None)
+    engine.warmup()
+
+    rng = np.random.default_rng(0)
+    d = art.X.shape[1]
+    # query pool: train-point perturbations (in-distribution traffic)
+    pool = np.asarray(art.X)[rng.integers(0, art.n, size=2048)]
+    pool = pool + 0.1 * rng.standard_normal(pool.shape).astype(pool.dtype)
+
+    rel = _verify(engine, jnp.asarray(pool[:512]))
+    exact_path = engine.config.compute_dtype is None
+    print(f"[serve-gp] engine vs unchunked reference: max rel err {rel:.2e} "
+          f"({'exact fp32 path, bound 1e-5' if exact_path else 'bf16 path'})")
+    if exact_path and not rel <= 1e-5:
+        raise SystemExit(f"verification FAILED: rel err {rel:.2e} > 1e-5")
+
+    ppr = args.points_per_request
+    queries = [pool[rng.integers(0, pool.shape[0], size=ppr)]
+               for _ in range(args.requests)]
+    batcher = MicroBatcher(engine, BatcherConfig(
+        max_batch=args.max_batch, max_wait_ms=args.max_wait_ms,
+        bucket_sizes=(16, 64, args.max_batch)))
+
+    def client(q):
+        t0 = time.perf_counter()
+        batcher.predict(q)
+        return time.perf_counter() - t0
+
+    with ThreadPoolExecutor(args.clients) as ex:
+        t0 = time.perf_counter()
+        lats = np.asarray(list(ex.map(client, queries)))
+        wall = time.perf_counter() - t0
+    batcher.close()
+
+    p50, p99 = np.percentile(lats, (50, 99)) * 1e3
+    print(f"[serve-gp] {args.requests} requests x {ppr} pts "
+          f"({args.clients} clients, backend={args.backend}, "
+          f"chunk={args.chunk}): p50={p50:.1f} ms p99={p99:.1f} ms "
+          f"qps={args.requests / wall:.1f}")
+    print(f"[serve-gp] {batcher.batches_run} device launches, "
+          f"{batcher.requests_served / max(batcher.batches_run, 1):.1f} "
+          f"req/launch, {batcher.rows_padded} padded rows")
+
+
+if __name__ == "__main__":
+    main()

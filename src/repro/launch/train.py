@@ -44,6 +44,9 @@ def main():
     ap.add_argument("--gp-dtype", default="float32",
                     choices=("float32", "bfloat16"),
                     help="operator compute dtype (bf16 = MXU fast path)")
+    ap.add_argument("--save-artifact", default="",
+                    help="directory: persist a servable repro.serve "
+                         "PosteriorArtifact after GP training")
     args = ap.parse_args()
     _maybe_init_distributed()
 
@@ -112,6 +115,20 @@ def _train_gp(args):
                               jax.random.PRNGKey(step_i))
         params, state = adam_update(params, grads, state, 0.1)
         print(f"[train-gp] step {step_i}: nll/n={float(loss):.4f}")
+
+    if args.save_artifact:
+        # mesh-trained hyperparameters -> a servable single-host artifact
+        # (the engine re-binds any backend at restore time)
+        from repro.core import OperatorConfig, make_operator
+        from repro.serve.artifact import fit_posterior, save_artifact
+
+        op = make_operator(
+            OperatorConfig(kernel=cfg.kernel, backend=args.gp_backend,
+                           compute_dtype=gp_dtype), X, params)
+        art = fit_posterior(op, y, jax.random.PRNGKey(args.steps),
+                            precond_rank=cfg.precond_rank)
+        print(f"[train-gp] artifact: {save_artifact(args.save_artifact, art)} "
+              f"(rel_residual={art.meta['solve_rel_residual']:.2e})")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,41 @@
+"""repro.serve — posterior artifacts + a batched GP prediction engine.
+
+The serving side of the paper's story: training produces a one-time
+precomputation (Table 2), and this package makes it a durable, restorable,
+high-throughput asset. Layering:
+
+    artifact    PosteriorArtifact: versioned save/load of hyperparameters,
+                train inputs, mean + Lanczos variance caches, dtype policy
+                (atomic/CRC'd via repro.train.checkpoint)
+    engine      PredictionEngine: restore onto any KernelOperator backend;
+                jitted fixed-chunk predict(Xstar) — one compile, streaming
+                memory, optional bf16 cross-MVMs
+    batching    MicroBatcher: size/deadline request queue so many small
+                concurrent requests ride one device launch
+
+CLI: `python -m repro.launch.serve_gp`; benchmark:
+`benchmarks/serve_latency.py`; smoke: `scripts/sanity_serve.py`.
+"""
+
+from .artifact import (
+    ARTIFACT_VERSION,
+    PosteriorArtifact,
+    fit_posterior,
+    load_artifact,
+    posterior_from_mean_cache,
+    save_artifact,
+)
+from .batching import BatcherConfig, MicroBatcher
+from .engine import PredictionEngine
+
+__all__ = [
+    "ARTIFACT_VERSION",
+    "BatcherConfig",
+    "MicroBatcher",
+    "PosteriorArtifact",
+    "PredictionEngine",
+    "fit_posterior",
+    "load_artifact",
+    "posterior_from_mean_cache",
+    "save_artifact",
+]

@@ -1,0 +1,205 @@
+"""PosteriorArtifact — the paper's one-time precomputation, made durable.
+
+Table 2's "precomputation" column is only an asset if it survives the
+training process: everything prediction needs — trained hyperparameters,
+training inputs, the tight-tolerance mean cache, the LOVE-style Lanczos
+variance cache (Pleiss et al. [28]), and the operator/dtype policy it was
+built under — is packaged here as one versioned, integrity-checked artifact.
+`repro.serve.engine.PredictionEngine` restores it onto any registered
+KernelOperator backend; `repro.launch.serve_gp` is the CLI.
+
+Storage rides `repro.train.checkpoint`'s atomic npz layout (write to
+`.tmp`, fsync-free rename, CRC32-verified restore), so an artifact directory
+has the same crash-safety story as a training checkpoint:
+
+    <dir>/step_00000000/arrays.npz + MANIFEST.json + .COMPLETE
+
+Static configuration (kernel family, backend, compute_dtype, fit settings,
+the artifact format version) lives in the manifest's `meta` block; arrays —
+hyperparameters, X, both caches, solve diagnostics — live in the npz. Cache
+arrays are at least fp32 by construction (`predcache.solver_dtype`): the
+operator's reduced compute dtype never reaches artifact state.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kernels_math import GPParams
+from repro.core.operators import OperatorConfig
+from repro.core.predcache import (
+    PredictionCache,
+    build_prediction_cache,
+    build_variance_cache,
+)
+from repro.train.checkpoint import load_checkpoint, save_checkpoint
+
+ARTIFACT_VERSION = 1
+_STEP = 0  # artifacts are single-snapshot checkpoints
+
+
+class PosteriorArtifact(NamedTuple):
+    """Everything a PredictionEngine needs to serve a trained exact GP."""
+
+    config: OperatorConfig          # static: kernel / backend / dtype policy
+    params: GPParams                # trained hyperparameters
+    X: jax.Array                    # (n, d) training inputs
+    mean_cache: jax.Array           # (n,)  K_hat^{-1} (y - mu)
+    var_Q: jax.Array                # (n, r) Lanczos basis
+    var_T_chol: jax.Array           # (r, r) chol of the tridiagonal T
+    solve_rel_residual: jax.Array   # mean-solve diagnostic (||r||/||b||)
+    meta: dict                      # version + fit settings + diagnostics
+
+    @property
+    def n(self) -> int:
+        return self.X.shape[0]
+
+    @property
+    def lanczos_rank(self) -> int:
+        return self.var_Q.shape[1]
+
+    def cache(self) -> PredictionCache:
+        """The predcache view consumed by predict_mean/predict_var_cached."""
+        return PredictionCache(self.mean_cache, self.var_Q, self.var_T_chol,
+                               self.solve_rel_residual)
+
+
+def fit_posterior(
+    op,
+    y: jax.Array,
+    key: jax.Array,
+    *,
+    precond_rank: int = 100,
+    lanczos_rank: int = 128,
+    pred_tol: float = 0.01,
+    max_cg_iters: int = 400,
+) -> PosteriorArtifact:
+    """One call from a trained operator to a servable artifact.
+
+    Runs the paper's precomputation (`build_prediction_cache`: one
+    tight-tolerance PCG mean solve + the rank-r Lanczos pass) and wraps the
+    result with everything restore needs.
+    """
+    cache = build_prediction_cache(
+        op, y, key, precond_rank=precond_rank, lanczos_rank=lanczos_rank,
+        pred_tol=pred_tol, max_cg_iters=max_cg_iters)
+    meta = {
+        "n": int(op.shape[0]),
+        "d": int(op.X.shape[1]),
+        "precond_rank": int(precond_rank),
+        "lanczos_rank": int(cache.var_Q.shape[1]),
+        "pred_tol": float(pred_tol),
+        "max_cg_iters": int(max_cg_iters),
+        "solve_rel_residual": float(jnp.max(cache.solve_rel_residual)),
+    }
+    return PosteriorArtifact(
+        config=op.config, params=op.params, X=op.X,
+        mean_cache=cache.mean_cache, var_Q=cache.var_Q,
+        var_T_chol=cache.var_T_chol,
+        solve_rel_residual=cache.solve_rel_residual, meta=meta)
+
+
+def posterior_from_mean_cache(
+    op,
+    mean_cache: jax.Array,
+    key: jax.Array,
+    *,
+    lanczos_rank: int = 128,
+    solve_rel_residual=None,
+) -> PosteriorArtifact:
+    """Artifact from an externally-solved mean cache (e.g. the distributed
+    engine's `make_mean_cache_solve`): only the r Lanczos MVMs run here, so
+    a mesh-solved posterior becomes servable without redoing the tight solve
+    on one device. See `examples/distributed_gp.py`."""
+    Q, T_chol = build_variance_cache(op, key, lanczos_rank=lanczos_rank)
+    rel = jnp.asarray(
+        jnp.nan if solve_rel_residual is None else solve_rel_residual,
+        mean_cache.dtype)
+    meta = {
+        "n": int(op.shape[0]),
+        "d": int(op.X.shape[1]),
+        "lanczos_rank": int(Q.shape[1]),
+        "solve_rel_residual": float(jnp.max(rel)),
+        "mean_cache_source": "external",
+    }
+    return PosteriorArtifact(
+        config=op.config, params=op.params, X=op.X,
+        mean_cache=jnp.asarray(mean_cache), var_Q=Q, var_T_chol=T_chol,
+        solve_rel_residual=rel, meta=meta)
+
+
+# ---------------------------------------------------------------------------
+# persistence
+# ---------------------------------------------------------------------------
+
+
+def _arrays_tree(artifact: PosteriorArtifact) -> dict:
+    return {
+        "params": artifact.params,
+        "X": artifact.X,
+        "mean_cache": artifact.mean_cache,
+        "var_Q": artifact.var_Q,
+        "var_T_chol": artifact.var_T_chol,
+        "solve_rel_residual": artifact.solve_rel_residual,
+    }
+
+
+def save_artifact(directory: str, artifact: PosteriorArtifact) -> str:
+    """Atomically persist the artifact; returns the snapshot path."""
+    meta = dict(artifact.meta)
+    meta["artifact_version"] = ARTIFACT_VERSION
+    cfg = artifact.config._asdict()
+    cfg.pop("geom", None)  # mesh geometry is a runtime choice, not state
+    meta["operator_config"] = cfg
+    return save_checkpoint(directory, _STEP, _arrays_tree(artifact), meta)
+
+
+def load_artifact(directory: str) -> PosteriorArtifact:
+    """CRC-verified restore. The array template is rebuilt from the manifest
+    (shapes/dtypes), so no caller-side knowledge of n/d/r is needed."""
+    manifest = _read_manifest(directory)
+    meta = manifest["meta"]
+    version = meta.get("artifact_version")
+    if version != ARTIFACT_VERSION:
+        raise ValueError(
+            f"artifact version {version!r} under {directory} not supported "
+            f"(this build reads version {ARTIFACT_VERSION})")
+
+    zero = np.zeros(())
+    skeleton = {
+        "params": GPParams(zero, zero, zero, zero),
+        "X": zero, "mean_cache": zero, "var_Q": zero, "var_T_chol": zero,
+        "solve_rel_residual": zero,
+    }
+    flat, tdef = jax.tree_util.tree_flatten_with_path(skeleton)
+    leaves = []
+    for path, _ in flat:
+        info = manifest["arrays"][jax.tree_util.keystr(path)]
+        leaves.append(np.zeros(info["shape"], dtype=np.dtype(info["dtype"])))
+    template = jax.tree_util.tree_unflatten(tdef, leaves)
+
+    tree, _, meta = load_checkpoint(directory, template)
+    tree = jax.tree.map(jnp.asarray, tree)
+    cfg = dict(meta["operator_config"])
+    cfg["geom"] = None
+    config = OperatorConfig(**cfg)
+    return PosteriorArtifact(
+        config=config, params=tree["params"], X=tree["X"],
+        mean_cache=tree["mean_cache"], var_Q=tree["var_Q"],
+        var_T_chol=tree["var_T_chol"],
+        solve_rel_residual=tree["solve_rel_residual"], meta=meta)
+
+
+def _read_manifest(directory: str) -> dict:
+    """Manifest of the artifact snapshot (requires a .COMPLETE marker)."""
+    path = os.path.join(directory, f"step_{_STEP:08d}")
+    if not os.path.exists(os.path.join(path, ".COMPLETE")):
+        raise FileNotFoundError(f"no complete artifact under {directory}")
+    with open(os.path.join(path, "MANIFEST.json")) as f:
+        return json.load(f)

@@ -1,0 +1,112 @@
+"""PredictionEngine — chunked, jitted GP prediction from a PosteriorArtifact.
+
+The paper's serving claim (Table 2: sub-second predictions at n > 10^6 once
+the caches exist) operationalized: restore an artifact onto ANY registered
+KernelOperator backend (dense / partitioned / pallas / sharded extensions)
+and serve `predict(Xstar)` with
+
+  * a FIXED chunk size over the test set — every device launch sees the same
+    (chunk_size, d) shape, so there is exactly one jit compilation no matter
+    how request sizes vary (`repro.core.partitioned.map_row_chunks` pads the
+    tail chunk);
+  * streaming memory — one chunk's (chunk, r) cross-products are live at a
+    time; the (n*, n) kernel block is never materialized, so 10^5-point test
+    batches stream against million-point train sets;
+  * donated query buffers — each chunk's input buffer is donated to the
+    compiled call on accelerator backends (no-op on CPU, where XLA cannot
+    alias donations);
+  * optional bf16 cross-MVMs — `compute_dtype="bfloat16"` re-binds the
+    operator with the mixed fast path (bf16 operands, fp32 MXU accumulation;
+    see EXPERIMENTS.md §Mixed precision). Cache state stays fp32 regardless.
+
+Throughput for many small concurrent requests comes from the companion
+micro-batcher (`repro.serve.batching.MicroBatcher`), which rides this same
+predict path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.operators import make_operator
+from repro.core.partitioned import map_row_chunks
+from repro.core.predcache import predict_mean, predict_var_cached
+
+from .artifact import PosteriorArtifact, load_artifact
+
+_KEEP = "__keep__"  # sentinel: inherit the artifact's compute_dtype
+
+
+class PredictionEngine:
+    """Serves mean + variance predictions from a restored artifact.
+
+    Args:
+      artifact: a PosteriorArtifact (in-process or `load_artifact`-restored).
+      backend: KernelOperator registry key override; None = the backend the
+        artifact was fit under. Restore is backend-agnostic because caches
+        are plain arrays — only the cross-MVMs re-bind.
+      compute_dtype: override for the operator's matmul dtype ("bfloat16"
+        for the MXU fast path, None for the exact path); default inherits
+        the artifact's policy.
+      chunk_size: fixed test-set chunk (rows per launch). Prefer a multiple
+        of 128 to keep MXU-aligned tiles on the Pallas backend.
+      include_noise: add sigma^2 to returned variances (predictive vs latent).
+    """
+
+    def __init__(self, artifact: PosteriorArtifact, *,
+                 backend: str | None = None,
+                 compute_dtype: str | None = _KEEP,
+                 chunk_size: int = 1024,
+                 include_noise: bool = True):
+        config = artifact.config._replace(geom=None)
+        if backend is not None:
+            config = config._replace(backend=backend)
+        if compute_dtype is not _KEEP:
+            config = config._replace(compute_dtype=compute_dtype)
+        self.artifact = artifact
+        self.config = config
+        self.chunk_size = int(chunk_size)
+        self.include_noise = include_noise
+        self.op = make_operator(config, artifact.X, artifact.params)
+        self._cache = artifact.cache()
+        # launch counters (exported by the latency benchmark / CLI)
+        self.chunks_run = 0
+        self.rows_served = 0
+
+        def _chunk(Xc: jax.Array):
+            mean = predict_mean(self.op, Xc, self._cache)
+            var = predict_var_cached(self.op, Xc, self._cache,
+                                     include_noise=include_noise)
+            return mean, var
+
+        donate = () if jax.default_backend() == "cpu" else (0,)
+        self._predict_chunk = jax.jit(_chunk, donate_argnums=donate)
+
+    @classmethod
+    def from_dir(cls, directory: str, **kwargs) -> "PredictionEngine":
+        return cls(load_artifact(directory), **kwargs)
+
+    @property
+    def backend(self) -> str:
+        return self.config.backend
+
+    def warmup(self) -> None:
+        """Compile the chunk program before traffic arrives (one launch)."""
+        d = self.artifact.X.shape[1]
+        dummy = jnp.zeros((self.chunk_size, d), self.op.dtype)
+        jax.block_until_ready(self._predict_chunk(dummy))
+
+    def predict(self, Xstar) -> tuple[jax.Array, jax.Array]:
+        """(mean, var) for (m, d) query points; any m, one compiled shape."""
+        Xstar = jnp.asarray(Xstar, self.op.dtype)
+        if Xstar.ndim == 1:
+            Xstar = Xstar[None, :]
+        m = Xstar.shape[0]
+        out = map_row_chunks(self._predict_chunk, Xstar, self.chunk_size)
+        self.chunks_run += -(-max(m, 1) // self.chunk_size)
+        self.rows_served += m
+        return out
+
+    def predict_mean(self, Xstar) -> jax.Array:
+        return self.predict(Xstar)[0]

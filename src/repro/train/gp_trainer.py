@@ -49,11 +49,15 @@ class GPFitResult(NamedTuple):
 
 def fit_exact_gp(gp: ExactGP, X, y, *, cfg: GPTrainConfig = GPTrainConfig(),
                  method: str = "pretrain", noise_init: float = 0.5,
-                 verbose: bool = False) -> GPFitResult:
+                 verbose: bool = False,
+                 save_artifact: str | None = None) -> GPFitResult:
     """Fit GP hyperparameters by maximizing the BBMM MLL.
 
     method: "pretrain" — the paper's init+finetune procedure (Fig. 1);
             "adam"     — 100 steps of Adam (appendix Table 5).
+    save_artifact: optional directory — after fitting, run the one-time
+    precomputation and persist a servable `repro.serve` PosteriorArtifact
+    there (the train-to-serve hook; `repro.launch.train --save-artifact`).
     """
     t0 = time.time()
     key = jax.random.PRNGKey(cfg.seed)
@@ -116,6 +120,21 @@ def fit_exact_gp(gp: ExactGP, X, y, *, cfg: GPTrainConfig = GPTrainConfig(),
                 print(f"  adam {i}: {float(val):.5f}")
     else:
         raise ValueError(f"unknown method {method!r}")
+
+    if save_artifact is not None:
+        from repro.serve.artifact import fit_posterior
+        from repro.serve.artifact import save_artifact as _save_artifact
+
+        key, k_art = jax.random.split(key)
+        c = gp.config
+        art = fit_posterior(
+            gp.operator(X, params), y, k_art,
+            precond_rank=c.precond_rank, lanczos_rank=c.lanczos_rank,
+            pred_tol=c.pred_cg_tol, max_cg_iters=c.pred_max_cg_iters)
+        path = _save_artifact(save_artifact, art)
+        if verbose:
+            print(f"  saved posterior artifact: {path} "
+                  f"(rel_residual={art.meta['solve_rel_residual']:.2e})")
 
     return GPFitResult(params=params, loss_trace=trace, seconds=time.time() - t0)
 

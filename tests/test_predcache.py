@@ -75,6 +75,47 @@ def test_cached_variance_converges_with_rank(gp_data, rng):
     assert errs[-1] < 6e-2
 
 
+def test_cache_state_forced_fp32_under_reduced_precision_operands(rng):
+    """Regression: the Lanczos probe / CG state used to inherit op.dtype —
+    with bf16-stored inputs (and the bf16 compute fast path) the caches
+    themselves went reduced-precision. solver_dtype forces >= fp32."""
+    from repro.core import OperatorConfig, make_operator
+    from repro.core.predcache import build_prediction_cache
+
+    X = jnp.asarray(rng.normal(size=(64, 3)), jnp.bfloat16)
+    y = jnp.asarray(rng.normal(size=(64,)), jnp.float32)
+    op = make_operator(
+        OperatorConfig(kernel="matern32", backend="partitioned",
+                       row_block=32, compute_dtype="bfloat16"),
+        X, init_params(noise=0.2, dtype=jnp.float32))
+    assert op.dtype == jnp.bfloat16  # the hazard this test guards
+    cache = build_prediction_cache(op, y, jax.random.PRNGKey(0),
+                                   precond_rank=10, lanczos_rank=20,
+                                   pred_tol=0.05, max_cg_iters=100)
+    assert cache.mean_cache.dtype == jnp.float32
+    assert cache.var_Q.dtype == jnp.float32
+    assert cache.var_T_chol.dtype == jnp.float32
+    assert np.all(np.isfinite(np.asarray(cache.mean_cache, np.float32)))
+
+
+def test_exact_variance_chunked_matches_unchunked(gp_data, rng):
+    """mBCG columns are independent -> chunking over Xstar is exact."""
+    from repro.core import OperatorConfig, make_operator
+    from repro.core.predcache import predict_var_exact
+
+    X, y = gp_data
+    params = init_params(noise=0.2, dtype=jnp.float64)
+    op = make_operator(OperatorConfig(kernel="matern32",
+                                      backend="partitioned", row_block=32),
+                       X, params)
+    Xs = jnp.asarray(rng.normal(size=(33, X.shape[1])))
+    kw = dict(precond_rank=30, pred_tol=1e-4, max_cg_iters=300)
+    v_all = predict_var_exact(op, Xs, xstar_chunk=None, **kw)
+    v_chk = predict_var_exact(op, Xs, xstar_chunk=7, **kw)
+    np.testing.assert_allclose(np.asarray(v_chk), np.asarray(v_all),
+                               rtol=1e-8)
+
+
 def test_prediction_reuses_cache_without_solves(gp_data, rng):
     """After precompute, predict() must not run CG (mean path is one MVM):
     verified by jaxpr containing no while/scan over CG state."""

@@ -1,0 +1,172 @@
+"""repro.serve: artifact round-trip, engine restore, micro-batching."""
+
+from concurrent.futures import ThreadPoolExecutor
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import OperatorConfig, init_params, make_operator
+from repro.core.predcache import predict_mean, predict_var_cached
+from repro.serve import (
+    ARTIFACT_VERSION, BatcherConfig, MicroBatcher, PredictionEngine,
+    fit_posterior, load_artifact, posterior_from_mean_cache, save_artifact,
+)
+
+OP_CFG = OperatorConfig(kernel="matern32", backend="partitioned",
+                        row_block=32)
+
+
+def _artifact(gp_data):
+    X, y = gp_data
+    params = init_params(noise=0.2, dtype=jnp.float64)
+    op = make_operator(OP_CFG, X, params)
+    return fit_posterior(op, y, jax.random.PRNGKey(0), precond_rank=30,
+                         lanczos_rank=50, pred_tol=1e-4)
+
+
+def test_artifact_roundtrip_bitwise(gp_data, tmp_path):
+    art = _artifact(gp_data)
+    save_artifact(str(tmp_path), art)
+    art2 = load_artifact(str(tmp_path))
+    for field in ("params", "X", "mean_cache", "var_Q", "var_T_chol",
+                  "solve_rel_residual"):
+        a, b = getattr(art, field), getattr(art2, field)
+        jax.tree.map(lambda x, y: np.testing.assert_array_equal(
+            np.asarray(x), np.asarray(y)), a, b)
+    assert art2.config == art.config._replace(geom=None)
+    assert art2.meta["artifact_version"] == ARTIFACT_VERSION
+    assert art2.meta["lanczos_rank"] == art.var_Q.shape[1]
+
+
+def test_load_rejects_unknown_version(gp_data, tmp_path):
+    import json
+    import os
+
+    art = _artifact(gp_data)
+    save_artifact(str(tmp_path), art)
+    man = os.path.join(str(tmp_path), "step_00000000", "MANIFEST.json")
+    with open(man) as f:
+        manifest = json.load(f)
+    manifest["meta"]["artifact_version"] = ARTIFACT_VERSION + 1
+    with open(man, "w") as f:
+        json.dump(manifest, f)
+    with pytest.raises(ValueError, match="version"):
+        load_artifact(str(tmp_path))
+
+
+@pytest.mark.parametrize("backend", ["dense", "partitioned"])
+def test_restored_engine_matches_inprocess(gp_data, tmp_path, rng, backend):
+    """save -> load -> restore onto `backend`: predictions must equal the
+    in-process predict_mean / predict_var_cached on the same operator."""
+    art = _artifact(gp_data)
+    save_artifact(str(tmp_path), art)
+    engine = PredictionEngine(load_artifact(str(tmp_path)), backend=backend,
+                              chunk_size=16)
+    Xs = jnp.asarray(rng.normal(size=(41, gp_data[0].shape[1])))
+    mean, var = engine.predict(Xs)
+    ref_mean = predict_mean(engine.op, Xs, art.cache())
+    ref_var = predict_var_cached(engine.op, Xs, art.cache(),
+                                 include_noise=True)
+    np.testing.assert_allclose(np.asarray(mean), np.asarray(ref_mean),
+                               rtol=1e-12, atol=1e-12)
+    np.testing.assert_allclose(np.asarray(var), np.asarray(ref_var),
+                               rtol=1e-12, atol=1e-12)
+    # fixed-chunk contract: 41 rows / chunk 16 -> 3 launches
+    assert engine.chunks_run == 3
+
+
+def test_engine_chunking_invariant(gp_data, rng):
+    """Same artifact, different chunk sizes -> same predictions."""
+    art = _artifact(gp_data)
+    Xs = jnp.asarray(rng.normal(size=(30, gp_data[0].shape[1])))
+    outs = [PredictionEngine(art, chunk_size=c).predict(Xs)
+            for c in (7, 30, 64)]
+    for m, v in outs[1:]:
+        np.testing.assert_allclose(np.asarray(m), np.asarray(outs[0][0]),
+                                   rtol=1e-12)
+        np.testing.assert_allclose(np.asarray(v), np.asarray(outs[0][1]),
+                                   rtol=1e-12)
+
+
+def test_posterior_from_mean_cache_serves(gp_data, rng):
+    """External (e.g. distributed) mean cache -> servable artifact whose
+    mean path uses the given cache verbatim."""
+    X, y = gp_data
+    art = _artifact(gp_data)
+    op = make_operator(OP_CFG, X, init_params(noise=0.2, dtype=jnp.float64))
+    art2 = posterior_from_mean_cache(op, art.mean_cache,
+                                     jax.random.PRNGKey(1), lanczos_rank=40,
+                                     solve_rel_residual=art.solve_rel_residual)
+    np.testing.assert_array_equal(np.asarray(art2.mean_cache),
+                                  np.asarray(art.mean_cache))
+    Xs = jnp.asarray(rng.normal(size=(9, X.shape[1])))
+    mean, var = PredictionEngine(art2, chunk_size=16).predict(Xs)
+    np.testing.assert_allclose(
+        np.asarray(mean), np.asarray(predict_mean(op, Xs, art.cache())),
+        rtol=1e-12)
+    assert np.all(np.asarray(var) > 0)
+
+
+def test_microbatcher_matches_direct(gp_data, rng):
+    """N concurrent small requests through the queue == the same requests
+    predicted directly on the engine."""
+    art = _artifact(gp_data)
+    engine = PredictionEngine(art, chunk_size=32)
+    d = gp_data[0].shape[1]
+    reqs = [np.asarray(rng.normal(size=(int(rng.integers(1, 7)), d)))
+            for _ in range(24)]
+    with MicroBatcher(engine, BatcherConfig(max_batch=32, max_wait_ms=10.0,
+                                            bucket_sizes=(8, 32))) as mb:
+        with ThreadPoolExecutor(8) as ex:
+            outs = list(ex.map(mb.predict, reqs))
+        assert mb.requests_served == len(reqs)
+        assert 0 < mb.batches_run <= len(reqs)  # batching actually happened
+    for q, (m, v) in zip(reqs, outs):
+        ref_m, ref_v = engine.predict(q)
+        np.testing.assert_allclose(m, np.asarray(ref_m), rtol=1e-12)
+        np.testing.assert_allclose(v, np.asarray(ref_v), rtol=1e-12)
+
+
+def test_microbatcher_propagates_errors(gp_data):
+    art = _artifact(gp_data)
+    engine = PredictionEngine(art, chunk_size=32)
+    with MicroBatcher(engine) as mb:
+        fut = mb.submit(np.zeros((2, 999)))  # wrong feature dim
+        with pytest.raises(Exception):
+            fut.result(timeout=30)
+
+
+def test_microbatcher_close_rejects_new_work(gp_data):
+    art = _artifact(gp_data)
+    mb = MicroBatcher(PredictionEngine(art, chunk_size=32))
+    mb.close()
+    mb.close()  # idempotent
+    with pytest.raises(RuntimeError):
+        mb.submit(np.zeros((1, gp_data[0].shape[1])))
+
+
+def test_microbatcher_close_drains_raced_submissions(gp_data):
+    """A request that slips into the queue behind the shutdown sentinel
+    (submit racing close) must get its future failed, never hang."""
+    from concurrent.futures import Future
+
+    from repro.serve.batching import _Request
+
+    art = _artifact(gp_data)
+    mb = MicroBatcher(PredictionEngine(art, chunk_size=32))
+    mb.close()
+    fut: Future = Future()
+    mb._q.put(_Request(np.zeros((1, gp_data[0].shape[1])), fut))
+    mb.close()  # re-drain
+    with pytest.raises(RuntimeError, match="closed"):
+        fut.result(timeout=5)
+
+
+def test_engine_empty_query(gp_data):
+    """Zero-row query batches return empty (0,) results, not a crash."""
+    art = _artifact(gp_data)
+    engine = PredictionEngine(art, chunk_size=16)
+    mean, var = engine.predict(np.zeros((0, gp_data[0].shape[1])))
+    assert mean.shape == (0,) and var.shape == (0,)
