@@ -8,6 +8,7 @@ One module per paper table/figure (+ extra ablations):
     fig3_inducing       Fig 3    inducing-point saturation vs exact floor
     fig4_subset         Fig 4    subset-of-data curves
     ablation_tolerance  Sec 3    CG tolerance train vs predict
+    ablation_warmstart  §Warm-start  cold vs warm-started finetune solves
     roofline_report     §Roofline tables from experiments/dryrun/*.json
     serve_latency       §Serving p50/p99/QPS: backend x chunk x batch sweep
 """
@@ -25,9 +26,10 @@ def main():
                     help="single-seed Table 1")
     args = ap.parse_args()
 
-    from . import (ablation_tolerance, fig1_fig5_init, fig2_multidevice,
-                   fig3_inducing, fig4_subset, roofline_report,
-                   serve_latency, table1_accuracy, table2_timing)
+    from . import (ablation_tolerance, ablation_warmstart, fig1_fig5_init,
+                   fig2_multidevice, fig3_inducing, fig4_subset,
+                   roofline_report, serve_latency, table1_accuracy,
+                   table2_timing)
 
     benches = {
         "table1_accuracy": (lambda: table1_accuracy.run(
@@ -38,6 +40,7 @@ def main():
         "fig3_inducing": fig3_inducing.run,
         "fig4_subset": fig4_subset.run,
         "ablation_tolerance": ablation_tolerance.run,
+        "ablation_warmstart": ablation_warmstart.run,
         "roofline_report": roofline_report.run,
         "serve_latency": serve_latency.run,
     }

@@ -6,6 +6,7 @@ Inducing counts scale with the data cap to keep the m << n regime.
 """
 
 import jax
+import numpy as np
 
 from repro.core.sgpr import sgpr_precompute, sgpr_predict
 from repro.core.svgp import svgp_predict
@@ -20,9 +21,14 @@ def run(scale: str = "cpu", seeds=(0, 1, 2)):
     for name, cap in CPU_DATASETS.items():
         agg = {k: [] for k in ("e_rmse", "e_nll", "s_rmse", "s_nll",
                                "v_rmse", "v_nll")}
+        # row metadata comes from the dataset spec (constant across seeds),
+        # not from whatever split the last seed iteration left behind
+        spec_n = spec_d = None
         for seed in seeds:
             X, y, Xv, yv, Xt, yt = load(name, cap, seed)
             n = X.shape[0]
+            if spec_n is None:
+                spec_n, spec_d = X.shape
             m_sgpr, m_svgp = max(32, n // 20), max(64, n // 10)
 
             gp = default_gp(n)
@@ -47,10 +53,9 @@ def run(scale: str = "cpu", seeds=(0, 1, 2)):
             agg["v_rmse"].append(float(rmse(mv, yt)))
             agg["v_nll"].append(float(gaussian_nll(mv, vv, yt)))
 
-        import numpy as np
         mean = {k: float(np.mean(v)) for k, v in agg.items()}
         std = {k: float(np.std(v)) for k, v in agg.items()}
-        rows.append([name, X.shape[0], X.shape[1],
+        rows.append([name, spec_n, spec_d,
                      f"{mean['e_rmse']:.3f}±{std['e_rmse']:.3f}",
                      f"{mean['s_rmse']:.3f}±{std['s_rmse']:.3f}",
                      f"{mean['v_rmse']:.3f}±{std['v_rmse']:.3f}",

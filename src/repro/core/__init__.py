@@ -33,7 +33,10 @@ from .kernels_math import (
     noise_variance,
     outputscale,
 )
-from .mll import MLLConfig, dense_mll, exact_mll, operator_mll_forward
+from .mll import (
+    MLLConfig, dense_mll, exact_mll, operator_mll_backward,
+    operator_mll_forward,
+)
 from .operators import (
     DenseOperator,
     KernelOperator,
@@ -45,7 +48,7 @@ from .operators import (
     register_operator,
 )
 from .partitioned import kmvm, map_row_chunks, quad_form
-from .pcg import PCGResult, pcg
+from .pcg import PCGResult, SolveState, pcg
 from .pivchol import Preconditioner, make_preconditioner, pivoted_cholesky
 from .predcache import (
     PredictionCache,
@@ -76,8 +79,9 @@ __all__ = [
     "exact_mll", "gaussian_nll", "init_params", "kernel_diag",
     "kernel_matrix", "kmvm", "lanczos", "lengthscale", "make_operator",
     "make_preconditioner", "map_row_chunks",
-    "noise_variance", "operator_backends", "operator_mll_forward",
-    "outputscale", "pcg", "pivoted_cholesky",
+    "noise_variance", "operator_backends", "operator_mll_backward",
+    "operator_mll_forward",
+    "outputscale", "pcg", "pivoted_cholesky", "SolveState",
     "predict_mean", "predict_var_cached", "predict_var_exact", "quad_form",
     "register_operator", "rmse", "slq_logdet", "slq_logdet_correction",
     "SGPRParams", "init_sgpr_params", "sgpr_elbo", "sgpr_loss",

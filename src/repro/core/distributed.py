@@ -366,7 +366,20 @@ class ShardedOperator(KernelOperator):
     def allreduce(self, x: jax.Array) -> jax.Array:
         return _psum_all(self.geom, x)
 
-    def preconditioner(self, rank: int) -> _BoundDistPreconditioner:
+    def preconditioner(self, rank: int,
+                       reuse=None) -> _BoundDistPreconditioner:
+        """Sharded analogue of the base-class hook: `reuse` accepts either
+        the bound preconditioner a previous call returned or the raw
+        DistPreconditioner a DistSolveState carries, and returns it bound
+        (same amortization semantics as `pivchol.make_preconditioner`)."""
+        if reuse is not None:
+            pre = reuse.pre if isinstance(reuse, _BoundDistPreconditioner) \
+                else reuse
+            if pre.L_local.shape[1] != max(rank, 0):
+                raise ValueError(
+                    f"cannot reuse a rank-{pre.L_local.shape[1]} "
+                    f"preconditioner for rank={rank}")
+            return _BoundDistPreconditioner(self.geom, pre)
         return _BoundDistPreconditioner(
             self.geom,
             make_dist_preconditioner(
@@ -475,7 +488,7 @@ class DistMLLConfig(NamedTuple):
 
 def _dist_mll_forward(geom, cfg, X, y_loc, params, key):
     op = ShardedOperator(cfg.operator_config(geom), X, params)
-    (value, aux), (yc, u_y, U, pinv_z) = operator_mll_forward(
+    (value, aux), (yc, u_y, U, pinv_z), _state = operator_mll_forward(
         op, y_loc, key,
         precond_rank=cfg.precond_rank, num_probes=cfg.num_probes,
         max_cg_iters=cfg.max_cg_iters, min_cg_iters=cfg.min_cg_iters,
@@ -484,6 +497,32 @@ def _dist_mll_forward(geom, cfg, X, y_loc, params, key):
     aux = (aux.logdet, aux.quad, aux.cg_iterations, aux.rel_residual)
     saved = (X, params, yc, u_y, U, pinv_z)
     return (value, aux), saved
+
+
+def dist_mll_backward(geom, cfg, X, params, u_y, U, pinv_z, g_value):
+    """This device's slice of (g_X, g_y, g_params) of g_value * mll.
+
+    The sharded analogue of `mll.operator_mll_backward`, factored out so the
+    custom VJP (`make_dist_mll`) and the warm-start engine's explicit
+    gradient path (`make_warm_mll_step`) assemble paper Eq. 2 identically.
+    g_params / g_X come back replicated (psum'd); g_y stays a local chunk.
+    """
+    # backward always contracts in full precision (see mll module doc);
+    # ShardedOperator.quad_form_grads returns PER-DEVICE partials
+    # (explicit blockwise tiles, NOT AD through the distributed
+    # forward), so the shared Eq. 2 assembly yields partials too
+    bwd_cfg = cfg.operator_config(geom)._replace(compute_dtype=None)
+    g_params, g_X = operator_mll_quad_grads(
+        lambda x: ShardedOperator(bwd_cfg, x, params), X, u_y, U, pinv_z)
+    # local partials -> global sums (replicated outputs)
+    g_params = jax.tree.map(lambda a: _psum_all(geom, a), g_params)
+    g_X = _psum_all(geom, g_X)
+    g_params = g_params._replace(
+        raw_mean=g_params.raw_mean + _psum_all(geom, jnp.sum(u_y)))
+    g_params = jax.tree.map(lambda a: g_value * a, g_params)
+    g_X = g_value * g_X
+    g_y = g_value * (-u_y)
+    return g_X, g_y, g_params
 
 
 def make_dist_mll(geom: DistGeometry, cfg: DistMLLConfig):
@@ -502,21 +541,8 @@ def make_dist_mll(geom: DistGeometry, cfg: DistMLLConfig):
     def bwd(saved, cotangents):
         g_value = cotangents[0]
         X, params, yc, u_y, U, pinv_z = saved
-        # backward always contracts in full precision (see mll module doc);
-        # ShardedOperator.quad_form_grads returns PER-DEVICE partials
-        # (explicit blockwise tiles, NOT AD through the distributed
-        # forward), so the shared Eq. 2 assembly yields partials too
-        bwd_cfg = cfg.operator_config(geom)._replace(compute_dtype=None)
-        g_params, g_X = operator_mll_quad_grads(
-            lambda x: ShardedOperator(bwd_cfg, x, params), X, u_y, U, pinv_z)
-        # local partials -> global sums (replicated outputs)
-        g_params = jax.tree.map(lambda a: _psum_all(geom, a), g_params)
-        g_X = _psum_all(geom, g_X)
-        g_params = g_params._replace(
-            raw_mean=g_params.raw_mean + _psum_all(geom, jnp.sum(u_y)))
-        g_params = jax.tree.map(lambda a: g_value * a, g_params)
-        g_X = g_value * g_X
-        g_y = g_value * (-u_y)
+        g_X, g_y, g_params = dist_mll_backward(
+            geom, cfg, X, params, u_y, U, pinv_z, g_value)
         g_key = np.zeros((2,), jax.dtypes.float0)
         return (g_X, g_y, g_params, g_key)
 
@@ -556,6 +582,116 @@ def make_mll_value_and_grad(mesh: Mesh, geom: DistGeometry, cfg: DistMLLConfig):
         out_specs=(P(), (P(), P(), P(), P()), P()),
         check_rep=False)
     return jax.jit(sharded)
+
+
+class DistSolveState(NamedTuple):
+    """Sharded warm-start state threaded across optimizer steps.
+
+    solutions (n, 1+t) and probes (n, t) are sharded like every CG vector
+    (P(all axes)); precond is the UNBOUND DistPreconditioner — L_local
+    sharded congruent with the vectors, chol_inner/sigma2 replicated — so
+    the state is a plain pytree of arrays (no DistGeometry inside; the step
+    fns rebind geom from their closure). logdet is the SLQ estimate from
+    the last refresh, carried through warm steps (see
+    `mll.operator_mll_forward` on why warm iterates cannot re-estimate it).
+    """
+
+    solutions: jax.Array
+    probes: jax.Array
+    precond: DistPreconditioner
+    logdet: jax.Array
+
+
+class WarmMLLStepFns(NamedTuple):
+    """jit'd step functions returned by `make_warm_mll_step`; all return
+    (loss, aux, grads, state) with aux = (logdet, quad, cg_iterations,
+    rel_residual) replicated."""
+
+    cold: Callable     # (X, y, params, key)            fresh precond+probes
+    refresh: Callable  # (X, y, params, key, state)     fresh precond+probes,
+                       #   y-column warm-started from the previous solve
+    warm: Callable     # (X, y, params, key, state)     reuse everything
+
+
+def make_warm_mll_step(mesh: Mesh, geom: DistGeometry, cfg: DistMLLConfig,
+                       *, warm_min_iters: int = 1) -> WarmMLLStepFns:
+    """The distributed stateful training engine: explicit-gradient MLL steps
+    that carry a DistSolveState across optimizer steps.
+
+    Unlike `make_mll_value_and_grad` (stateless custom VJP), these compute
+    paper Eq. 2 directly from the forward's saved solves via
+    `dist_mll_backward` — same math, same psums — and additionally return
+    the warm-start state. The refresh schedule (when to call which fn)
+    lives host-side in `repro.train.solver_state`; these stay pure.
+
+    warm_min_iters: min CG iterations on WARM steps. The cold/refresh paths
+    keep cfg.min_cg_iters (the floor that makes a zero start do any work at
+    the paper's eps=1 tolerance, where ||r0||/||b|| = 1 is never above
+    tol); a warm start begins from a meaningful x0, so one iteration
+    suffices as its floor.
+    """
+    vec = geom.vector_pspec()
+    rep = P()
+    aux_specs = (rep, rep, rep, rep)
+    state_specs = DistSolveState(
+        solutions=vec, probes=vec,
+        precond=DistPreconditioner(L_local=vec, sigma2=rep,
+                                   chol_inner=rep, n=rep),
+        logdet=rep)
+    g_value = -1.0 / geom.n
+
+    def _run(X, y_loc, params, key, *, precond, probes, x0, logdet_carry,
+             min_iters):
+        op = ShardedOperator(cfg.operator_config(geom), X, params)
+        if precond is None:
+            precond = op.preconditioner(cfg.precond_rank)
+        (value, aux), (yc, u_y, U, pinv_z), st = operator_mll_forward(
+            op, y_loc, key,
+            precond_rank=cfg.precond_rank, num_probes=cfg.num_probes,
+            max_cg_iters=cfg.max_cg_iters, min_cg_iters=min_iters,
+            cg_tol=cfg.cg_tol, pcg_method=cfg.pcg_method,
+            precond=precond, probes=probes, x0=x0,
+            logdet_carry=logdet_carry)
+        _, _, g_params = dist_mll_backward(
+            geom, cfg, X, params, u_y, U, pinv_z, g_value)
+        state = DistSolveState(solutions=st.solutions, probes=st.probes,
+                               precond=precond.pre, logdet=aux.logdet)
+        aux_t = (aux.logdet, aux.quad, aux.cg_iterations, aux.rel_residual)
+        return -value / geom.n, aux_t, g_params, state
+
+    def local_cold(X, y_loc, params, key):
+        return _run(X, y_loc, params, key, precond=None, probes=None,
+                    x0=None, logdet_carry=None, min_iters=cfg.min_cg_iters)
+
+    def local_refresh(X, y_loc, params, key, state):
+        # fresh precond + probes (so SLQ is re-estimated), but the y column
+        # still warm-starts from the previous solve
+        x0 = jnp.concatenate(
+            [state.solutions[:, :1],
+             jnp.zeros((state.solutions.shape[0], cfg.num_probes),
+                       state.solutions.dtype)], axis=1)
+        return _run(X, y_loc, params, key, precond=None, probes=None,
+                    x0=x0, logdet_carry=None, min_iters=cfg.min_cg_iters)
+
+    def local_warm(X, y_loc, params, key, state):
+        pre = _BoundDistPreconditioner(geom, state.precond)
+        return _run(X, y_loc, params, key, precond=pre, probes=state.probes,
+                    x0=state.solutions, logdet_carry=state.logdet,
+                    min_iters=warm_min_iters)
+
+    out_specs = (rep, aux_specs, rep, state_specs)
+    cold = jax.jit(shard_map(
+        local_cold, mesh=mesh, in_specs=(P(), vec, P(), P()),
+        out_specs=out_specs, check_rep=False))
+    refresh = jax.jit(shard_map(
+        local_refresh, mesh=mesh,
+        in_specs=(P(), vec, P(), P(), state_specs),
+        out_specs=out_specs, check_rep=False))
+    warm = jax.jit(shard_map(
+        local_warm, mesh=mesh,
+        in_specs=(P(), vec, P(), P(), state_specs),
+        out_specs=out_specs, check_rep=False))
+    return WarmMLLStepFns(cold=cold, refresh=refresh, warm=warm)
 
 
 def make_mean_cache_solve(mesh: Mesh, geom: DistGeometry, cfg: DistMLLConfig,

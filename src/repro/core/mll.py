@@ -83,37 +83,59 @@ class MLLAux(NamedTuple):
 
 def operator_mll_forward(op, y, key, *, precond_rank: int, num_probes: int,
                          max_cg_iters: int, min_cg_iters: int, cg_tol: float,
-                         pcg_method: str = "standard"):
+                         pcg_method: str = "standard",
+                         precond=None, probes: jax.Array | None = None,
+                         x0: jax.Array | None = None,
+                         logdet_carry: jax.Array | None = None):
     """Paper Eq. 1 against ANY KernelOperator (single-device or sharded).
 
     y is the operator-local slice of the targets (the full vector on one
     device, the row-shard chunk inside shard_map); scalar reductions go
     through op.allreduce, so the same code runs in both worlds.
 
-    Returns ((value, aux), (yc, u_y, U, pinv_z)) — the saved solves the
-    custom VJPs contract against dK/dtheta.
+    Warm-start surface (the stateful training engine,
+    `repro.train.solver_state`): `precond` reuses a previous step's
+    preconditioner instead of refactorizing; `probes` reuses the previous
+    SLQ probe block (must be P-distributed draws of the SAME precond);
+    `x0` seeds mBCG with the previous step's solutions. `logdet_carry`
+    replaces the SLQ estimate in the returned value: warm-started probe
+    iterates tridiagonalize the Krylov space of r0 = z - K x0, not of z, so
+    their quadrature does NOT estimate logdet — a warm step carries the
+    estimate from the last refresh instead. Gradients are unaffected: the
+    Eq. 2 trace estimator contracts the CONVERGED solves u_i = K^{-1} z_i
+    and P^{-1} z_i, both of which warm-starting leaves unbiased.
+
+    Returns ((value, aux), (yc, u_y, U, pinv_z), state) — the saved solves
+    the custom VJPs contract against dK/dtheta, plus the `pcg.SolveState`
+    (solutions + probe block) to thread into the next step.
     """
     n = op.shape[0]
     yc = y - constant_mean(op.params)
-    precond = op.preconditioner(precond_rank)
-    probes = precond.sample(key, num_probes, dtype=yc.dtype)
+    if precond is None:
+        precond = op.preconditioner(precond_rank)
+    if probes is None:
+        probes = precond.sample(key, num_probes, dtype=yc.dtype)
     B = jnp.concatenate([yc[:, None], probes], axis=1)
 
     res = pcg(op, B, precond.solve,
               max_iters=max_cg_iters, min_iters=min_cg_iters,
-              tol=cg_tol, method=pcg_method)
+              tol=cg_tol, method=pcg_method, x0=x0)
     u_y = res.solution[:, 0]
     U = res.solution[:, 1:]
     pinv_z = precond.solve(probes)
 
-    # alphas/betas/rz0 are replicated scalars under sharding -> SLQ is free
-    logdet = precond.logdet() + slq_logdet_correction(
-        res.alphas[:, 1:], res.betas[:, 1:], res.active[:, 1:], res.rz0[1:])
+    if logdet_carry is None:
+        # alphas/betas/rz0 are replicated scalars under sharding -> SLQ is free
+        logdet = precond.logdet() + slq_logdet_correction(
+            res.alphas[:, 1:], res.betas[:, 1:], res.active[:, 1:], res.rz0[1:])
+    else:
+        logdet = logdet_carry
     quad = op.allreduce(jnp.dot(yc, u_y))
     value = -0.5 * (quad + logdet + n * math.log(2.0 * math.pi))
     aux = MLLAux(logdet=logdet, quad=quad,
                  cg_iterations=res.iterations, rel_residual=res.rel_residual)
-    return (value, aux), (yc, u_y, U, pinv_z)
+    state = res.state._replace(probes=probes)
+    return (value, aux), (yc, u_y, U, pinv_z), state
 
 
 def operator_mll_quad_grads(make_op, X, u_y, U, pinv_z):
@@ -138,9 +160,36 @@ def operator_mll_quad_grads(make_op, X, u_y, U, pinv_z):
     return g_params, g_X
 
 
+def operator_mll_backward(cfg: MLLConfig, X, params, u_y, U, pinv_z, g_value):
+    """(g_X, g_y, g_params) of g_value * mll from the saved forward solves.
+
+    The single assembly point shared by the custom VJP below and the
+    warm-start training engine (`repro.train.solver_state`), which computes
+    gradients explicitly from its stateful forward rather than through
+    jax.grad. Bitwise-identical to the historical `_mll_bwd` body.
+    """
+    # the backward surface is operator-owned too, but always full precision;
+    # backend is pinned to "partitioned": quad_form_grads is identical for
+    # every single-device backend (base-class blockwise partials — NOT AD
+    # through the forward, see partitioned.quad_form_partials for why)
+    bwd_cfg = cfg.operator_config()._replace(
+        compute_dtype=None, backend="partitioned")
+
+    # d(-0.5[-u_y^T Khat u_y + (1/t) sum_i u_i^T Khat P^{-1}z_i])/d(theta, X)
+    g_params, g_X = operator_mll_quad_grads(
+        lambda x: make_operator(bwd_cfg, x, params), X, u_y, U, pinv_z)
+    # mean parameter: d mll / d mu = sum(u_y); noise & kernel already covered.
+    g_params = g_params._replace(
+        raw_mean=g_params.raw_mean + jnp.sum(u_y))
+    g_params = jax.tree.map(lambda a: g_value * a, g_params)
+    g_X = g_value * g_X
+    g_y = g_value * (-u_y)
+    return g_X, g_y, g_params
+
+
 def _mll_forward_impl(cfg: MLLConfig, X, y, params, key):
     op = make_operator(cfg.operator_config(), X, params)
-    (value, aux), (yc, u_y, U, pinv_z) = operator_mll_forward(
+    (value, aux), (yc, u_y, U, pinv_z), _state = operator_mll_forward(
         op, y, key,
         precond_rank=cfg.precond_rank, num_probes=cfg.num_probes,
         max_cg_iters=cfg.max_cg_iters, min_cg_iters=cfg.min_cg_iters,
@@ -167,22 +216,8 @@ def _mll_fwd(cfg, X, y, params, key):
 def _mll_bwd(cfg, saved, cotangents):
     g_value = cotangents[0]  # aux cotangents are ignored (diagnostics)
     X, params, yc, u_y, U, pinv_z = saved
-    # the backward surface is operator-owned too, but always full precision;
-    # backend is pinned to "partitioned": quad_form_grads is identical for
-    # every single-device backend (base-class blockwise partials — NOT AD
-    # through the forward, see partitioned.quad_form_partials for why)
-    bwd_cfg = cfg.operator_config()._replace(
-        compute_dtype=None, backend="partitioned")
-
-    # d(-0.5[-u_y^T Khat u_y + (1/t) sum_i u_i^T Khat P^{-1}z_i])/d(theta, X)
-    g_params, g_X = operator_mll_quad_grads(
-        lambda x: make_operator(bwd_cfg, x, params), X, u_y, U, pinv_z)
-    # mean parameter: d mll / d mu = sum(u_y); noise & kernel already covered.
-    g_params = g_params._replace(
-        raw_mean=g_params.raw_mean + jnp.sum(u_y))
-    g_params = jax.tree.map(lambda a: g_value * a, g_params)
-    g_X = g_value * g_X
-    g_y = g_value * (-u_y)
+    g_X, g_y, g_params = operator_mll_backward(
+        cfg, X, params, u_y, U, pinv_z, g_value)
     g_key = np.zeros((2,), jax.dtypes.float0)
     return (g_X, g_y, g_params, g_key)
 

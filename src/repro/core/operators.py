@@ -276,11 +276,14 @@ class KernelOperator:
 
     # -- solver hooks -------------------------------------------------------
 
-    def preconditioner(self, rank: int):
-        """Rank-k pivoted-Cholesky preconditioner of K_hat."""
+    def preconditioner(self, rank: int, reuse=None):
+        """Rank-k pivoted-Cholesky preconditioner of K_hat.
+
+        reuse: a previous step's Preconditioner to return as-is (the
+        amortization path — see `pivchol.make_preconditioner`)."""
         return make_preconditioner(
             self.config.kernel, self.X, self.params, rank,
-            self.config.noise_floor)
+            self.config.noise_floor, reuse=reuse)
 
     def allreduce(self, x: jax.Array) -> jax.Array:
         """Sum partial reductions over row shards (identity here)."""

@@ -22,6 +22,13 @@ masking instead of a data-dependent while_loop: on a 256-chip mesh every
 device executes the same schedule (no ragged iteration counts -> no
 stragglers), and the compiled HLO is identical across steps.
 
+The solver is warm-startable: `pcg(..., x0=...)` seeds the iteration with a
+previous solution (r0 = B - K x0, one extra MVM), and `PCGResult.state` is a
+`SolveState` carrying the converged solutions for the next call — the basis
+of the amortized training engine (`repro.train.solver_state`), where
+successive optimizer steps solve nearly identical systems. `x0=None`
+reproduces the zero-start loop bitwise.
+
 Kernel access is injected as a `repro.core.operators.KernelOperator`: one
 object supplies both the MVM (dense / partitioned / Pallas-fused / sharded,
 optionally with a bf16-compute fast path) and the matching `allreduce` — a
@@ -38,14 +45,36 @@ import jax
 import jax.numpy as jnp
 
 
+class SolveState(NamedTuple):
+    """Portable warm-start state for a linear system that recurs across
+    optimizer steps.
+
+    `solutions` is the converged solution block of the last call — the
+    natural `x0` for the next call against a nearby K_hat. `probes` is
+    filled in by MLL-level callers (`repro.core.mll.operator_mll_forward`)
+    that reuse the SAME SLQ probe block across steps, which is what makes
+    warm-starting the probe columns meaningful at all: a fresh probe draw
+    would invalidate the previous solutions as initial guesses.
+    """
+
+    solutions: jax.Array            # (n, t) converged solutions
+    probes: jax.Array | None = None  # (n, t-1) reused SLQ probe block
+
+
 class PCGResult(NamedTuple):
     solution: jax.Array    # (n, t)
     alphas: jax.Array      # (m, t) CG step sizes (0 where column was frozen)
     betas: jax.Array       # (m, t) CG momentum coefficients
     active: jax.Array      # (m, t) bool, iteration actually applied
-    rz0: jax.Array         # (t,) z^T P^{-1} z at iteration 0 (SLQ probe norms)
+    rz0: jax.Array         # (t,) r0^T P^{-1} r0 (= z^T P^{-1} z when x0=0;
+                           #      the SLQ probe norms)
     rel_residual: jax.Array  # (t,) final ||r|| / ||b||
     iterations: jax.Array  # (t,) iterations applied per column
+
+    @property
+    def state(self) -> SolveState:
+        """Warm-start handle: feed `state.solutions` as the next `x0`."""
+        return SolveState(solutions=self.solution)
 
 
 def _identity(x: jax.Array) -> jax.Array:
@@ -62,6 +91,7 @@ def pcg(
     tol: float = 1.0,
     allreduce: Callable[[jax.Array], jax.Array] | None = None,
     method: str = "standard",
+    x0: jax.Array | None = None,
 ) -> PCGResult:
     """Solve K_hat U = B for all columns of B at once.
 
@@ -79,6 +109,12 @@ def pcg(
       allreduce: sums partial scalar reductions over row shards; identity on
         one device. Defaults to A.allreduce for operator inputs.
       method: "standard" | "pipelined".
+      x0: (n, t) initial guess — e.g. `PCGResult.state.solutions` from the
+        previous optimizer step's solve against a nearby K_hat. None keeps
+        the zero start and reproduces the x0-free loop bitwise (the r0 = B
+        branch is the identical trace; no extra MVM is issued). The
+        convergence norm stays ||r||/||b|| with b from B, so a warm start
+        that begins nearly converged exits at `min_iters`.
     """
     if hasattr(A, "matvec"):
         mvm = A.matvec
@@ -88,7 +124,8 @@ def pcg(
         mvm = A
     if B.ndim == 1:
         res = pcg(mvm, B[:, None], precond_solve, max_iters=max_iters,
-                  min_iters=min_iters, tol=tol, allreduce=allreduce, method=method)
+                  min_iters=min_iters, tol=tol, allreduce=allreduce, method=method,
+                  x0=None if x0 is None else x0[:, None])
         return res._replace(solution=res.solution[:, 0])
 
     if precond_solve is None:
@@ -96,9 +133,9 @@ def pcg(
     if allreduce is None:
         allreduce = _identity
     if method == "standard":
-        return _pcg_standard(mvm, B, precond_solve, max_iters, min_iters, tol, allreduce)
+        return _pcg_standard(mvm, B, precond_solve, max_iters, min_iters, tol, allreduce, x0)
     if method == "pipelined":
-        return _pcg_pipelined(mvm, B, precond_solve, max_iters, min_iters, tol, allreduce)
+        return _pcg_pipelined(mvm, B, precond_solve, max_iters, min_iters, tol, allreduce, x0)
     raise ValueError(f"unknown PCG method {method!r}")
 
 
@@ -107,14 +144,26 @@ def _safe_div(num, den):
     return jnp.where(ok, num / jnp.where(ok, den, 1.0), 0.0)
 
 
-def _pcg_standard(mvm, B, precond_solve, max_iters, min_iters, tol, allreduce):
+def _warm_init(mvm, B, x0):
+    """(u0, r0) for an optional initial guess.
+
+    x0=None must keep the historical trace bitwise: u = 0, r = B, and no
+    MVM is issued. With a guess, one extra MVM forms r0 = B - K x0.
+    """
+    if x0 is None:
+        return jnp.zeros_like(B), B
+    x0 = x0.astype(B.dtype)
+    return x0, B - mvm(x0)
+
+
+def _pcg_standard(mvm, B, precond_solve, max_iters, min_iters, tol, allreduce,
+                  x0=None):
     dtype = B.dtype
 
     def vdot(a, b):
         return allreduce(jnp.sum(a * b, axis=0))
 
-    u = jnp.zeros_like(B)
-    r = B
+    u, r = _warm_init(mvm, B, x0)
     z = precond_solve(r)
     # reduction 0: <r,z> and <b,b> fused (both available up front)
     init = allreduce(jnp.stack([jnp.sum(r * z, 0), jnp.sum(B * B, 0)]))
@@ -151,7 +200,8 @@ def _pcg_standard(mvm, B, precond_solve, max_iters, min_iters, tol, allreduce):
     return PCGResult(u, alphas, betas, actives, rz0, rel, iters)
 
 
-def _pcg_pipelined(mvm, B, precond_solve, max_iters, min_iters, tol, allreduce):
+def _pcg_pipelined(mvm, B, precond_solve, max_iters, min_iters, tol, allreduce,
+                   x0=None):
     """Chronopoulos–Gear CG: one fused all-reduce per iteration."""
     dtype = B.dtype
 
@@ -161,8 +211,7 @@ def _pcg_pipelined(mvm, B, precond_solve, max_iters, min_iters, tol, allreduce):
         red = allreduce(part)
         return red[0], red[1], red[2]
 
-    x = jnp.zeros_like(B)
-    r = B
+    x, r = _warm_init(mvm, B, x0)
     b_norm2 = jnp.maximum(allreduce(jnp.sum(B * B, 0)), 1e-30)
     u = precond_solve(r)
     w = mvm(u)

@@ -103,8 +103,26 @@ def make_preconditioner(
     rank: int,
     noise_floor: float = 1e-4,
     jitter: float = 1e-6,
+    reuse: Preconditioner | None = None,
 ) -> Preconditioner:
-    """Build the rank-k pivoted-Cholesky preconditioner for K_hat."""
+    """Build the rank-k pivoted-Cholesky preconditioner for K_hat.
+
+    reuse: amortization path — return the previous step's Preconditioner
+    (including its cached `chol_inner`) instead of recomputing, skipping the
+    O(n * rank^2) factorization entirely. CG stays EXACT under a stale P:
+    any fixed SPD preconditioner leaves the solution unchanged and only the
+    iteration count degrades as hyperparameters drift, which is why the
+    `repro.train.solver_state` refresh schedule (refresh_every + a relative
+    drift threshold) can reuse it across nearby optimizer steps. Note the
+    whole P is reused — sigma^2 too — since splicing the current noise into
+    a stale `chol_inner` would produce an inconsistent Woodbury solve.
+    """
+    if reuse is not None:
+        if reuse.rank != (rank if rank > 0 else 0):
+            raise ValueError(
+                f"cannot reuse a rank-{reuse.rank} preconditioner for "
+                f"rank={rank}")
+        return reuse
     if rank <= 0:
         # identity-preconditioner degenerate case: L = (n, 0)
         n = X.shape[0]

@@ -44,6 +44,13 @@ def main():
     ap.add_argument("--gp-dtype", default="float32",
                     choices=("float32", "bfloat16"),
                     help="operator compute dtype (bf16 = MXU fast path)")
+    ap.add_argument("--gp-refresh-every", type=int, default=5,
+                    help="warm-start engine: rebuild the preconditioner + "
+                         "redraw SLQ probes every K optimizer steps "
+                         "(0 = disable warm starts, every step cold)")
+    ap.add_argument("--gp-drift-threshold", type=float, default=0.1,
+                    help="relative hyperparameter drift that forces a "
+                         "preconditioner refresh before the schedule does")
     ap.add_argument("--save-artifact", default="",
                     help="directory: persist a servable repro.serve "
                          "PosteriorArtifact after GP training")
@@ -86,12 +93,12 @@ def _train_gp(args):
 
     from repro.core import init_params
     from repro.core.distributed import (
-        DistMLLConfig, make_geometry, make_mll_value_and_grad, replicate,
-        shard_vector,
+        DistMLLConfig, make_geometry, replicate, shard_vector,
     )
     from repro.data import make_regression_dataset
     from repro.launch.mesh import make_host_mesh
     from repro.optim import adam_init, adam_update
+    from repro.train.solver_state import DistWarmStartEngine, WarmStartConfig
 
     mesh = make_host_mesh(data=args.data, model=args.model)
     s = make_regression_dataset("houseelectric", max_points=args.gp_n * 3)
@@ -103,18 +110,28 @@ def _train_gp(args):
     cfg = DistMLLConfig(precond_rank=100, num_probes=8, max_cg_iters=20,
                         cg_tol=1.0, backend=args.gp_backend,
                         compute_dtype=gp_dtype)
-    vg = make_mll_value_and_grad(mesh, geom, cfg)
+    warm = WarmStartConfig(enabled=args.gp_refresh_every > 0,
+                           refresh_every=max(args.gp_refresh_every, 1),
+                           drift_threshold=args.gp_drift_threshold)
+    engine = DistWarmStartEngine(mesh, geom, cfg, warm)
     params = init_params(noise=0.3, dtype=jnp.float32)
     state = adam_init(params)
     Xr, ys = replicate(mesh, X), shard_vector(mesh, geom, y)
     print(f"[train-gp] n={n} mode={args.gp_mode} backend={args.gp_backend} "
-          f"dtype={args.gp_dtype} "
+          f"dtype={args.gp_dtype} refresh_every={args.gp_refresh_every} "
           f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
     for step_i in range(args.steps):
-        loss, aux, grads = vg(Xr, ys, replicate(mesh, params),
-                              jax.random.PRNGKey(step_i))
+        loss, aux, grads = engine.step(Xr, ys, params,
+                                       jax.random.PRNGKey(step_i))
         params, state = adam_update(params, grads, state, 0.1)
-        print(f"[train-gp] step {step_i}: nll/n={float(loss):.4f}")
+        t = engine.telemetry[-1]
+        print(f"[train-gp] step {step_i}: nll/n={float(loss):.4f} "
+              f"solve={t['mode']} cg_iters={t['cg_iters']} "
+              f"drift={t['drift']:.3f} dt={t['seconds']:.2f}s")
+    total = sum(t["cg_iters"] for t in engine.telemetry)
+    refreshes = sum(t["refreshed"] for t in engine.telemetry)
+    print(f"[train-gp] solver telemetry: total_cg_iters={total} "
+          f"precond_refreshes={refreshes} steps={args.steps}")
 
     if args.save_artifact:
         # mesh-trained hyperparameters -> a servable single-host artifact

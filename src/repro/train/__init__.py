@@ -1,11 +1,20 @@
 from .checkpoint import CheckpointManager, load_checkpoint, save_checkpoint
 from .elastic import reshard, validate_divisibility
 from .gp_trainer import GPTrainConfig, fit_exact_gp, fit_sgpr, fit_svgp
+from .solver_state import (
+    DistWarmStartEngine,
+    SolverState,
+    WarmStartConfig,
+    WarmStartEngine,
+    param_drift,
+)
 from .trainer import TrainLoopConfig, TrainLoopResult, run_train_loop
 
 __all__ = [
     "CheckpointManager", "load_checkpoint", "save_checkpoint",
     "reshard", "validate_divisibility",
     "GPTrainConfig", "fit_exact_gp", "fit_sgpr", "fit_svgp",
+    "DistWarmStartEngine", "SolverState", "WarmStartConfig",
+    "WarmStartEngine", "param_drift",
     "TrainLoopConfig", "TrainLoopResult", "run_train_loop",
 ]

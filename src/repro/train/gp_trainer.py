@@ -26,6 +26,7 @@ from repro.core.kernels_math import GPParams
 from repro.core.sgpr import SGPRParams, init_sgpr_params, sgpr_loss
 from repro.core.svgp import SVGPParams, init_svgp_params, svgp_loss
 from repro.optim import adam_init, adam_update, lbfgs_minimize
+from repro.train.solver_state import WarmStartConfig, WarmStartEngine
 
 
 class GPTrainConfig(NamedTuple):
@@ -39,12 +40,26 @@ class GPTrainConfig(NamedTuple):
     plain_adam_steps: int = 100
     plain_adam_lr: float = 0.1
     seed: int = 0
+    # warm-started solve engine for the full-data stages (solver_state):
+    # refresh_every/drift_threshold schedule the preconditioner + probe
+    # refresh; warm_start=False restores the stateless per-step behavior.
+    warm_start: bool = True
+    refresh_every: int = 5
+    drift_threshold: float = 0.1
+
+    def warm_config(self) -> WarmStartConfig:
+        return WarmStartConfig(enabled=self.warm_start,
+                               refresh_every=self.refresh_every,
+                               drift_threshold=self.drift_threshold)
 
 
 class GPFitResult(NamedTuple):
     params: GPParams
     loss_trace: list
     seconds: float
+    # per-step solver telemetry from the full-data stage (dicts with mode /
+    # refreshed / cg_iters / drift / seconds), empty for subset-only fits
+    telemetry: tuple = ()
 
 
 def fit_exact_gp(gp: ExactGP, X, y, *, cfg: GPTrainConfig = GPTrainConfig(),
@@ -58,18 +73,43 @@ def fit_exact_gp(gp: ExactGP, X, y, *, cfg: GPTrainConfig = GPTrainConfig(),
     save_artifact: optional directory — after fitting, run the one-time
     precomputation and persist a servable `repro.serve` PosteriorArtifact
     there (the train-to-serve hook; `repro.launch.train --save-artifact`).
+
+    Full-data stages (finetune / plain Adam) run on the warm-started solve
+    engine (`repro.train.solver_state.WarmStartEngine`): SolveState —
+    previous solutions, the SLQ probe block, and the pivoted-Cholesky
+    preconditioner — is carried across optimizer steps on whatever
+    KernelOperator backend `gp.config.backend` selects, per the
+    cfg.refresh_every / cfg.drift_threshold schedule. Per-step telemetry
+    lands in GPFitResult.telemetry.
     """
     t0 = time.time()
     key = jax.random.PRNGKey(cfg.seed)
     n, d = X.shape
     params = gp.init_params(d, noise=noise_init, dtype=X.dtype)
     trace: list = []
+    telemetry: tuple = ()
 
     def make_loss(Xs, ys):
         def loss_fn(p, k):
             val, aux = gp.loss(Xs, ys, p, k)
             return val
         return loss_fn
+
+    def run_full_data_stage(steps, lr, params, tag):
+        nonlocal key
+        engine = WarmStartEngine(gp.config.mll_config(), cfg.warm_config())
+        state = adam_init(params)
+        for i in range(steps):
+            key, k = jax.random.split(key)
+            val, aux, g = engine.step(X, y, params, k)
+            params, state = adam_update(params, g, state, lr)
+            trace.append(float(val))
+            if verbose and (steps <= 10 or i % 10 == 0):
+                t = engine.telemetry[-1]
+                print(f"  {tag} {i}: {float(val):.5f} "
+                      f"[{t['mode']} cg_iters={t['cg_iters']} "
+                      f"dt={t['seconds']:.2f}s]")
+        return params, tuple(engine.telemetry)
 
     if method == "pretrain":
         # --- stage 1: subset pretraining ---------------------------------
@@ -95,29 +135,13 @@ def fit_exact_gp(gp: ExactGP, X, y, *, cfg: GPTrainConfig = GPTrainConfig(),
             if verbose:
                 print(f"  pretrain adam {i}: {float(val):.5f}")
 
-        # --- stage 2: few-step finetune on the full data ------------------
-        loss_full = make_loss(X, y)
-        vg_full = jax.jit(jax.value_and_grad(loss_full))
-        state = adam_init(params)
-        for i in range(cfg.finetune_adam_steps):
-            key, k = jax.random.split(key)
-            val, g = vg_full(params, k)
-            params, state = adam_update(params, g, state, cfg.finetune_adam_lr)
-            trace.append(float(val))
-            if verbose:
-                print(f"  finetune adam {i}: {float(val):.5f}")
+        # --- stage 2: few-step finetune on the full data (warm-started) ---
+        params, telemetry = run_full_data_stage(
+            cfg.finetune_adam_steps, cfg.finetune_adam_lr, params, "finetune")
 
     elif method == "adam":
-        loss_full = make_loss(X, y)
-        vg_full = jax.jit(jax.value_and_grad(loss_full))
-        state = adam_init(params)
-        for i in range(cfg.plain_adam_steps):
-            key, k = jax.random.split(key)
-            val, g = vg_full(params, k)
-            params, state = adam_update(params, g, state, cfg.plain_adam_lr)
-            trace.append(float(val))
-            if verbose and i % 10 == 0:
-                print(f"  adam {i}: {float(val):.5f}")
+        params, telemetry = run_full_data_stage(
+            cfg.plain_adam_steps, cfg.plain_adam_lr, params, "adam")
     else:
         raise ValueError(f"unknown method {method!r}")
 
@@ -136,7 +160,8 @@ def fit_exact_gp(gp: ExactGP, X, y, *, cfg: GPTrainConfig = GPTrainConfig(),
             print(f"  saved posterior artifact: {path} "
                   f"(rel_residual={art.meta['solve_rel_residual']:.2e})")
 
-    return GPFitResult(params=params, loss_trace=trace, seconds=time.time() - t0)
+    return GPFitResult(params=params, loss_trace=trace,
+                       seconds=time.time() - t0, telemetry=telemetry)
 
 
 def fit_sgpr(kind: str, X, y, num_inducing: int = 512, *, steps: int = 100,

@@ -1,0 +1,262 @@
+"""Warm-started training engine: solver state amortized across optimizer steps.
+
+The paper's training loop evaluates the BBMM MLL once per Adam/L-BFGS step,
+and hyperparameters move slowly between steps — successive calls solve
+nearly identical systems K_hat^{-1}[y_c, z_1..z_t] and refactorize the same
+rank-k pivoted-Cholesky preconditioner. This module makes the solver a
+long-lived stateful engine instead of a per-step black box (the gp2Scale
+lesson, Noack et al.):
+
+  * the previous step's converged solutions seed mBCG (`pcg(..., x0=...)`),
+  * the SLQ probe block is drawn ONCE per refresh and reused, so the probe
+    solutions stay valid initial guesses,
+  * the preconditioner (including its k x k `chol_inner`) is reused until a
+    `refresh_every` schedule or a relative hyperparameter-drift threshold
+    triggers recomputation (`pivchol.make_preconditioner(reuse=...)`).
+
+Correctness envelope: CG is exact under any fixed SPD preconditioner and any
+x0, and the Eq. 2 gradient estimator contracts converged solves — so warm
+steps change ITERATION COUNTS, not the estimator. The one quantity warm
+iterates cannot re-estimate is the SLQ log-determinant (their Lanczos
+tridiag describes Krylov(K, r0), not Krylov(K, z)); warm steps carry the
+estimate from the last refresh, so the reported loss VALUE between
+refreshes is O(drift)-stale while gradients stay current. See
+EXPERIMENTS.md §Warm-start for the measured iteration savings.
+
+Engines are host-loop objects (the refresh decision branches in Python on
+concrete hyperparameters): `WarmStartEngine` for the single-device
+KernelOperator backends (dense / partitioned / pallas), and
+`DistWarmStartEngine` wrapping `distributed.make_warm_mll_step` for the
+sharded engine. Both expose `step(X, y, params, key) -> (loss, aux, grads)`
+plus a per-step `telemetry` list (CG iterations applied, preconditioner
+refreshes, drift, wall time) that `repro.launch.train` surfaces.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mll import (
+    MLLAux,
+    MLLConfig,
+    operator_mll_backward,
+    operator_mll_forward,
+)
+from repro.core.operators import make_operator
+from repro.core.pcg import SolveState
+
+
+class WarmStartConfig(NamedTuple):
+    """Host-side refresh schedule for the stateful solve engine.
+
+    enabled:         False = every step is cold (the pre-engine behavior).
+    refresh_every:   rebuild the preconditioner + redraw SLQ probes every k
+                     steps (k=1 still warm-starts the y column from the
+                     previous solve on the fresh system).
+    drift_threshold: max relative change of the constrained kernel/noise
+                     hyperparameters (see `param_drift`) since the last
+                     refresh before a refresh is forced — the
+                     stale-preconditioner safety valve.
+    warm_min_iters:  min CG iterations on warm steps (cold steps keep the
+                     MLLConfig floor, which is what makes a zero start do
+                     any work at the paper's eps=1 tolerance).
+    """
+
+    enabled: bool = True
+    refresh_every: int = 5
+    drift_threshold: float = 0.1
+    warm_min_iters: int = 1
+
+
+class SolverState(NamedTuple):
+    """Device-side engine state threaded between steps (a plain pytree)."""
+
+    solve: SolveState   # solutions (n, 1+t) + probes (n, t)
+    precond: Any        # Preconditioner (reused until refresh)
+    logdet: jax.Array   # SLQ logdet at the last refresh (carried when warm)
+
+
+def _softplus_np(x):
+    x = np.asarray(x, np.float64)
+    return np.log1p(np.exp(-np.abs(x))) + np.maximum(x, 0.0)
+
+
+def param_drift(ref, params) -> float:
+    """Max relative change of the CONSTRAINED hyperparameters that the
+    preconditioner actually depends on (host-side, concrete params).
+
+    The pivoted-Cholesky factor is a function of (lengthscale, outputscale)
+    and its Woodbury solve of sigma^2; the constant mean never enters K_hat,
+    so it is excluded — otherwise a mean moving off its zero init would
+    read as unbounded relative drift. For non-GPParams pytrees this falls
+    back to max relative change over all leaves.
+    """
+    if hasattr(ref, "raw_lengthscale"):
+        pairs = [(_softplus_np(getattr(ref, f)), _softplus_np(getattr(params, f)))
+                 for f in ("raw_lengthscale", "raw_outputscale", "raw_noise")]
+    else:
+        pairs = list(zip(
+            (np.asarray(a, np.float64) for a in jax.tree.leaves(ref)),
+            (np.asarray(b, np.float64) for b in jax.tree.leaves(params))))
+    drift = 0.0
+    for a, b in pairs:
+        denom = np.maximum(np.abs(a), 1e-8)
+        drift = max(drift, float(np.max(np.abs(b - a) / denom)))
+    return drift
+
+
+class _WarmEngineBase:
+    """Host-side schedule + telemetry shared by both engines.
+
+    Subclasses provide `_dispatch(mode, X, y, params, key)` returning
+    (loss, MLLAux, g_params, new_state); everything else — the refresh
+    decision, state/params_ref bookkeeping, per-step telemetry — lives
+    here exactly once.
+    """
+
+    def __init__(self, warm: WarmStartConfig | None = None):
+        self.warm = warm or WarmStartConfig()
+        self.state = None
+        self.telemetry: list[dict] = []
+        self._params_ref = None
+        self._steps_since_refresh = 0
+
+    def _dispatch(self, mode, X, y, params, key):
+        raise NotImplementedError
+
+    def _mode(self, params) -> tuple[str, float]:
+        if self.state is None or not self.warm.enabled:
+            return "cold", 0.0
+        drift = param_drift(self._params_ref, params)
+        if (self._steps_since_refresh >= self.warm.refresh_every
+                or drift > self.warm.drift_threshold):
+            return "refresh", drift
+        return "warm", drift
+
+    def step(self, X, y, params, key):
+        """One MLL evaluation: (loss, MLLAux, g_params). Appends telemetry."""
+        t0 = time.perf_counter()
+        mode, drift = self._mode(params)
+        loss, aux, g_params, state = self._dispatch(mode, X, y, params, key)
+        jax.block_until_ready(loss)
+        if self.warm.enabled:
+            self.state = state
+            if mode != "warm":
+                self._params_ref = params
+                self._steps_since_refresh = 0
+            self._steps_since_refresh += 1
+        self.telemetry.append({
+            "mode": mode,
+            "refreshed": mode != "warm",
+            "cg_iters": int(np.sum(np.asarray(aux.cg_iterations))),
+            "drift": drift,
+            "seconds": time.perf_counter() - t0,
+        })
+        return loss, aux, g_params
+
+    def reset(self):
+        self.state = None
+        self._params_ref = None
+        self._steps_since_refresh = 0
+
+
+class WarmStartEngine(_WarmEngineBase):
+    """Stateful MLL value+grad engine for single-device operator backends.
+
+    step() returns (loss, aux, g_params) with loss = -mll/n — the same
+    quantity `jax.value_and_grad(gp.loss)` produced before, with gradients
+    assembled by the identical Eq. 2 code path (`operator_mll_backward`),
+    so a disabled engine reproduces the stateless trainer's numbers.
+    """
+
+    def __init__(self, cfg: MLLConfig, warm: WarmStartConfig | None = None):
+        super().__init__(warm)
+        self.cfg = cfg
+        self._fns = {mode: jax.jit(self._make_step(mode))
+                     for mode in ("cold", "refresh", "warm")}
+
+    def _dispatch(self, mode, X, y, params, key):
+        if mode == "cold":
+            return self._fns["cold"](X, y, params, key)
+        return self._fns[mode](X, y, params, key, self.state)
+
+    # -- jitted step bodies -------------------------------------------------
+
+    def _make_step(self, mode: str):
+        cfg = self.cfg
+        warm_min_iters = self.warm.warm_min_iters
+
+        def fn(X, y, params, key, state=None):
+            op = make_operator(cfg.operator_config(), X, params)
+            n = X.shape[0]
+            if mode == "warm":
+                precond = op.preconditioner(cfg.precond_rank,
+                                            reuse=state.precond)
+                probes, x0 = state.solve.probes, state.solve.solutions
+                logdet_carry = state.logdet
+                min_iters = warm_min_iters
+            else:
+                precond = op.preconditioner(cfg.precond_rank)
+                probes = logdet_carry = None
+                min_iters = cfg.min_cg_iters
+                if mode == "refresh":
+                    # fresh probes invalidate the previous probe solutions,
+                    # but the y column still warm-starts
+                    x0 = jnp.concatenate(
+                        [state.solve.solutions[:, :1],
+                         jnp.zeros((n, cfg.num_probes), y.dtype)], axis=1)
+                else:
+                    x0 = None
+            (value, aux), (yc, u_y, U, pinv_z), solve = operator_mll_forward(
+                op, y, key,
+                precond_rank=cfg.precond_rank, num_probes=cfg.num_probes,
+                max_cg_iters=cfg.max_cg_iters, min_cg_iters=min_iters,
+                cg_tol=cfg.cg_tol, pcg_method=cfg.pcg_method,
+                precond=precond, probes=probes, x0=x0,
+                logdet_carry=logdet_carry)
+            _, _, g_params = operator_mll_backward(
+                cfg, X, params, u_y, U, pinv_z, -1.0 / n)
+            new_state = SolverState(solve=solve, precond=precond,
+                                    logdet=aux.logdet)
+            return -value / n, aux, g_params, new_state
+
+        return fn
+
+
+class DistWarmStartEngine(_WarmEngineBase):
+    """The same engine over the sharded backend (shard_map on a mesh).
+
+    Wraps `repro.core.distributed.make_warm_mll_step`; the refresh schedule
+    and telemetry come from the shared base. aux comes back as the
+    (logdet, quad, cg_iterations, rel_residual) tuple the distributed MLL
+    uses, repacked into MLLAux here.
+    """
+
+    def __init__(self, mesh, geom, cfg, warm: WarmStartConfig | None = None):
+        from repro.core.distributed import make_warm_mll_step, replicate
+
+        super().__init__(warm)
+        self.mesh = mesh
+        self.geom = geom
+        self.cfg = cfg
+        self._replicate = replicate
+        self._fns = make_warm_mll_step(
+            mesh, geom, cfg, warm_min_iters=self.warm.warm_min_iters)
+
+    def _dispatch(self, mode, X, y, params, key):
+        params_r = self._replicate(self.mesh, params)
+        if mode == "cold":
+            out = self._fns.cold(X, y, params_r, key)
+        elif mode == "refresh":
+            out = self._fns.refresh(X, y, params_r, key, self.state)
+        else:
+            out = self._fns.warm(X, y, params_r, key, self.state)
+        loss, aux_t, g_params, state = out
+        aux = MLLAux(logdet=aux_t[0], quad=aux_t[1],
+                     cg_iterations=aux_t[2], rel_residual=aux_t[3])
+        return loss, aux, g_params, state

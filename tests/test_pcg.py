@@ -101,3 +101,201 @@ def test_loose_tolerance_stops_early(rng):
     loose = pcg(mvm, y, pre.solve, max_iters=200, tol=1.0, min_iters=2)
     tight = pcg(mvm, y, pre.solve, max_iters=200, tol=1e-8, min_iters=2)
     assert int(loose.iterations[0]) < int(tight.iterations[0])
+
+
+# ---------------------------------------------------------------------------
+# warm starts (x0) — property tests + the x0=None bitwise guarantee
+# ---------------------------------------------------------------------------
+#
+# _golden_pcg_* are VERBATIM frozen copies of the loops as they stood before
+# the x0 argument existed (the "pre-PR" reference). They pin the guarantee
+# that threading x0 through the solver changed nothing when x0 is None: the
+# live solver must reproduce their solution AND the alpha/beta/rz0 traces
+# (which the SLQ log-determinant consumes) bitwise.
+
+
+def _golden_safe_div(num, den):
+    ok = jnp.abs(den) > 1e-30
+    return jnp.where(ok, num / jnp.where(ok, den, 1.0), 0.0)
+
+
+def _golden_pcg_standard(mvm, B, precond_solve, max_iters, min_iters, tol):
+    dtype = B.dtype
+    allreduce = lambda x: x
+
+    def vdot(a, b):
+        return allreduce(jnp.sum(a * b, axis=0))
+
+    u = jnp.zeros_like(B)
+    r = B
+    z = precond_solve(r)
+    init = allreduce(jnp.stack([jnp.sum(r * z, 0), jnp.sum(B * B, 0)]))
+    rz, b_norm2 = init[0], jnp.maximum(init[1], 1e-30)
+    rz0 = rz
+    p = z
+
+    def body(carry, j):
+        u, r, z, p, rz = carry
+        Kp = mvm(p)
+        red1 = allreduce(jnp.stack([jnp.sum(p * Kp, 0), jnp.sum(r * r, 0)]))
+        pKp, r_norm2 = red1[0], red1[1]
+        rel = jnp.sqrt(r_norm2 / b_norm2)
+        active = (rel > tol) | (j < min_iters)
+        alpha = jnp.where(active, _golden_safe_div(rz, pKp), 0.0)
+        u = u + alpha * p
+        r = r - alpha * Kp
+        z_new = precond_solve(r)
+        rz_new = vdot(r, z_new)
+        beta = jnp.where(active, _golden_safe_div(rz_new, rz), 0.0)
+        p = jnp.where(active, z_new + beta * p, p)
+        z = jnp.where(active, z_new, z)
+        rz = jnp.where(active, rz_new, rz)
+        return (u, r, z, p, rz), (alpha.astype(dtype), beta.astype(dtype), active)
+
+    from repro.models.runtime_flags import layer_scan_unroll
+    (u, r, _, _, _), (alphas, betas, actives) = jax.lax.scan(
+        body, (u, r, z, p, rz), jnp.arange(max_iters),
+        unroll=layer_scan_unroll())
+    rel = jnp.sqrt(vdot(r, r) / b_norm2)
+    iters = jnp.sum(actives, axis=0)
+    return u, alphas, betas, actives, rz0, rel, iters
+
+
+def _golden_pcg_pipelined(mvm, B, precond_solve, max_iters, min_iters, tol):
+    dtype = B.dtype
+    allreduce = lambda x: x
+
+    def fused(r, u, w):
+        part = jnp.stack([jnp.sum(r * u, 0), jnp.sum(w * u, 0), jnp.sum(r * r, 0)])
+        red = allreduce(part)
+        return red[0], red[1], red[2]
+
+    x = jnp.zeros_like(B)
+    r = B
+    b_norm2 = jnp.maximum(allreduce(jnp.sum(B * B, 0)), 1e-30)
+    u = precond_solve(r)
+    w = mvm(u)
+    gamma, delta, rr = fused(r, u, w)
+    rz0 = gamma
+    p = jnp.zeros_like(B)
+    s = jnp.zeros_like(B)
+    alpha_prev = jnp.ones_like(gamma)
+    gamma_prev = jnp.ones_like(gamma)
+
+    def body(carry, j):
+        x, r, u, w, p, s, gamma, delta, rr, gamma_prev, alpha_prev = carry
+        rel = jnp.sqrt(rr / b_norm2)
+        active = (rel > tol) | (j < min_iters)
+        first = j == 0
+        beta = jnp.where(first, 0.0, _golden_safe_div(gamma, gamma_prev))
+        denom = delta - beta * gamma / jnp.where(first, 1.0, alpha_prev)
+        alpha = jnp.where(active, _golden_safe_div(gamma, denom), 0.0)
+        beta = jnp.where(active, beta, 0.0)
+        p = jnp.where(active, u + beta * p, p)
+        s = jnp.where(active, w + beta * s, s)
+        x = x + alpha * p
+        r = r - alpha * s
+        u_new = precond_solve(r)
+        w_new = mvm(u_new)
+        gamma_new, delta_new, rr_new = fused(r, u_new, w_new)
+        u = jnp.where(active, u_new, u)
+        w = jnp.where(active, w_new, w)
+        gamma_prev_n = jnp.where(active, gamma, gamma_prev)
+        alpha_prev_n = jnp.where(active, alpha, alpha_prev)
+        gamma = jnp.where(active, gamma_new, gamma)
+        delta = jnp.where(active, delta_new, delta)
+        rr = jnp.where(active, rr_new, rr)
+        return ((x, r, u, w, p, s, gamma, delta, rr, gamma_prev_n, alpha_prev_n),
+                (alpha.astype(dtype), beta.astype(dtype), active))
+
+    from repro.models.runtime_flags import layer_scan_unroll
+    carry = (x, r, u, w, p, s, gamma, delta, rr, gamma_prev, alpha_prev)
+    (x, r, *rest), (alphas, betas, actives) = jax.lax.scan(
+        body, carry, jnp.arange(max_iters), unroll=layer_scan_unroll())
+    rel = jnp.sqrt(jnp.sum(r * r, 0) / b_norm2)
+    iters = jnp.sum(actives, axis=0)
+    return x, alphas, betas, actives, rz0, rel, iters
+
+
+_GOLDEN = {"standard": _golden_pcg_standard, "pipelined": _golden_pcg_pipelined}
+
+
+@settings(deadline=None, max_examples=6)
+@given(seed=st.integers(0, 2**16), t=st.integers(1, 3),
+       method=st.sampled_from(["standard", "pipelined"]),
+       tol=st.sampled_from([1.0, 1e-2, 1e-8]))
+def test_pcg_x0_none_bitwise_matches_pre_pr_loop(seed, t, method, tol):
+    """Property: x0=None (and x0=0, since K @ 0 == 0 exactly) reproduces the
+    pre-x0 loop BITWISE — solution and the alpha/beta/active/rz0 traces the
+    SLQ log-determinant estimator consumes."""
+    rng = np.random.default_rng(seed)
+    X, params, Khat, mvm = _setup(rng, n=72, noise=0.4)
+    B = jnp.asarray(rng.normal(size=(72, t)))
+    pre = make_preconditioner("matern32", X, params, 20)
+    golden = _GOLDEN[method](mvm, B, pre.solve, 40, 3, tol)
+    for x0 in (None, jnp.zeros_like(B)):
+        res = pcg(mvm, B, pre.solve, max_iters=40, min_iters=3, tol=tol,
+                  method=method, x0=x0)
+        for got, want, name in zip(
+                (res.solution, res.alphas, res.betas, res.active,
+                 res.rz0, res.iterations),
+                (golden[0], golden[1], golden[2], golden[3],
+                 golden[4], golden[6]),
+                ("solution", "alphas", "betas", "active", "rz0", "iters")):
+            assert np.array_equal(np.asarray(got), np.asarray(want)), (
+                method, "x0=0" if x0 is not None else "x0=None", name)
+
+
+@settings(deadline=None, max_examples=8)
+@given(seed=st.integers(0, 2**16), t=st.integers(1, 3),
+       method=st.sampled_from(["standard", "pipelined"]),
+       scale=st.floats(0.1, 10.0))
+def test_pcg_arbitrary_x0_same_solution(seed, t, method, scale):
+    """Property: an ARBITRARY initial guess converges to the zero-start
+    solution at equal (tight) tolerance — warm starts change iteration
+    counts, never the answer."""
+    rng = np.random.default_rng(seed)
+    X, params, Khat, mvm = _setup(rng, n=64, noise=0.5)
+    B = jnp.asarray(rng.normal(size=(64, t)))
+    x0 = jnp.asarray(scale * rng.normal(size=(64, t)))
+    pre = make_preconditioner("matern32", X, params, 20)
+    kw = dict(max_iters=200, min_iters=3, tol=1e-11, method=method)
+    res_cold = pcg(mvm, B, pre.solve, **kw)
+    res_warm = pcg(mvm, B, pre.solve, x0=x0, **kw)
+    np.testing.assert_allclose(np.asarray(res_warm.solution),
+                               np.asarray(res_cold.solution), atol=1e-6)
+    # and both really solve the system
+    np.testing.assert_allclose(np.asarray(res_warm.solution),
+                               np.asarray(jnp.linalg.solve(Khat, B)),
+                               atol=1e-5)
+
+
+def test_pcg_near_converged_x0_exits_at_min_iters(rng):
+    """Seeding with the exact solution leaves nothing to do: the relative
+    residual collapses immediately and only the min_iters floor is applied."""
+    X, params, Khat, mvm = _setup(rng)
+    B = jnp.asarray(rng.normal(size=(X.shape[0], 2)))
+    exact = jnp.linalg.solve(Khat, B)
+    pre = make_preconditioner("matern32", X, params, 30)
+    cold = pcg(mvm, B, pre.solve, max_iters=150, min_iters=2, tol=1e-8)
+    warm = pcg(mvm, B, pre.solve, max_iters=150, min_iters=2, tol=1e-8,
+               x0=exact)
+    assert int(np.max(np.asarray(warm.iterations))) == 2
+    assert int(np.min(np.asarray(cold.iterations))) > 2
+    np.testing.assert_allclose(np.asarray(warm.solution), np.asarray(exact),
+                               atol=1e-8)
+
+
+def test_pcg_state_carries_solutions(rng):
+    """PCGResult.state is the warm-start handle for the next call."""
+    X, params, Khat, mvm = _setup(rng)
+    B = jnp.asarray(rng.normal(size=(X.shape[0], 2)))
+    res = pcg(mvm, B, None, max_iters=60, min_iters=3, tol=1e-6)
+    state = res.state
+    assert state.probes is None
+    np.testing.assert_array_equal(np.asarray(state.solutions),
+                                  np.asarray(res.solution))
+    warm = pcg(mvm, B, None, max_iters=60, min_iters=2, tol=1e-6,
+               x0=state.solutions)
+    assert int(np.max(np.asarray(warm.iterations))) <= \
+        int(np.max(np.asarray(res.iterations)))

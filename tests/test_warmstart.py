@@ -1,0 +1,229 @@
+"""Warm-started training engine: solver-state reuse across optimizer steps.
+
+Covers the `repro.train.solver_state` engine (and its distributed twin):
+  * a DISABLED engine reproduces the stateless custom-VJP trainer bitwise
+    (same Eq. 1 forward, same Eq. 2 assembly);
+  * stale-preconditioner safety: a warm-started finetune with
+    refresh_every > 1 reaches the same final MLL as the cold loop (the
+    per-datum loss unit the trainer optimizes, atol 1e-4) and never blows
+    through max_cg_iters masked-divergence — on dense AND partitioned
+    backends;
+  * the refresh schedule and drift threshold actually fire;
+  * fit_exact_gp surfaces per-step telemetry.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_gp_data
+from repro.core import ExactGP, ExactGPConfig, MLLConfig, exact_mll, init_params
+from repro.optim import adam_init, adam_update
+from repro.train.gp_trainer import GPTrainConfig, fit_exact_gp
+from repro.train.solver_state import (
+    SolverState,
+    WarmStartConfig,
+    WarmStartEngine,
+    param_drift,
+)
+
+N = 160
+
+
+def _data(rng):
+    return make_gp_data(rng, n=N, d=3, noise=0.1)
+
+
+def _cfg(backend="partitioned", **kw):
+    base = dict(precond_rank=30, num_probes=8, max_cg_iters=100,
+                min_cg_iters=3, cg_tol=0.01, row_block=48, backend=backend)
+    base.update(kw)
+    return MLLConfig(**base)
+
+
+def _run(engine, X, y, params, steps, lr=0.05, key=None):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    state = adam_init(params)
+    last = None
+    for _ in range(steps):
+        last, aux, g = engine.step(X, y, params, key)
+        params, state = adam_update(params, g, state, lr)
+    return params, last
+
+
+def test_disabled_engine_matches_custom_vjp(rng):
+    """enabled=False must be the pre-engine trainer: same loss, same grads
+    as jax.value_and_grad over the custom-VJP exact_mll."""
+    X, y = _data(rng)
+    params = init_params(noise=0.3, dtype=X.dtype)
+    cfg = _cfg()
+    key = jax.random.PRNGKey(3)
+    eng = WarmStartEngine(cfg, WarmStartConfig(enabled=False))
+    loss_e, aux_e, g_e = eng.step(X, y, params, key)
+
+    def loss_fn(p):
+        v, _ = exact_mll(cfg, X, y, p, key)
+        return -v / X.shape[0]
+
+    loss_r, g_r = jax.value_and_grad(loss_fn)(params)
+    assert abs(float(loss_e) - float(loss_r)) < 1e-12
+    for a, b in zip(jax.tree.leaves(g_e), jax.tree.leaves(g_r)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-12)
+    assert eng.state is None  # disabled engine stays stateless
+
+
+@pytest.mark.parametrize("backend", ("dense", "partitioned"))
+def test_warm_finetune_matches_cold_final_mll(rng, backend):
+    """Stale-preconditioner safety: refresh_every > 1 reuses P (and its
+    chol_inner) across steps yet lands on the same final MLL (per-datum,
+    atol 1e-4), with fewer total CG iterations, and no step ever exceeds
+    max_cg_iters (the masked-divergence guard)."""
+    X, y = _data(rng)
+    params0 = init_params(noise=0.3, dtype=X.dtype)
+    cfg = _cfg(backend=backend)
+    key = jax.random.PRNGKey(0)
+    steps = 8
+
+    cold = WarmStartEngine(cfg, WarmStartConfig(enabled=False))
+    p_cold, _ = _run(cold, X, y, params0, steps, key=key)
+    warm = WarmStartEngine(
+        cfg, WarmStartConfig(enabled=True, refresh_every=4,
+                             drift_threshold=0.5))
+    p_warm, _ = _run(warm, X, y, params0, steps, key=key)
+
+    # same destination: evaluate both final params with one cold tight solve
+    eval_cfg = cfg._replace(cg_tol=1e-6, max_cg_iters=300)
+    m_cold = float(exact_mll(eval_cfg, X, y, p_cold, key)[0]) / N
+    m_warm = float(exact_mll(eval_cfg, X, y, p_warm, key)[0]) / N
+    assert abs(m_cold - m_warm) < 1e-4, (m_cold, m_warm)
+
+    # warm solver state must actually pay off and must stay bounded
+    it_cold = sum(t["cg_iters"] for t in cold.telemetry)
+    it_warm = sum(t["cg_iters"] for t in warm.telemetry)
+    assert it_warm < it_cold, (it_warm, it_cold)
+    assert sum(t["refreshed"] for t in warm.telemetry) < steps
+    for eng in (cold, warm):
+        for t in eng.telemetry:
+            assert t["cg_iters"] <= cfg.max_cg_iters * (1 + cfg.num_probes)
+    per_col_max = max(
+        int(np.max(np.asarray(warm.step(X, y, p_warm, key)[1].cg_iterations))),
+        0)
+    assert per_col_max <= cfg.max_cg_iters
+
+
+def test_refresh_schedule_fires_on_count_and_drift(rng):
+    X, y = _data(rng)
+    params = init_params(noise=0.3, dtype=X.dtype)
+    cfg = _cfg()
+
+    eng = WarmStartEngine(
+        cfg, WarmStartConfig(enabled=True, refresh_every=3,
+                             drift_threshold=1e9))
+    _run(eng, X, y, params, 7, lr=0.02)
+    assert [t["mode"] for t in eng.telemetry] == \
+        ["cold", "warm", "warm", "refresh", "warm", "warm", "refresh"]
+
+    # a tiny drift threshold forces a refresh every step (never warm)
+    eng2 = WarmStartEngine(
+        cfg, WarmStartConfig(enabled=True, refresh_every=1000,
+                             drift_threshold=1e-12))
+    _run(eng2, X, y, params, 4, lr=0.05)
+    modes = [t["mode"] for t in eng2.telemetry]
+    assert modes[0] == "cold" and all(m == "refresh" for m in modes[1:])
+
+
+def test_solver_state_contents(rng):
+    """SolverState carries the solve block, the reused probes, and the
+    preconditioner; warm steps keep probes/preconditioner bitwise."""
+    X, y = _data(rng)
+    params = init_params(noise=0.3, dtype=X.dtype)
+    cfg = _cfg()
+    eng = WarmStartEngine(cfg, WarmStartConfig(refresh_every=100,
+                                               drift_threshold=1e9))
+    eng.step(X, y, params, jax.random.PRNGKey(0))
+    s0: SolverState = eng.state
+    assert s0.solve.solutions.shape == (N, 1 + cfg.num_probes)
+    assert s0.solve.probes.shape == (N, cfg.num_probes)
+    assert s0.precond.L.shape == (N, cfg.precond_rank)
+    eng.step(X, y, params, jax.random.PRNGKey(1))
+    s1 = eng.state
+    np.testing.assert_array_equal(np.asarray(s0.solve.probes),
+                                  np.asarray(s1.solve.probes))
+    np.testing.assert_array_equal(np.asarray(s0.precond.L),
+                                  np.asarray(s1.precond.L))
+    np.testing.assert_array_equal(np.asarray(s0.logdet), np.asarray(s1.logdet))
+    # identical system + converged x0 => the warm step applies (far) fewer
+    # iterations than the cold one
+    assert eng.telemetry[1]["cg_iters"] < eng.telemetry[0]["cg_iters"]
+
+
+def test_param_drift_ignores_mean_counts_kernel_params():
+    a = init_params(noise=0.3, dtype=jnp.float32)
+    b = a._replace(raw_mean=a.raw_mean + 5.0)
+    assert param_drift(a, b) == 0.0
+    c = a._replace(raw_noise=a.raw_noise + 0.5)
+    assert param_drift(a, c) > 0.1
+
+
+def test_fit_exact_gp_surfaces_telemetry(rng):
+    X, y = _data(rng)
+    gp = ExactGP(ExactGPConfig(precond_rank=20, num_probes=4,
+                               train_max_cg_iters=30, row_block=48))
+    cfg = GPTrainConfig(pretrain_subset=80, pretrain_lbfgs_steps=2,
+                        pretrain_adam_steps=2, finetune_adam_steps=4,
+                        refresh_every=2, drift_threshold=10.0, seed=0)
+    res = fit_exact_gp(gp, X, y, cfg=cfg)
+    assert len(res.telemetry) == 4
+    assert res.telemetry[0]["mode"] == "cold"
+    assert any(t["mode"] == "warm" for t in res.telemetry)
+    for t in res.telemetry:
+        assert {"mode", "refreshed", "cg_iters", "drift", "seconds"} <= set(t)
+    # warm start disabled -> all cold, telemetry still present
+    res2 = fit_exact_gp(gp, X, y, cfg=cfg._replace(warm_start=False))
+    assert [t["mode"] for t in res2.telemetry] == ["cold"] * 4
+    assert np.isfinite(res2.loss_trace).all()
+
+
+def test_dist_engine_matches_single_device(rng):
+    """DistWarmStartEngine on a 1-device mesh: same schedule semantics,
+    iteration savings, and a final loss matching the single-device engine
+    (same probes cannot be guaranteed across the two probe samplers, so the
+    comparison is against the cold-eval MLL, per-datum atol 1e-4)."""
+    from repro.core.distributed import (
+        DistMLLConfig, make_geometry, replicate, shard_vector,
+    )
+    from repro.train.solver_state import DistWarmStartEngine
+
+    X, y = _data(rng)
+    params0 = init_params(noise=0.3, dtype=X.dtype)
+    mesh = jax.make_mesh((1,), ("data",))
+    geom = make_geometry(mesh, N, X.shape[1], mode="1d", row_block=48)
+    dcfg = DistMLLConfig(precond_rank=30, num_probes=8, max_cg_iters=100,
+                         cg_tol=0.01)
+    key = jax.random.PRNGKey(0)
+    steps = 6
+
+    def run_dist(warm):
+        eng = DistWarmStartEngine(mesh, geom, dcfg, warm)
+        p, st = params0, adam_init(params0)
+        Xr, ys = replicate(mesh, X), shard_vector(mesh, geom, y)
+        for _ in range(steps):
+            _, aux, g = eng.step(Xr, ys, p, key)
+            assert int(np.max(np.asarray(aux.cg_iterations))) <= \
+                dcfg.max_cg_iters
+            p, st = adam_update(p, g, st, 0.05)
+        return p, eng
+
+    p_cold, eng_cold = run_dist(WarmStartConfig(enabled=False))
+    p_warm, eng_warm = run_dist(
+        WarmStartConfig(enabled=True, refresh_every=3, drift_threshold=0.5))
+    assert sum(t["cg_iters"] for t in eng_warm.telemetry) < \
+        sum(t["cg_iters"] for t in eng_cold.telemetry)
+    assert [t["mode"] for t in eng_warm.telemetry][:4] == \
+        ["cold", "warm", "warm", "refresh"]
+
+    eval_cfg = _cfg()._replace(cg_tol=1e-6, max_cg_iters=300)
+    m_cold = float(exact_mll(eval_cfg, X, y, p_cold, key)[0]) / N
+    m_warm = float(exact_mll(eval_cfg, X, y, p_warm, key)[0]) / N
+    assert abs(m_cold - m_warm) < 1e-4, (m_cold, m_warm)
