@@ -1,0 +1,95 @@
+"""Kernel-algebra ablation (EXPERIMENTS §Kernel algebra): cost of composite
+kernels across operator backends.
+
+Measures the MVM wall time and one full MLL step (value + Eq. 2 gradients)
+for 1-, 2- and 4-component sum kernels on dense vs partitioned vs
+pallas-interpret, plus the fused plan's pass count. The headline the fused
+Pallas epilogue buys: a C-component scalar-lengthscale sum plans to ONE
+fused pass (one traversal of HBM), so its MVM cost grows with the
+elementwise phi work only — while the dense/partitioned paths pay one
+distance matmul per component. Interpret mode measures CPU emulation, so
+absolute times are not TPU times; the scaling SHAPE (passes vs components)
+is the portable signal (see EXPERIMENTS.md §Kernel algebra for the
+roofline reading).
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    MLLConfig,
+    OperatorConfig,
+    exact_mll,
+    init_kernel_params,
+    make_operator,
+    parse_kernel,
+)
+from repro.kernels.ops import mvm_plan
+
+from .common import write_rows
+
+SPECS = (
+    ("1", "scale(matern32)"),
+    ("2", "0.5*rbf + matern32"),
+    ("4", "0.5*rbf + matern32 + scale(rq) + 0.8*matern52"),
+)
+BACKENDS = ("dense", "partitioned", "pallas")
+N, D, T = 1024, 8, 4
+ROW_BLOCK = 256
+REPEATS = 3
+
+
+def _timeit(fn, *args):
+    fn(*args)  # compile
+    times = []
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def run():
+    rng = np.random.default_rng(0)
+    X = jnp.asarray(rng.normal(size=(N, D)), jnp.float32)
+    V = jnp.asarray(rng.normal(size=(N, T)), jnp.float32)
+    w = rng.normal(size=(D,))
+    y = jnp.asarray(np.sin(np.asarray(X) @ w) + 0.1 * rng.normal(size=N),
+                    jnp.float32)
+    key = jax.random.PRNGKey(0)
+
+    rows = []
+    for label, expr in SPECS:
+        spec = parse_kernel(expr)
+        params = init_kernel_params(spec, noise=0.3)
+        plan = mvm_plan(spec, params)
+        for backend in BACKENDS:
+            ocfg = OperatorConfig(kernel=spec, backend=backend,
+                                  row_block=ROW_BLOCK, interpret=True)
+            mvm = jax.jit(
+                lambda p, v, c=ocfg: make_operator(c, X, p).matvec(v))
+            mvm_ms = _timeit(mvm, params, V) * 1e3
+
+            mcfg = MLLConfig(kernel=spec, precond_rank=30, num_probes=4,
+                             max_cg_iters=20, cg_tol=1.0,
+                             row_block=ROW_BLOCK, backend=backend)
+            step = jax.jit(jax.value_and_grad(
+                lambda p, c=mcfg: exact_mll(c, X, y, p, key)[0]))
+            mll_ms = _timeit(step, params) * 1e3
+
+            rows.append([label, backend, plan.num_fused_passes,
+                         round(mvm_ms, 2), round(mll_ms, 2)])
+            print(f"[ablation_kernels] C={label} {backend}: "
+                  f"mvm={mvm_ms:.1f}ms mll_step={mll_ms:.1f}ms "
+                  f"fused_passes={plan.num_fused_passes}")
+
+    write_rows("ablation_kernels",
+               ["components", "backend", "fused_passes", "mvm_ms",
+                "mll_step_ms"], rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -9,6 +9,7 @@ One module per paper table/figure (+ extra ablations):
     fig4_subset         Fig 4    subset-of-data curves
     ablation_tolerance  Sec 3    CG tolerance train vs predict
     ablation_warmstart  §Warm-start  cold vs warm-started finetune solves
+    ablation_kernels    §Kernel algebra  1/2/4-component sums x backends
     roofline_report     §Roofline tables from experiments/dryrun/*.json
     serve_latency       §Serving p50/p99/QPS: backend x chunk x batch sweep
 """
@@ -26,10 +27,10 @@ def main():
                     help="single-seed Table 1")
     args = ap.parse_args()
 
-    from . import (ablation_tolerance, ablation_warmstart, fig1_fig5_init,
-                   fig2_multidevice, fig3_inducing, fig4_subset,
-                   roofline_report, serve_latency, table1_accuracy,
-                   table2_timing)
+    from . import (ablation_kernels, ablation_tolerance, ablation_warmstart,
+                   fig1_fig5_init, fig2_multidevice, fig3_inducing,
+                   fig4_subset, roofline_report, serve_latency,
+                   table1_accuracy, table2_timing)
 
     benches = {
         "table1_accuracy": (lambda: table1_accuracy.run(
@@ -41,6 +42,7 @@ def main():
         "fig4_subset": fig4_subset.run,
         "ablation_tolerance": ablation_tolerance.run,
         "ablation_warmstart": ablation_warmstart.run,
+        "ablation_kernels": ablation_kernels.run,
         "roofline_report": roofline_report.run,
         "serve_latency": serve_latency.run,
     }

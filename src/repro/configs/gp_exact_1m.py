@@ -13,6 +13,11 @@ class GPWorkloadConfig(NamedTuple):
     family: str = "gp"
     n: int = 1 << 20
     d: int = 9
+    # a stationary kind (the paper's Matern-3/2) or a composable spec
+    # expression such as "0.5*rbf + matern32" — parsed by
+    # repro.core.kernels_math.parse_kernel and threaded through every
+    # backend (the Pallas path fuses same-pass components; see
+    # repro.kernels.ops.mvm_plan)
     kernel: str = "matern32"
     precond_rank: int = 100
     num_probes: int = 8

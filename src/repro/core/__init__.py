@@ -2,7 +2,8 @@
 
 The paper's contribution as a composable JAX library. Layering (bottom-up):
 
-    kernels_math   stationary kernels + hyperparameter transforms
+    kernels_math   kernel algebra (KernelSpec trees + KernelParams pytrees,
+                   expression parser) + hyperparameter transforms
     partitioned    O(n)-memory blockwise K_hat @ V (the paper's core trick)
     operators      KernelOperator protocol + backend registry (dense /
                    partitioned / pallas / sharded) + bf16-compute fast path
@@ -25,13 +26,31 @@ from .gp import ExactGP, ExactGPConfig, gaussian_nll, rmse
 from .kernels_math import (
     GPParams,
     KERNEL_KINDS,
+    KernelParams,
+    LEAF_KINDS,
+    Leaf,
+    Product,
+    STATIONARY_KINDS,
+    Scale,
+    Sum,
+    as_spec,
+    canonicalize_kernel,
     dense_khat,
+    init_kernel_params,
     init_params,
+    init_params_for,
     kernel_diag,
     kernel_matrix,
     lengthscale,
     noise_variance,
+    normalize_components,
+    num_components,
     outputscale,
+    parse_kernel,
+    params_skeleton,
+    spec_expr,
+    spec_from_json,
+    spec_to_json,
 )
 from .mll import (
     MLLConfig, dense_mll, exact_mll, operator_mll_backward,
@@ -71,6 +90,10 @@ from .dkl import DKLModel, make_mlp_dkl
 
 __all__ = [
     "DenseOperator", "ExactGP", "ExactGPConfig", "GPParams", "KERNEL_KINDS",
+    "KernelParams", "LEAF_KINDS", "Leaf", "Product", "STATIONARY_KINDS",
+    "Scale", "Sum", "as_spec", "canonicalize_kernel", "init_kernel_params", "init_params_for",
+    "normalize_components", "num_components", "parse_kernel",
+    "params_skeleton", "spec_expr", "spec_from_json", "spec_to_json",
     "KernelOperator", "MLLConfig", "OperatorConfig", "PCGResult",
     "PallasFusedOperator", "PartitionedOperator", "PredictionCache",
     "Preconditioner",

@@ -50,7 +50,6 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from .kernels_math import (
-    GPParams,
     constant_mean,
     kernel_diag,
     kernel_matrix,
@@ -175,8 +174,8 @@ def _psum_all(geom: DistGeometry, x):
 # ---------------------------------------------------------------------------
 
 
-def dist_kmvm(geom: DistGeometry, kind: str, X: jax.Array, V_local: jax.Array,
-              params: GPParams, *, add_noise: bool = True,
+def dist_kmvm(geom: DistGeometry, kernel, X: jax.Array, V_local: jax.Array,
+              params, *, add_noise: bool = True,
               noise_floor: float = 1e-4,
               block_fn: Callable | None = None) -> jax.Array:
     """K_hat @ V with V sharded per geom. Local in, local out.
@@ -192,7 +191,7 @@ def dist_kmvm(geom: DistGeometry, kind: str, X: jax.Array, V_local: jax.Array,
     v_cols = jax.lax.all_gather(V_local, geom.row_axes, axis=0, tiled=True)
     x_rows = _x_rows(geom, X)
     x_cols = _x_cols(geom, X)
-    partial_rows = kmvm_rect(kind, x_rows, x_cols, v_cols, params,
+    partial_rows = kmvm_rect(kernel, x_rows, x_cols, v_cols, params,
                              row_block=geom.row_block, block_fn=block_fn)
     if geom.col_axes:
         out = jax.lax.psum_scatter(partial_rows, geom.col_axes,
@@ -236,8 +235,8 @@ class DistPreconditioner(NamedTuple):
         return self.L_local @ e1 + jnp.sqrt(self.sigma2) * e2
 
 
-def dist_pivoted_cholesky(geom: DistGeometry, kind: str, X: jax.Array,
-                          params: GPParams, rank: int) -> jax.Array:
+def dist_pivoted_cholesky(geom: DistGeometry, kernel, X: jax.Array,
+                          params, rank: int) -> jax.Array:
     """Rank-k pivoted Cholesky with rows sharded over the mesh.
 
     The greedy pivot search needs three tiny collectives per step: a pmax of
@@ -248,7 +247,7 @@ def dist_pivoted_cholesky(geom: DistGeometry, kind: str, X: jax.Array,
     x_chunk = _x_chunk(geom, X)             # (n_local, d)
     offset = _chunk_offset(geom)
     gidx = offset + jnp.arange(geom.n_local)
-    diag0 = kernel_diag(kind, x_chunk, params)
+    diag0 = kernel_diag(kernel, x_chunk, params)
     L0 = jnp.zeros((geom.n_local, rank), X.dtype)
 
     def body(i, carry):
@@ -265,7 +264,7 @@ def dist_pivoted_cholesky(geom: DistGeometry, kind: str, X: jax.Array,
         lp = _psum_all(geom, ownf * L[local_arg])                # (rank,)
         pivot_val = jnp.maximum(global_max, 1e-12)
 
-        row = kernel_matrix(kind, xp[None], x_chunk, params)[0]  # (n_local,)
+        row = kernel_matrix(kernel, xp[None], x_chunk, params)[0]  # (n_local,)
         row = row - L @ lp
         li = row / jnp.sqrt(pivot_val)
         li = jnp.where(gidx == pivot_gidx, jnp.sqrt(pivot_val), li)
@@ -278,15 +277,15 @@ def dist_pivoted_cholesky(geom: DistGeometry, kind: str, X: jax.Array,
     return L
 
 
-def make_dist_preconditioner(geom: DistGeometry, kind: str, X: jax.Array,
-                             params: GPParams, rank: int,
+def make_dist_preconditioner(geom: DistGeometry, kernel, X: jax.Array,
+                             params, rank: int,
                              noise_floor: float = 1e-4,
                              jitter: float = 1e-6) -> DistPreconditioner:
     s2 = noise_variance(params, noise_floor)
     if rank <= 0:
         L = jnp.zeros((geom.n_local, 0), X.dtype)
         return DistPreconditioner(L, s2, jnp.zeros((0, 0), X.dtype), geom.n)
-    L = dist_pivoted_cholesky(geom, kind, X, params, rank)
+    L = dist_pivoted_cholesky(geom, kernel, X, params, rank)
     inner = _psum_all(geom, L.T @ L)
     inner = s2 * jnp.eye(rank, dtype=L.dtype) + inner
     inner = inner + jitter * jnp.eye(rank, dtype=L.dtype)
@@ -335,8 +334,7 @@ class ShardedOperator(KernelOperator):
     mean cache (`make_mean_cache_solve`).
     """
 
-    def __init__(self, config: OperatorConfig, X: jax.Array,
-                 params: GPParams):
+    def __init__(self, config: OperatorConfig, X: jax.Array, params):
         super().__init__(config, X, params)
         if config.geom is None:
             raise ValueError("backend='sharded' requires OperatorConfig.geom")
@@ -462,6 +460,8 @@ class ShardedOperator(KernelOperator):
 
 
 class DistMLLConfig(NamedTuple):
+    # legacy kind string (GPParams) or a KernelSpec/expression
+    # (KernelParams); hashable either way, so shard_map closures stay static
     kernel: str = "matern32"
     precond_rank: int = 100
     num_probes: int = 8

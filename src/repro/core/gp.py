@@ -1,6 +1,8 @@
 """ExactGP — the paper's model, as a composable JAX module.
 
-Pure-functional API: hyperparameters are an explicit GPParams pytree; all
+Pure-functional API: hyperparameters are an explicit pytree (the legacy
+flat GPParams for a single stationary kernel, or a per-node KernelParams
+for a composable KernelSpec — see `repro.core.kernels_math`); all
 methods are jit-able. Optimization lives in `repro.train.gp_trainer` (which
 implements the paper's pretrain-on-subset initialization procedure); the
 distributed engine in `repro.core.distributed` consumes the same config.
@@ -17,7 +19,12 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .kernels_math import GPParams, init_params, noise_variance
+from .kernels_math import (
+    GPParams,
+    KernelParams,
+    init_params_for,
+    noise_variance,
+)
 from .mll import MLLConfig, exact_mll
 from .operators import OperatorConfig, make_operator
 from .predcache import (
@@ -30,6 +37,10 @@ from .predcache import (
 
 
 class ExactGPConfig(NamedTuple):
+    # a legacy stationary kind ("matern32", trained as GPParams — the
+    # paper's setting) OR a composable kernel: a KernelSpec tree or an
+    # expression like "0.5*rbf + matern32" (trained as KernelParams; see
+    # repro.core.kernels_math)
     kernel: str = "matern32"
     ard: bool = False                 # independent lengthscale per dim
     precond_rank: int = 100           # paper: k = 100 at large n
@@ -71,37 +82,42 @@ class ExactGP:
 
     # -- parameters --------------------------------------------------------
 
-    def init_params(self, d: int, noise: float = 0.5, dtype=jnp.float32) -> GPParams:
+    def init_params(self, d: int, noise: float = 0.5,
+                    dtype=jnp.float32) -> GPParams | KernelParams:
+        """Hyperparameter init matching config.kernel: a plain stationary
+        kind keeps the legacy GPParams (bitwise-stable checkpoints); any
+        composable spec/expression gets the per-node KernelParams pytree."""
         ard_dims = d if self.config.ard else None
-        return init_params(ard_dims=ard_dims, noise=noise, dtype=dtype)
+        return init_params_for(self.config.kernel, ard_dims=ard_dims,
+                               noise=noise, dtype=dtype)
 
     # -- the kernel operator ------------------------------------------------
 
-    def operator(self, X, params: GPParams):
+    def operator(self, X, params):
         """The KernelOperator every solve/prediction below goes through."""
         return make_operator(self.config.operator_config(), X, params)
 
     # -- training objective -------------------------------------------------
 
-    def mll(self, X, y, params: GPParams, key):
+    def mll(self, X, y, params, key):
         """(value, aux); value is the total log marginal likelihood."""
         return exact_mll(self.config.mll_config(), X, y, params, key)
 
-    def loss(self, X, y, params: GPParams, key):
+    def loss(self, X, y, params, key):
         """Per-datum negative MLL (what the trainer minimizes)."""
         value, aux = self.mll(X, y, params, key)
         return -value / X.shape[0], aux
 
     # -- prediction ---------------------------------------------------------
 
-    def precompute(self, X, y, params: GPParams, key) -> PredictionCache:
+    def precompute(self, X, y, params, key) -> PredictionCache:
         c = self.config
         return build_prediction_cache(
             self.operator(X, params), y, key,
             precond_rank=c.precond_rank, lanczos_rank=c.lanczos_rank,
             pred_tol=c.pred_cg_tol, max_cg_iters=c.pred_max_cg_iters)
 
-    def predict(self, X, Xstar, params: GPParams, cache: PredictionCache,
+    def predict(self, X, Xstar, params, cache: PredictionCache,
                 exact_variance: bool = False, include_noise: bool = True):
         c = self.config
         op = self.operator(X, params)

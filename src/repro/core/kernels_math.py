@@ -1,34 +1,60 @@
-"""Stationary kernel functions and GP hyperparameters.
+"""Kernel algebra and GP hyperparameters.
 
 Pure-jnp math shared by every layer of the stack: the dense reference path,
 the O(n)-memory partitioned path (`repro.core.partitioned`), the distributed
 engine (`repro.core.distributed`) and the Pallas kernels' oracle
 (`repro.kernels.ref`).
 
-Kernels are parameterized as in the paper: a (shared or per-dimension)
-lengthscale, an outputscale, and observational noise, all constrained
-positive through a softplus transform (GPyTorch's default). The paper's
-experiments use a constant mean and Matern-3/2; we also provide RBF and
-Matern-1/2 / 5/2.
+Two parameterizations coexist:
+
+* **Legacy** — ``(kind: str, GPParams)``: one stationary kernel with a
+  (shared or ARD) lengthscale, an outputscale, noise and a constant mean,
+  all softplus-constrained (GPyTorch's default). This is the paper's own
+  setting (Matern-3/2) and stays bitwise-identical to the pre-algebra code.
+
+* **Composable** — a static, hashable :class:`KernelSpec` tree (leaves
+  ``rbf`` / ``matern12`` / ``matern32`` / ``matern52`` / ``rq`` /
+  ``linear``; combinators :class:`Sum`, :class:`Product`, :class:`Scale`)
+  paired with a matching :class:`KernelParams` pytree of per-node raw
+  hyperparameters. The spec is structure (jit-static, serializable); the
+  params are the differentiable leaves the optimizer moves.
+
+``canonicalize_kernel`` maps both worlds onto one (spec, KernelParams)
+representation: a legacy pair becomes ``Scale(Leaf(kind))`` with the same
+constrained values, so every consumer below (kernel_matrix, the operators,
+the Pallas plan) is written once against the algebra. Specs can be written
+as expressions — ``"0.5*rbf + matern32"`` — via :func:`parse_kernel`
+(the form `OperatorConfig.kernel` accepts).
 """
 
 from __future__ import annotations
 
 import math
+import re
 from functools import partial
-from typing import NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+# Legacy stationary set: the kinds a plain (kind, GPParams) pair may use.
 KERNEL_KINDS = ("rbf", "matern12", "matern32", "matern52")
+# d2-shaped leaves (evaluable from squared scaled distances alone + extras).
+STATIONARY_KINDS = KERNEL_KINDS + ("rq",)
+# every leaf the algebra knows.
+LEAF_KINDS = STATIONARY_KINDS + ("linear",)
 
 _SQRT3 = math.sqrt(3.0)
 _SQRT5 = math.sqrt(5.0)
 
+# default constrained inits (shared by init_params / init_kernel_params)
+DEFAULT_LENGTHSCALE = 0.693
+DEFAULT_OUTPUTSCALE = 0.693
+DEFAULT_ALPHA = 2.0
+
 
 class GPParams(NamedTuple):
-    """Raw (unconstrained) GP hyperparameters.
+    """Raw (unconstrained) hyperparameters of ONE stationary kernel (legacy).
 
     raw_lengthscale: () for a shared lengthscale or (d,) for ARD.
     raw_outputscale: ()
@@ -38,6 +64,273 @@ class GPParams(NamedTuple):
 
     raw_lengthscale: jax.Array
     raw_outputscale: jax.Array
+    raw_noise: jax.Array
+    raw_mean: jax.Array
+
+
+# ---------------------------------------------------------------------------
+# KernelSpec — the static, hashable structure tree
+# ---------------------------------------------------------------------------
+
+
+class Leaf(NamedTuple):
+    """A primitive kernel. Unit amplitude — wrap in Scale for a learned one."""
+
+    kind: str
+
+
+class Scale(NamedTuple):
+    """softplus-constrained learned amplitude times the inner kernel.
+
+    init: the CONSTRAINED outputscale value `init_kernel_params` starts
+    from (what expression weights like "0.5*rbf" set)."""
+
+    inner: Any
+    init: float = DEFAULT_OUTPUTSCALE
+
+
+class Sum(NamedTuple):
+    terms: tuple
+
+
+class Product(NamedTuple):
+    factors: tuple
+
+
+KernelSpec = Leaf | Scale | Sum | Product
+
+
+def validate_spec(spec) -> None:
+    if isinstance(spec, Leaf):
+        if spec.kind not in LEAF_KINDS:
+            raise ValueError(
+                f"unknown kernel kind {spec.kind!r} (expected one of {LEAF_KINDS})")
+        return
+    if isinstance(spec, Scale):
+        if not spec.init > 0.0:
+            raise ValueError(f"Scale.init must be > 0, got {spec.init}")
+        return validate_spec(spec.inner)
+    if isinstance(spec, (Sum, Product)):
+        kids = spec.terms if isinstance(spec, Sum) else spec.factors
+        if not kids:
+            raise ValueError(f"{type(spec).__name__} needs >= 1 child")
+        for k in kids:
+            validate_spec(k)
+        return
+    raise TypeError(f"not a KernelSpec node: {spec!r}")
+
+
+def spec_param_nodes(spec) -> tuple:
+    """Param-bearing spec nodes in PREORDER — the order KernelParams.nodes
+    follows (Sum/Product carry no hyperparameters and contribute nothing)."""
+    if isinstance(spec, Leaf):
+        return (spec,)
+    if isinstance(spec, Scale):
+        return (spec,) + spec_param_nodes(spec.inner)
+    kids = spec.terms if isinstance(spec, Sum) else spec.factors
+    out: tuple = ()
+    for k in kids:
+        out = out + spec_param_nodes(k)
+    return out
+
+
+def spec_expr(spec) -> str:
+    """Expression form; `parse_kernel(spec_expr(s)) == s` (inits included:
+    floats print at full repr precision)."""
+    if isinstance(spec, Leaf):
+        return spec.kind
+    if isinstance(spec, Scale):
+        inner = spec_expr(spec.inner)
+        # parenthesize Sum/Product (precedence) and Scale (a directly
+        # nested weight would fold into this node's weight on re-parse)
+        if isinstance(spec.inner, (Sum, Product, Scale)):
+            inner = f"({inner})"
+        return f"{spec.init!r}*{inner}"
+    if isinstance(spec, Sum):
+        # nested sums keep their parens so associativity structure survives
+        return " + ".join(
+            f"({spec_expr(t)})" if isinstance(t, Sum) else spec_expr(t)
+            for t in spec.terms)
+    parts = []
+    for f in spec.factors:
+        e = spec_expr(f)
+        # parenthesize Sum (precedence), Scale (a bare weight inside a
+        # product would re-parse as the whole term's weight) and Product
+        # (associativity structure would otherwise flatten on re-parse)
+        parts.append(f"({e})" if isinstance(f, (Sum, Scale, Product)) else e)
+    return "*".join(parts)
+
+
+def spec_to_json(spec) -> dict:
+    """JSON-able structural form (artifact manifests, configs on disk)."""
+    if isinstance(spec, Leaf):
+        return {"op": "leaf", "kind": spec.kind}
+    if isinstance(spec, Scale):
+        return {"op": "scale", "init": float(spec.init),
+                "inner": spec_to_json(spec.inner)}
+    if isinstance(spec, Sum):
+        return {"op": "sum", "terms": [spec_to_json(t) for t in spec.terms]}
+    return {"op": "product", "factors": [spec_to_json(f) for f in spec.factors]}
+
+
+def spec_from_json(obj: dict):
+    op = obj["op"]
+    if op == "leaf":
+        return Leaf(obj["kind"])
+    if op == "scale":
+        return Scale(spec_from_json(obj["inner"]), float(obj["init"]))
+    if op == "sum":
+        return Sum(tuple(spec_from_json(t) for t in obj["terms"]))
+    if op == "product":
+        return Product(tuple(spec_from_json(f) for f in obj["factors"]))
+    raise ValueError(f"unknown spec op {op!r}")
+
+
+# ---------------------------------------------------------------------------
+# expression parser: "0.5*rbf + matern32*linear + scale(rq)"
+# ---------------------------------------------------------------------------
+
+_TOKEN = re.compile(r"\s*(?:(\d+\.?\d*(?:[eE][+-]?\d+)?)|([A-Za-z_]\w*)|([+*()]))")
+
+
+def _tokenize(expr: str) -> list:
+    out, pos = [], 0
+    while pos < len(expr):
+        m = _TOKEN.match(expr, pos)
+        if m is None:
+            raise ValueError(f"cannot parse kernel expression at: {expr[pos:]!r}")
+        num, name, punct = m.groups()
+        if num is not None:
+            out.append(("num", float(num)))
+        elif name is not None:
+            out.append(("name", name))
+        else:
+            out.append((punct, punct))
+        pos = m.end()
+    out.append(("end", None))
+    return out
+
+
+class _Parser:
+    def __init__(self, expr: str):
+        self.expr = expr
+        self.toks = _tokenize(expr)
+        self.i = 0
+
+    def peek(self):
+        return self.toks[self.i]
+
+    def next(self):
+        t = self.toks[self.i]
+        self.i += 1
+        return t
+
+    def expect(self, kind):
+        t = self.next()
+        if t[0] != kind:
+            raise ValueError(
+                f"kernel expression {self.expr!r}: expected {kind!r}, got {t[1]!r}")
+        return t
+
+    def parse(self):
+        spec = self.sum()
+        self.expect("end")
+        return spec
+
+    def sum(self):
+        terms = [self.term()]
+        while self.peek()[0] == "+":
+            self.next()
+            terms.append(self.term())
+        return terms[0] if len(terms) == 1 else Sum(tuple(terms))
+
+    def term(self):
+        weight, factors = None, []
+        while True:
+            kind, val = self.peek()
+            if kind == "num":
+                self.next()
+                if val <= 0.0:
+                    raise ValueError(
+                        f"kernel expression {self.expr!r}: weights must be > 0 "
+                        f"(Scale is softplus-constrained), got {val}")
+                weight = val if weight is None else weight * val
+            elif kind == "name":
+                self.next()
+                if val == "scale":
+                    self.expect("(")
+                    inner = self.sum()
+                    self.expect(")")
+                    factors.append(Scale(inner))
+                elif val in LEAF_KINDS:
+                    factors.append(Leaf(val))
+                else:
+                    raise ValueError(
+                        f"kernel expression {self.expr!r}: unknown name {val!r} "
+                        f"(leaves: {LEAF_KINDS}, combinator: scale(...))")
+            elif kind == "(":
+                self.next()
+                factors.append(self.sum())
+                self.expect(")")
+            else:
+                break
+            if self.peek()[0] != "*":
+                break
+            self.next()
+        if not factors:
+            raise ValueError(
+                f"kernel expression {self.expr!r}: a term needs >= 1 kernel factor")
+        body = factors[0] if len(factors) == 1 else Product(tuple(factors))
+        return body if weight is None else Scale(body, weight)
+
+
+def parse_kernel(expr: str):
+    """Expression -> KernelSpec. Grammar: sums of products of leaves /
+    ``scale(...)`` / parenthesized sub-expressions; a positive numeric factor
+    becomes a learned ``Scale`` initialized at that value."""
+    # the tokenizer only skips whitespace BEFORE a token; strip so shell
+    # quoting artifacts ("rbf ") and trailing newlines from config files parse
+    spec = _Parser(expr.strip()).parse()
+    validate_spec(spec)
+    return spec
+
+
+def as_spec(kernel) -> KernelSpec:
+    """str | KernelSpec -> KernelSpec (plain kind strings parse to a Leaf)."""
+    if isinstance(kernel, str):
+        return parse_kernel(kernel)
+    validate_spec(kernel)
+    return kernel
+
+
+# ---------------------------------------------------------------------------
+# KernelParams — the per-node raw hyperparameter pytree
+# ---------------------------------------------------------------------------
+
+
+class StationaryParams(NamedTuple):
+    raw_lengthscale: jax.Array       # () shared or (d,) ARD
+
+
+class RQParams(NamedTuple):
+    raw_lengthscale: jax.Array
+    raw_alpha: jax.Array             # () softplus-constrained mixture alpha
+
+
+class LinearParams(NamedTuple):
+    raw_scale: jax.Array             # () or (d,): k = <x/s, z/s>
+
+
+class ScaleParams(NamedTuple):
+    raw_outputscale: jax.Array
+
+
+class KernelParams(NamedTuple):
+    """Raw hyperparameters for a KernelSpec: one entry of ``nodes`` per
+    param-bearing spec node in preorder (see `spec_param_nodes`), plus the
+    global likelihood/mean parameters every GP carries."""
+
+    nodes: tuple
     raw_noise: jax.Array
     raw_mean: jax.Array
 
@@ -54,13 +347,13 @@ def inv_softplus(y):
 
 def init_params(
     ard_dims: int | None = None,
-    lengthscale: float = 0.693,
-    outputscale: float = 0.693,
+    lengthscale: float = DEFAULT_LENGTHSCALE,
+    outputscale: float = DEFAULT_OUTPUTSCALE,
     noise: float = 0.1,
     mean: float = 0.0,
     dtype=jnp.float32,
 ) -> GPParams:
-    """Construct GPParams whose constrained values equal the given floats."""
+    """Construct (legacy) GPParams whose constrained values equal the floats."""
     ls_shape = () if ard_dims is None else (ard_dims,)
     raw_ls = jnp.full(ls_shape, inv_softplus(lengthscale), dtype)
     return GPParams(
@@ -71,7 +364,123 @@ def init_params(
     )
 
 
-def lengthscale(params: GPParams, noise_floor: float = 0.0):
+def _init_node(node, ard_dims, lengthscale_init, alpha_init, dtype):
+    ls_shape = () if ard_dims is None else (ard_dims,)
+    raw_ls = jnp.full(ls_shape, inv_softplus(lengthscale_init), dtype)
+    if isinstance(node, Scale):
+        return ScaleParams(jnp.asarray(inv_softplus(node.init), dtype))
+    if node.kind == "rq":
+        return RQParams(raw_ls, jnp.asarray(inv_softplus(alpha_init), dtype))
+    if node.kind == "linear":
+        return LinearParams(raw_ls)
+    return StationaryParams(raw_ls)
+
+
+def init_kernel_params(
+    spec,
+    ard_dims: int | None = None,
+    lengthscale: float = DEFAULT_LENGTHSCALE,
+    alpha: float = DEFAULT_ALPHA,
+    noise: float = 0.1,
+    mean: float = 0.0,
+    dtype=jnp.float32,
+) -> KernelParams:
+    """KernelParams matching `spec`, constrained values at the given floats.
+
+    Every lengthscale-like node gets the same init (shared or per-dim ARD);
+    Scale nodes start at their spec-recorded `init` (parser weights)."""
+    spec = as_spec(spec)
+    nodes = tuple(_init_node(n, ard_dims, lengthscale, alpha, dtype)
+                  for n in spec_param_nodes(spec))
+    return KernelParams(
+        nodes=nodes,
+        raw_noise=jnp.asarray(inv_softplus(noise), dtype),
+        raw_mean=jnp.asarray(mean, dtype),
+    )
+
+
+def init_params_for(
+    kernel,
+    ard_dims: int | None = None,
+    lengthscale: float = DEFAULT_LENGTHSCALE,
+    noise: float = 0.1,
+    mean: float = 0.0,
+    dtype=jnp.float32,
+) -> GPParams | KernelParams:
+    """THE legacy-vs-algebra init dispatch (used by ExactGP, the launcher
+    and the test matrix alike, so the rule lives in exactly one place):
+    a plain stationary kind string keeps the flat GPParams — the bitwise-
+    stable legacy parameterization — while any KernelSpec tree or
+    expression gets the matching per-node KernelParams pytree."""
+    if isinstance(kernel, str) and kernel in KERNEL_KINDS:
+        return init_params(ard_dims=ard_dims, lengthscale=lengthscale,
+                           noise=noise, mean=mean, dtype=dtype)
+    return init_kernel_params(as_spec(kernel), ard_dims=ard_dims,
+                              lengthscale=lengthscale, noise=noise,
+                              mean=mean, dtype=dtype)
+
+
+def params_skeleton(spec) -> KernelParams:
+    """Zero-leaf KernelParams with `spec`'s structure (checkpoint templates)."""
+    z = jnp.zeros(())
+    nodes = []
+    for n in spec_param_nodes(spec):
+        if isinstance(n, Scale):
+            nodes.append(ScaleParams(z))
+        elif n.kind == "rq":
+            nodes.append(RQParams(z, z))
+        elif n.kind == "linear":
+            nodes.append(LinearParams(z))
+        else:
+            nodes.append(StationaryParams(z))
+    return KernelParams(nodes=tuple(nodes), raw_noise=z, raw_mean=z)
+
+
+def canonicalize_kernel(kernel, params) -> tuple:
+    """(kernel, GPParams | KernelParams) -> (spec, KernelParams).
+
+    The single bridge between the legacy pair and the algebra: a GPParams
+    becomes ``Scale(Leaf(kind))`` reusing the same raw arrays (so values,
+    gradients and jit caches behave exactly as before), a KernelParams is
+    validated against the spec it claims to parameterize."""
+    if isinstance(params, GPParams):
+        if isinstance(kernel, Leaf):
+            kind = kernel.kind
+        elif isinstance(kernel, Scale) and isinstance(kernel.inner, Leaf):
+            kind = kernel.inner.kind
+        elif isinstance(kernel, str) and "(" not in kernel and "*" not in kernel \
+                and "+" not in kernel:
+            kind = kernel.strip()
+        else:
+            raise ValueError(
+                f"GPParams parameterizes a single stationary kernel; got "
+                f"kernel={kernel!r}. Composite specs need KernelParams "
+                f"(init_kernel_params).")
+        if kind not in KERNEL_KINDS:
+            raise ValueError(
+                f"unknown kernel kind: {kind!r} (expected one of {KERNEL_KINDS}; "
+                f"'rq'/'linear' leaves need KernelParams)")
+        spec = Scale(Leaf(kind))
+        kp = KernelParams(
+            nodes=(ScaleParams(params.raw_outputscale),
+                   StationaryParams(params.raw_lengthscale)),
+            raw_noise=params.raw_noise, raw_mean=params.raw_mean)
+        return spec, kp
+    if not isinstance(params, KernelParams):
+        raise TypeError(f"expected GPParams or KernelParams, got {type(params)}")
+    spec = as_spec(kernel)
+    expected = len(spec_param_nodes(spec))
+    if len(params.nodes) != expected:
+        raise ValueError(
+            f"KernelParams has {len(params.nodes)} node entries but spec "
+            f"{spec_expr(spec)!r} has {expected} param-bearing nodes")
+    return spec, params
+
+
+# -- legacy constrained-value accessors (GPParams) ---------------------------
+
+
+def lengthscale(params: GPParams):
     return softplus(params.raw_lengthscale)
 
 
@@ -79,24 +488,20 @@ def outputscale(params: GPParams):
     return softplus(params.raw_outputscale)
 
 
-def noise_variance(params: GPParams, noise_floor: float = 1e-4):
+def noise_variance(params, noise_floor: float = 1e-4):
     """sigma^2 with a floor (the paper constrains noise >= 0.1 on
-    ill-conditioned data; the floor is a config knob upstream)."""
+    ill-conditioned data; the floor is a config knob upstream). Works on
+    GPParams and KernelParams alike (both carry raw_noise)."""
     return softplus(params.raw_noise) + noise_floor
 
 
-def constant_mean(params: GPParams):
+def constant_mean(params):
     return params.raw_mean
 
 
 # ---------------------------------------------------------------------------
 # distances
 # ---------------------------------------------------------------------------
-
-
-def scale_inputs(X: jax.Array, params: GPParams) -> jax.Array:
-    """Divide inputs by the (shared or per-dim) lengthscale."""
-    return X / lengthscale(params)
 
 
 def sq_dist(X1: jax.Array, X2: jax.Array) -> jax.Array:
@@ -141,10 +546,22 @@ def _k_matern52(r):
     return (1.0 + a + (a * a) / 3.0) * jnp.exp(-a)
 
 
-def kernel_from_sqdist(kind: str, d2: jax.Array) -> jax.Array:
-    """Unit-outputscale kernel values from squared scaled distances."""
+def rq_from_sqdist(d2, alpha):
+    """Rational quadratic (1 + d2 / 2a)^-a via a stable exp(log1p) form."""
+    return jnp.exp(-alpha * jnp.log1p(d2 / (2.0 * alpha)))
+
+
+def kernel_from_sqdist(kind: str, d2: jax.Array, alpha=None) -> jax.Array:
+    """Unit-outputscale kernel values from squared scaled distances.
+
+    `alpha` is only consulted (and required) by the "rq" shape.
+    """
     if kind == "rbf":
         return _k_rbf(d2)
+    if kind == "rq":
+        if alpha is None:
+            raise ValueError("kind='rq' needs its alpha parameter")
+        return rq_from_sqdist(d2, alpha)
     r = safe_dist(d2)
     if kind == "matern12":
         return _k_matern12(r)
@@ -152,26 +569,166 @@ def kernel_from_sqdist(kind: str, d2: jax.Array) -> jax.Array:
         return _k_matern32(r)
     if kind == "matern52":
         return _k_matern52(r)
-    raise ValueError(f"unknown kernel kind: {kind!r} (expected one of {KERNEL_KINDS})")
+    raise ValueError(
+        f"unknown kernel kind: {kind!r} (expected one of {STATIONARY_KINDS})")
+
+
+# ---------------------------------------------------------------------------
+# spec evaluation — dense matrices and diagonals
+# ---------------------------------------------------------------------------
+
+
+def leaf_matrix(kind: str, p, X1: jax.Array, X2: jax.Array) -> jax.Array:
+    """Dense (n1, n2) matrix of ONE leaf under its node params (unit scale)."""
+    if kind == "linear":
+        s = softplus(p.raw_scale)
+        return (X1 / s) @ (X2 / s).T
+    ls = softplus(p.raw_lengthscale)
+    d2 = sq_dist(X1 / ls, X2 / ls)
+    if kind == "rq":
+        return rq_from_sqdist(d2, softplus(p.raw_alpha))
+    return kernel_from_sqdist(kind, d2)
+
+
+def _node_matrix(spec, nodes, i, X1, X2):
+    if isinstance(spec, Leaf):
+        return leaf_matrix(spec.kind, nodes[i], X1, X2), i + 1
+    if isinstance(spec, Scale):
+        s = softplus(nodes[i].raw_outputscale)
+        K, j = _node_matrix(spec.inner, nodes, i + 1, X1, X2)
+        return s * K, j
+    if isinstance(spec, Sum):
+        acc = None
+        for t in spec.terms:
+            K, i = _node_matrix(t, nodes, i, X1, X2)
+            acc = K if acc is None else acc + K
+        return acc, i
+    acc = None
+    for f in spec.factors:
+        K, i = _node_matrix(f, nodes, i, X1, X2)
+        acc = K if acc is None else acc * K
+    return acc, i
 
 
 @partial(jax.jit, static_argnums=0)
-def kernel_matrix(kind: str, X1: jax.Array, X2: jax.Array, params: GPParams) -> jax.Array:
-    """Dense (n1, n2) kernel matrix K_{X1 X2}; no noise term."""
-    X1s = scale_inputs(X1, params)
-    X2s = scale_inputs(X2, params)
-    d2 = sq_dist(X1s, X2s)
-    return outputscale(params) * kernel_from_sqdist(kind, d2)
+def kernel_matrix(kernel, X1: jax.Array, X2: jax.Array, params) -> jax.Array:
+    """Dense (n1, n2) kernel matrix K_{X1 X2}; no noise term.
+
+    kernel: legacy kind string OR a KernelSpec / expression; params the
+    matching GPParams / KernelParams.
+    """
+    spec, kp = canonicalize_kernel(kernel, params)
+    K, _ = _node_matrix(spec, kp.nodes, 0, X1, X2)
+    return K
 
 
-def kernel_diag(kind: str, X: jax.Array, params: GPParams) -> jax.Array:
-    """diag(K_XX) for a stationary kernel: outputscale * 1."""
-    del kind
-    return jnp.full(X.shape[:-1], 1.0, X.dtype) * outputscale(params)
+def _leaf_diag(kind, p, X):
+    if kind == "linear":
+        Xs = X / softplus(p.raw_scale)
+        return jnp.sum(Xs * Xs, axis=-1)
+    # constant 1 diag, in the PARAMS dtype (at least fp32): a bf16 X must
+    # not downcast the diag pivoted Cholesky greedily maximizes over
+    dt = jnp.promote_types(p.raw_lengthscale.dtype, jnp.float32)
+    return jnp.ones(X.shape[:-1], dt)
 
 
-def dense_khat(kind: str, X: jax.Array, params: GPParams, noise_floor: float = 1e-4) -> jax.Array:
+def _node_diag(spec, nodes, i, X):
+    if isinstance(spec, Leaf):
+        return _leaf_diag(spec.kind, nodes[i], X), i + 1
+    if isinstance(spec, Scale):
+        s = softplus(nodes[i].raw_outputscale)
+        d, j = _node_diag(spec.inner, nodes, i + 1, X)
+        return d * s, j
+    if isinstance(spec, Sum):
+        acc = None
+        for t in spec.terms:
+            d, i = _node_diag(t, nodes, i, X)
+            acc = d if acc is None else acc + d
+        return acc, i
+    acc = None
+    for f in spec.factors:
+        d, i = _node_diag(f, nodes, i, X)
+        acc = d if acc is None else acc * d
+    return acc, i
+
+
+def kernel_diag(kernel, X: jax.Array, params) -> jax.Array:
+    """diag(K_XX) — constant for stationary specs, input-dependent once a
+    `linear` leaf participates. Dtype follows the PARAMS (>= fp32), not X."""
+    spec, kp = canonicalize_kernel(kernel, params)
+    d, _ = _node_diag(spec, kp.nodes, 0, X)
+    return d
+
+
+def dense_khat(kernel, X: jax.Array, params, noise_floor: float = 1e-4) -> jax.Array:
     """Dense K_hat = K_XX + sigma^2 I. Reference/oracle path only: O(n^2)."""
-    K = kernel_matrix(kind, X, X, params)
+    K = kernel_matrix(kernel, X, X, params)
     s2 = noise_variance(params, noise_floor)
     return K + s2 * jnp.eye(X.shape[0], dtype=K.dtype)
+
+
+# ---------------------------------------------------------------------------
+# normalization: spec -> weighted sum of primitive products
+# ---------------------------------------------------------------------------
+
+
+class Term(NamedTuple):
+    """One component of the distributed (sum-of-products) normal form.
+
+    weight:  traced scalar (product of the Scale amplitudes on its path).
+    factors: tuple of (kind, node_params) primitives multiplied together.
+    """
+
+    weight: Any
+    factors: tuple
+
+
+def _normalize(spec, nodes, i):
+    if isinstance(spec, Leaf):
+        return [Term(1.0, ((spec.kind, nodes[i]),))], i + 1
+    if isinstance(spec, Scale):
+        s = softplus(nodes[i].raw_outputscale)
+        terms, j = _normalize(spec.inner, nodes, i + 1)
+        return [Term(s * t.weight, t.factors) for t in terms], j
+    if isinstance(spec, Sum):
+        out = []
+        for t in spec.terms:
+            ts, i = _normalize(t, nodes, i)
+            out.extend(ts)
+        return out, i
+    # Product: cartesian expansion (sums distribute over the product)
+    expanded = [Term(1.0, ())]
+    for f in spec.factors:
+        ts, i = _normalize(f, nodes, i)
+        expanded = [Term(a.weight * b.weight, a.factors + b.factors)
+                    for a in expanded for b in ts]
+    return expanded, i
+
+
+def normalize_components(spec, kparams: KernelParams) -> tuple:
+    """Distribute the spec into a flat weighted sum of primitive products.
+
+    The STRUCTURE of the result (length, factor kinds, lengthscale shapes)
+    is static given the spec; weights/params are traced. This is the form
+    the fused Pallas plan (`repro.kernels.ops`) and the mixed-precision slab
+    evaluator consume. Note a Product of Sums expands multiplicatively —
+    fine at the tree sizes kernels use.
+    """
+    terms, used = _normalize(spec, kparams.nodes, 0)
+    assert used == len(kparams.nodes), (used, len(kparams.nodes))
+    return tuple(terms)
+
+
+def num_components(kernel) -> int:
+    """Number of additive components the spec normalizes to (static)."""
+    spec = as_spec(kernel) if isinstance(kernel, str) else kernel
+    if isinstance(spec, Leaf):
+        return 1
+    if isinstance(spec, Scale):
+        return num_components(spec.inner)
+    if isinstance(spec, Sum):
+        return sum(num_components(t) for t in spec.terms)
+    out = 1
+    for f in spec.factors:
+        out *= num_components(f)
+    return out

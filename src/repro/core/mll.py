@@ -40,14 +40,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .kernels_math import GPParams, constant_mean, dense_khat
+from .kernels_math import constant_mean, dense_khat
 from .operators import OperatorConfig, make_operator
 from .pcg import pcg
 from .slq import slq_logdet_correction
 
 
 class MLLConfig(NamedTuple):
-    """Static (hashable) solver configuration."""
+    """Static (hashable) solver configuration.
+
+    kernel: legacy kind string (with GPParams) or a composable
+    KernelSpec / expression (with KernelParams) — see
+    `repro.core.kernels_math`. Threading is transparent: the custom VJP's
+    parameter gradients take the SHAPE of whatever params pytree is passed.
+    """
 
     kernel: str = "matern32"
     precond_rank: int = 100
@@ -199,7 +205,7 @@ def _mll_forward_impl(cfg: MLLConfig, X, y, params, key):
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(0,))
-def exact_mll(cfg: MLLConfig, X, y, params: GPParams, key):
+def exact_mll(cfg: MLLConfig, X, y, params, key):
     """Log marginal likelihood (total, not per-datum) and diagnostics.
 
     key: uint32 PRNGKey array (probe randomness; gets a float0 cotangent).
@@ -230,12 +236,14 @@ exact_mll.defvjp(_mll_fwd, _mll_bwd)
 # ---------------------------------------------------------------------------
 
 
-def dense_mll(kind: str, X, y, params: GPParams, noise_floor: float = 1e-4):
+def dense_mll(kernel, X, y, params, noise_floor: float = 1e-4):
     """O(n^3)/O(n^2) reference MLL — what the paper says standard
-    implementations do and cannot scale. Used as the unit-test oracle."""
+    implementations do and cannot scale. Used as the unit-test oracle.
+    Accepts any (kernel, params) pair `kernels_math.canonicalize_kernel`
+    does."""
     n = X.shape[0]
     yc = y - constant_mean(params)
-    Khat = dense_khat(kind, X, params, noise_floor)
+    Khat = dense_khat(kernel, X, params, noise_floor)
     L = jnp.linalg.cholesky(Khat)
     alpha = jax.scipy.linalg.cho_solve((L, True), yc)
     quad = jnp.dot(yc, alpha)

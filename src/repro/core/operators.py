@@ -69,12 +69,13 @@ import jax.numpy as jnp
 
 from .kernels_math import (
     GPParams,
+    canonicalize_kernel,
     kernel_diag,
     kernel_from_sqdist,
     kernel_matrix,
     noise_variance,
-    outputscale,
-    scale_inputs,
+    normalize_components,
+    softplus,
 )
 from . import partitioned
 from .pivchol import make_preconditioner
@@ -83,7 +84,11 @@ from .pivchol import make_preconditioner
 class OperatorConfig(NamedTuple):
     """Static (hashable) kernel-operator configuration.
 
-    kernel:        stationary kernel family (see KERNEL_KINDS).
+    kernel:        a legacy stationary kind ("matern32", paired with
+                   GPParams) OR a composable kernel: a
+                   `kernels_math.KernelSpec` tree or an expression string
+                   like "0.5*rbf + matern32" (parsed by
+                   `kernels_math.parse_kernel`; paired with KernelParams).
     backend:       registry key — "dense" | "partitioned" | "pallas" |
                    "sharded" (or any registered extension).
     row_block:     rows per partition slab (partitioned/pallas backends).
@@ -148,7 +153,7 @@ def _resolve_backend(name: str) -> type:
 
 
 def make_operator(config: OperatorConfig, X: jax.Array,
-                  params: GPParams) -> "KernelOperator":
+                  params) -> "KernelOperator":
     """The single factory every consumer goes through."""
     return _resolve_backend(config.backend)(config, X, params)
 
@@ -170,30 +175,54 @@ def _compute_dtype_of(config: OperatorConfig, operand_dtype) -> jnp.dtype | None
     return cdt
 
 
-def mixed_block_fn(kind: str, compute_dtype) -> Callable:
-    """Per-slab K(Xb, X) @ V with reduced-precision matmuls.
+def mixed_block_fn(kernel, compute_dtype) -> Callable:
+    """Per-slab K(Xb, X) @ V with reduced-precision matmuls, for any spec.
 
     Matches `partitioned._block_kmvm_dense` semantics (no noise term) but:
-      * the -2<x,y> cross term runs on `compute_dtype` operands with fp32
-        accumulation (preferred_element_type) — the MXU fast path;
-      * norms, phi(d2) and the outputscale stay fp32;
-      * the K @ V contraction again uses `compute_dtype` operands with fp32
-        accumulation, cast back to V.dtype on the way out.
+      * every large matmul — the per-factor -2<x,y> cross terms, linear
+        factors' inner products, and the final K @ V contraction — runs on
+        `compute_dtype` operands with fp32 accumulation
+        (preferred_element_type): the MXU fast path;
+      * norms, phi(d2), weights and the component-sum accumulator stay
+        fp32; the result is cast back to V.dtype on the way out.
+
+    Components come from `kernels_math.normalize_components`; each
+    stationary factor pays its own distance matmul here (the FUSED
+    shared-d2-tile evaluation is the Pallas backend's job).
     """
     cdt = jnp.dtype(compute_dtype)
 
-    def fn(Xb: jax.Array, X: jax.Array, V: jax.Array,
-           params: GPParams) -> jax.Array:
-        Xb_c = scale_inputs(Xb, params).astype(cdt)
-        X_c = scale_inputs(X, params).astype(cdt)
+    def factor_tile(kind, p, Xb, X):
+        if kind == "linear":
+            s = softplus(p.raw_scale)
+            return jax.lax.dot_general(
+                (Xb / s).astype(cdt), (X / s).astype(cdt),
+                (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)
+        ls = softplus(p.raw_lengthscale)
+        Xb_c = (Xb / ls).astype(cdt)
+        X_c = (X / ls).astype(cdt)
         g = jax.lax.dot_general(
             Xb_c, X_c, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32)
         ni = jnp.sum(jnp.square(Xb_c.astype(jnp.float32)), -1, keepdims=True)
         nj = jnp.sum(jnp.square(X_c.astype(jnp.float32)), -1, keepdims=True).T
         d2 = jnp.maximum(ni + nj - 2.0 * g, 0.0)
-        K = kernel_from_sqdist(kind, d2)
-        K = (outputscale(params).astype(jnp.float32) * K).astype(cdt)
+        if kind == "rq":
+            return kernel_from_sqdist("rq", d2, softplus(p.raw_alpha))
+        return kernel_from_sqdist(kind, d2)
+
+    def fn(Xb: jax.Array, X: jax.Array, V: jax.Array, params) -> jax.Array:
+        spec, kp = canonicalize_kernel(kernel, params)
+        K = None
+        for term in normalize_components(spec, kp):
+            tile = None
+            for kind, p in term.factors:
+                f = factor_tile(kind, p, Xb, X)
+                tile = f if tile is None else tile * f
+            tile = (jnp.asarray(term.weight).astype(jnp.float32) * tile)
+            K = tile if K is None else K + tile
+        K = K.astype(cdt)
         KV = jax.lax.dot_general(
             K, V.astype(cdt), (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
@@ -212,8 +241,8 @@ class KernelOperator:
 
     backend_name = "abstract"
 
-    def __init__(self, config: OperatorConfig, X: jax.Array,
-                 params: GPParams):
+    def __init__(self, config: OperatorConfig, X: jax.Array, params):
+        # params: GPParams (legacy single-kernel) or KernelParams (algebra)
         self.config = config
         self.X = X
         self.params = params
@@ -339,8 +368,7 @@ class DenseOperator(KernelOperator):
     overhead dominates.
     """
 
-    def __init__(self, config: OperatorConfig, X: jax.Array,
-                 params: GPParams):
+    def __init__(self, config: OperatorConfig, X: jax.Array, params):
         super().__init__(config, X, params)
         self._K_cached: jax.Array | None = None
 

@@ -25,7 +25,6 @@ import jax
 import jax.numpy as jnp
 
 from .kernels_math import (
-    GPParams,
     kernel_matrix,
     noise_variance,
 )
@@ -79,18 +78,18 @@ def default_row_block(n: int, d: int, t: int, hbm_budget_bytes: int = 2 << 30) -
     return (rb // 128) * 128
 
 
-def _block_kmvm_dense(kind: str, Xb: jax.Array, X: jax.Array, V: jax.Array, params: GPParams) -> jax.Array:
+def _block_kmvm_dense(kernel, Xb: jax.Array, X: jax.Array, V: jax.Array, params) -> jax.Array:
     """One row-partition's contribution: K(Xb, X) @ V, slab materialized."""
-    Kb = kernel_matrix(kind, Xb, X, params)
+    Kb = kernel_matrix(kernel, Xb, X, params)
     return Kb @ V
 
 
 def kmvm_rect(
-    kind: str,
+    kernel,
     X_rows: jax.Array,
     X_cols: jax.Array,
     V: jax.Array,
-    params: GPParams,
+    params,
     *,
     row_block: int = 1024,
     block_fn: Callable | None = None,
@@ -107,7 +106,7 @@ def kmvm_rect(
     p = Xp.shape[0] // rb
     blocks = Xp.reshape(p, rb, X_rows.shape[-1])
 
-    inner = block_fn if block_fn is not None else partial(_block_kmvm_dense, kind)
+    inner = block_fn if block_fn is not None else partial(_block_kmvm_dense, kernel)
 
     @jax.checkpoint
     def one_block(Xb):
@@ -131,10 +130,10 @@ def kmvm_rect(
 
 
 def kmvm(
-    kind: str,
+    kernel,
     X: jax.Array,
     V: jax.Array,
-    params: GPParams,
+    params,
     *,
     row_block: int = 1024,
     add_noise: bool = True,
@@ -144,6 +143,9 @@ def kmvm(
     """O(n)-memory K_hat @ V via partitioned row blocks.
 
     Args:
+      kernel: legacy kind string or a KernelSpec/expression; params the
+        matching GPParams / KernelParams pytree (gradient pytrees returned
+        by `quad_form_partials` take this shape).
       X: (n, d) training inputs. V: (n, t) right-hand sides (t >= 1).
       row_block: rows per partition (the paper's n/p).
       add_noise: include the sigma^2 * V diagonal term (K_hat vs K).
@@ -155,7 +157,7 @@ def kmvm(
     squeeze = V.ndim == 1
     if squeeze:
         V = V[:, None]
-    out = kmvm_rect(kind, X, X, V, params, row_block=row_block, block_fn=block_fn)
+    out = kmvm_rect(kernel, X, X, V, params, row_block=row_block, block_fn=block_fn)
     if add_noise:
         out = out + noise_variance(params, noise_floor) * V
     return out[:, 0] if squeeze else out
@@ -169,11 +171,11 @@ def lax_map(f, xs):
 
 
 def quad_form(
-    kind: str,
+    kernel,
     X: jax.Array,
     A: jax.Array,
     B: jax.Array,
-    params: GPParams,
+    params,
     *,
     row_block: int = 1024,
     add_noise: bool = True,
@@ -191,24 +193,24 @@ def quad_form(
     if B.ndim == 1:
         B = B[:, None]
     KB = kmvm(
-        kind, X, B, params,
+        kernel, X, B, params,
         row_block=row_block, add_noise=add_noise, noise_floor=noise_floor,
     )
     return jnp.sum(A * KB)
 
 
-def kernel_rows(kind: str, X: jax.Array, idx: jax.Array, params: GPParams) -> jax.Array:
+def kernel_rows(kernel, X: jax.Array, idx: jax.Array, params) -> jax.Array:
     """K(X[idx], X) — O(|idx| * n); used by the pivoted Cholesky factor."""
-    return kernel_matrix(kind, X[idx], X, params)
+    return kernel_matrix(kernel, X[idx], X, params)
 
 
 def quad_form_partials(
-    kind: str,
+    kernel,
     X_rows: jax.Array,   # (m, d)
     X_cols: jax.Array,   # (n, d)
     A: jax.Array,        # (m, t)
     V: jax.Array,        # (n, t)
-    params: GPParams,
+    params,
     *,
     row_block: int = 1024,
 ):
@@ -237,7 +239,7 @@ def quad_form_partials(
     Ab_all = Ap.reshape(nb, rb, A.shape[-1])
 
     def block_q(p_, Xb_, Xc_, Ab):
-        K = kernel_matrix(kind, Xb_, Xc_, p_)
+        K = kernel_matrix(kernel, Xb_, Xc_, p_)
         return jnp.sum(Ab * (K @ V))
 
     g_params0 = jax.tree.map(lambda a: jnp.zeros_like(a), params)

@@ -19,19 +19,21 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .kernels_math import GPParams, kernel_diag, kernel_matrix, noise_variance
+from .kernels_math import kernel_diag, kernel_matrix, noise_variance
 
 
 @partial(jax.jit, static_argnums=(0, 3))
-def pivoted_cholesky(kind: str, X: jax.Array, params: GPParams, rank: int) -> jax.Array:
+def pivoted_cholesky(kernel, X: jax.Array, params, rank: int) -> jax.Array:
     """Rank-`rank` pivoted Cholesky factor of K_XX (noise-free).
 
     Returns L with shape (n, rank) such that K ~= L @ L.T, greedily minimizing
-    the trace of the residual. O(n * rank) memory, O(n * rank^2 + n*d*rank)
+    the trace of the residual. `kernel` may be any spec the algebra accepts —
+    the greedy pivot search reads diag(K), which is NO LONGER constant once a
+    `linear` leaf participates (kernels_math.kernel_diag). O(n * rank) memory, O(n * rank^2 + n*d*rank)
     time. Fixed trip-count fori_loop: safe under jit and on the dry-run mesh.
     """
     n = X.shape[0]
-    d0 = kernel_diag(kind, X, params)
+    d0 = kernel_diag(kernel, X, params)
     # Factor state is at least fp32 (like all solver/cache state, see
     # predcache.solver_dtype): kernel rows promote with the fp32 hyper-
     # parameters anyway, and a bf16 L would both downcast them on scatter
@@ -45,7 +47,7 @@ def pivoted_cholesky(kind: str, X: jax.Array, params: GPParams, rank: int) -> ja
         p = jnp.argmax(diag)
         # k(X[p], X): one kernel row. dynamic_slice keeps this jit-friendly.
         xp = jax.lax.dynamic_slice_in_dim(X, p, 1, axis=0)
-        row = kernel_matrix(kind, xp, X, params)[0]  # (n,)
+        row = kernel_matrix(kernel, xp, X, params)[0]  # (n,)
         # subtract projections on previous pivots: rows >= i of L are zero,
         # so the unmasked contraction is exact.
         lp = L[:, p]  # (rank,)
@@ -97,9 +99,9 @@ class Preconditioner(NamedTuple):
 
 
 def make_preconditioner(
-    kind: str,
+    kernel,
     X: jax.Array,
-    params: GPParams,
+    params,
     rank: int,
     noise_floor: float = 1e-4,
     jitter: float = 1e-6,
@@ -130,7 +132,7 @@ def make_preconditioner(
         L = jnp.zeros((n, 0), X.dtype)
         chol = jnp.zeros((0, 0), X.dtype)
         return Preconditioner(L=L, sigma2=s2, chol_inner=chol)
-    L = pivoted_cholesky(kind, X, params, rank)
+    L = pivoted_cholesky(kernel, X, params, rank)
     s2 = noise_variance(params, noise_floor)
     inner = s2 * jnp.eye(rank, dtype=L.dtype) + L.T @ L
     inner = inner + jitter * jnp.eye(rank, dtype=L.dtype)

@@ -1,28 +1,40 @@
-"""Pallas TPU kernel: fused distance -> kernel -> MVM for one row partition.
+"""Pallas TPU kernel: fused distance -> kernel-sum -> MVM for one row partition.
 
 The paper's compute hot spot is `K_{X^(l) X} @ V`: materialize a (rb, n)
 kernel slab in HBM, GEMM it into V, discard it. On TPU we go further — the
 slab never reaches HBM at all. The kernel fuses, per (bm, bn) VMEM tile:
 
-    1. MXU:  G  = Xi_tile @ Xj_tile^T            (the -2<x,y> term)
-    2. VPU:  D2 = |xi|^2 + |xj|^2 - 2 G          (squared distances)
-    3. VPU:  K  = phi(D2)                        (RBF / Matern elementwise)
-    4. MXU:  acc += K @ V_tile                   (fp32 accumulation)
+    1. MXU:  G  = Xi_tile @ Xj_tile^T              (the -2<x,y> term)
+    2. VPU:  D2 = |xi|^2 + |xj|^2 - 2 G            (squared distances)
+    3. VPU:  K  = sum_c w_c * prod_f phi_cf(q_cf D2)   (multi-component
+             epilogue: every stationary component that shares the tile's
+             pre-scaling is evaluated on the SAME D2 and accumulated)
+    4. MXU:  acc += K @ V_tile                     (fp32 accumulation)
 
 HBM traffic drops from O(rb * n) slab writes+reads to just the X/V tile
-reads — the kernel-MVM becomes compute-bound instead of HBM-bound (see
-EXPERIMENTS.md §Roofline for the napkin math: at d=9, the dense path moves
-~4 bytes/flop; fused moves ~0.004).
+reads — and, new with the kernel algebra, a whole SUM kernel costs one pass
+over HBM instead of one pass per component (see EXPERIMENTS.md §Kernel
+algebra for the roofline reading).
+
+Components are a STATIC tuple of factor-kind tuples (e.g. ``(("rbf",),
+("matern32",))`` for rbf + matern32); their hyperparameters arrive as a
+flat per-component scalar vector in SMEM (layout below), so the kernel body
+still specializes only on structure:
+
+    for each component c:  w_c                     (relative weight)
+        for each factor f: q_cf                    (lengthscale ratio^2:
+                                                    D2_cf = q_cf * D2_tile)
+                           alpha_cf  (rq only)     (mixture parameter)
+
+Inputs arrive pre-scaled by the pass's reference lengthscale and V
+pre-scaled by the base weight (both O(n d) host-side ops); a single
+component degenerates to w = q = 1.0 — bitwise the pre-algebra kernel.
 
 Grid: (rb/bm, n/bn), with the n axis innermost so each output tile stays
 resident in VMEM across the whole reduction. Tile sizes are multiples of
 (8, 128) sublane x lane; the feature dim d and RHS count t are zero-padded
 to 128 by the wrapper (exact: padded features contribute 0 to distances,
 padded V columns are sliced off).
-
-Inputs arrive pre-scaled by the lengthscale and V pre-scaled by the
-outputscale (both O(n d) host-side ops), so the kernel body is
-hyperparameter-free and specializes only on the kernel family.
 
 Validated against `repro.kernels.ref` in interpret mode on CPU (this
 container has no TPU); `repro.kernels.ops` picks interpret automatically.
@@ -43,7 +55,8 @@ from repro.core.kernels_math import kernel_from_sqdist
 # VMEM budget per tile set:
 #   Xi (256,128)*4B = 128 KiB, Xj (512,128)*4B = 256 KiB, V (512,128)*4B = 256 KiB,
 #   K tile (256,512)*4B = 512 KiB, acc (256,128)*4B = 128 KiB  => ~1.3 MiB << 16 MiB VMEM,
-# leaving room for double-buffered input pipelining.
+# leaving room for double-buffered input pipelining. The multi-component
+# epilogue reuses the same K tile accumulator, so the budget is unchanged.
 DEFAULT_BM = 256
 DEFAULT_BN = 512
 
@@ -52,8 +65,20 @@ _CompilerParams = getattr(pltpu, "CompilerParams", None) or \
     pltpu.TPUCompilerParams
 
 
-def _kmvm_kernel(kind: str, compute_dtype, xi_ref, xj_ref, v_ref, out_ref):
-    """One (i, j) grid step: out[i] += phi(d2(Xi_i, Xj_j)) @ V_j.
+def scalar_layout(components: tuple) -> int:
+    """Length of the flat SMEM scalar vector for a static component tuple."""
+    n = 0
+    for kinds in components:
+        n += 1  # w_c
+        for kind in kinds:
+            n += 2 if kind == "rq" else 1  # q_cf (+ alpha_cf)
+    return n
+
+
+def _kmvm_kernel(components, compute_dtype, scal_ref, xi_ref, xj_ref, v_ref,
+                 out_ref):
+    """One (i, j) grid step: out[i] += K_tile @ V_j with
+    K_tile = sum_c w_c prod_f phi_cf(q_cf * d2(Xi_i, Xj_j)).
 
     compute_dtype is the MXU operand dtype of the two matmuls (fp32 by
     default, bf16 on the mixed-precision path); BOTH accumulate in fp32
@@ -78,7 +103,25 @@ def _kmvm_kernel(kind: str, compute_dtype, xi_ref, xj_ref, v_ref, out_ref):
     nj = jnp.sum(xj32 * xj32, axis=1, keepdims=True).T     # (1, bn)
     d2 = jnp.maximum(ni + nj - 2.0 * g, 0.0)
 
-    k = kernel_from_sqdist(kind, d2)                   # (bm, bn) in VMEM only
+    # multi-component epilogue: all shapes share the one d2 tile (VMEM only)
+    k = None
+    s = 0
+    for kinds in components:
+        w = scal_ref[0, s]
+        s += 1
+        term = None
+        for kind in kinds:
+            q = scal_ref[0, s]
+            s += 1
+            if kind == "rq":
+                alpha = scal_ref[0, s]
+                s += 1
+                f = kernel_from_sqdist("rq", q * d2, alpha)
+            else:
+                f = kernel_from_sqdist(kind, q * d2)
+            term = f if term is None else term * f
+        term = w * term
+        k = term if k is None else k + term                # (bm, bn)
 
     out_ref[...] += jax.lax.dot_general(
         k.astype(compute_dtype), v, (((1,), (0,)), ((), ())),
@@ -86,30 +129,39 @@ def _kmvm_kernel(kind: str, compute_dtype, xi_ref, xj_ref, v_ref, out_ref):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("kind", "bm", "bn", "interpret",
+    jax.jit, static_argnames=("components", "bm", "bn", "interpret",
                               "compute_dtype"))
 def kmvm_pallas(
-    kind: str,
+    components,      # static tuple of factor-kind tuples, e.g. (("rbf",),)
     Xi: jax.Array,   # (m, d)  pre-scaled rows, m % bm == 0
     Xj: jax.Array,   # (n, d)  pre-scaled columns, n % bn == 0
     V: jax.Array,    # (n, t)  pre-scaled RHS, t % 128 == 0
+    scalars: jax.Array,  # (1, L) fp32 per-component scalars, L = scalar_layout
     *,
     bm: int = DEFAULT_BM,
     bn: int = DEFAULT_BN,
     interpret: bool = False,
     compute_dtype: str = "float32",
 ) -> jax.Array:
-    """Fused phi(dist(Xi, Xj)) @ V. Shapes must be pre-padded (see ops.py)."""
+    """Fused [sum_c w_c prod_f phi(q d2(Xi, Xj))] @ V.
+
+    Shapes must be pre-padded (see ops.py); the scalar vector lives in SMEM
+    and is broadcast to every grid step.
+    """
     m, d = Xi.shape
     n, t = V.shape
     assert Xj.shape == (n, d), (Xi.shape, Xj.shape, V.shape)
     assert m % bm == 0 and n % bn == 0, (m, bm, n, bn)
+    L = scalar_layout(components)
+    assert scalars.shape == (1, L), (scalars.shape, components)
 
     grid = (m // bm, n // bn)
     return pl.pallas_call(
-        functools.partial(_kmvm_kernel, kind, jnp.dtype(compute_dtype)),
+        functools.partial(_kmvm_kernel, components, jnp.dtype(compute_dtype)),
         grid=grid,
         in_specs=[
+            pl.BlockSpec((1, L), lambda i, j: (0, 0),
+                         memory_space=pltpu.SMEM),
             pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
             pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
             pl.BlockSpec((bn, t), lambda i, j: (j, 0)),
@@ -119,4 +171,4 @@ def kmvm_pallas(
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
-    )(Xi, Xj, V)
+    )(scalars, Xi, Xj, V)

@@ -1,22 +1,49 @@
 """Public jit'd wrappers for the fused kernel-MVM Pallas kernel.
 
-Handles everything the raw kernel does not: lengthscale/outputscale
-application, padding of (m, n, d, t) to tile multiples, dtype policy,
-automatic interpret-mode on CPU, and a `block_fn` adapter so
-`repro.core.partitioned.kmvm` can route its per-partition slab MVMs through
-the Pallas path transparently.
+Handles everything the raw kernel does not: planning a KernelSpec into
+fused passes, lengthscale/weight application, padding of (m, n, d, t) to
+tile multiples, dtype policy, automatic interpret-mode on CPU, and a
+`block_fn` adapter so `repro.core.partitioned.kmvm` can route its
+per-partition slab MVMs through the Pallas path transparently.
+
+Planning (`mvm_plan`)
+---------------------
+The spec is normalized to a weighted sum of primitive products
+(`kernels_math.normalize_components`) and split into:
+
+* ONE fused Pallas pass carrying every component whose factors are all
+  stationary with a SHARED-SCALAR lengthscale. The tile is pre-scaled by
+  the first such component's lengthscale; every other component is
+  evaluated on the same d2 tile through its lengthscale ratio
+  q = (l_ref / l_c)^2 — the whole sum kernel costs one pass over HBM.
+* one fused pass PER component with an ARD lengthscale (its own metric:
+  no shared d2 tile exists), still slab-free in VMEM.
+* `linear` components, computed outside Pallas as two thin matmuls
+  w * (Xi/s) @ ((Xj/s)^T V) — O((m+n) d t), no (m, n) tile at all.
+* a dense-slab fallback for anything else (products mixing linear with
+  stationary factors, multi-factor ARD products) — correct for every
+  spec, O(m n) transient memory for those terms only.
+
+A single-component spec plans to exactly one fused pass with
+w = q = 1.0 — bitwise the pre-algebra behavior.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.kernels_math import GPParams, outputscale, scale_inputs
+from repro.core.kernels_math import (
+    canonicalize_kernel,
+    leaf_matrix,
+    normalize_components,
+    softplus,
+)
 
-from .kmvm import DEFAULT_BM, DEFAULT_BN, kmvm_pallas
+from .kmvm import DEFAULT_BM, DEFAULT_BN, kmvm_pallas, scalar_layout
 
 _LANE = 128
 
@@ -35,39 +62,102 @@ def _auto_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def kmvm_block(
-    kind: str,
-    Xi: jax.Array,
-    Xj: jax.Array,
-    V: jax.Array,
-    params: GPParams,
-    *,
-    bm: int = DEFAULT_BM,
-    bn: int = DEFAULT_BN,
-    interpret: bool | None = None,
-    compute_dtype: str | None = None,
-) -> jax.Array:
-    """K(Xi, Xj) @ V via the fused Pallas kernel; arbitrary shapes/dtypes.
+class _PallasPass(NamedTuple):
+    components: tuple        # static tuple of factor-kind tuples
+    lengthscale: jax.Array   # () or (d,) reference pre-scaling
+    base_weight: jax.Array   # V pre-multiplier (first component's weight)
+    scalars: list            # flat per-component scalar list (see kmvm.py)
 
-    Semantics identical to `repro.kernels.ref.kmvm_ref` (no noise term —
-    the diagonal sigma^2 V is the caller's O(n) epilogue).
 
-    compute_dtype: MXU operand dtype of the in-kernel matmuls. "bfloat16"
-    halves the HBM operand traffic as well (tiles are stored pre-cast) and
-    accumulates in fp32; None/"float32" is the exact path.
-    """
-    if interpret is None:
-        interpret = _auto_interpret()
-    cdt = jnp.dtype(compute_dtype if compute_dtype is not None else jnp.float32)
-    squeeze = V.ndim == 1
-    if squeeze:
-        V = V[:, None]
+class MVMPlan(NamedTuple):
+    """How a spec executes on the Pallas backend (returned by `mvm_plan`)."""
+
+    passes: tuple            # _PallasPass fused passes
+    linear_terms: tuple      # (weight, LinearParams) thin-matmul terms
+    fallback_terms: tuple    # kernels_math.Term dense-slab terms
+
+    @property
+    def num_fused_passes(self) -> int:
+        return len(self.passes)
+
+    @property
+    def num_fallback_terms(self) -> int:
+        return len(self.fallback_terms)
+
+
+def _is_scalar_stationary(factors) -> bool:
+    return all(kind != "linear" and p.raw_lengthscale.ndim == 0
+               for kind, p in factors)
+
+
+def _pass_scalars(terms, l_ref, w0) -> list:
+    scal = []
+    for t in terms:
+        scal.append(t.weight / w0)
+        for kind, p in t.factors:
+            ls = softplus(p.raw_lengthscale)
+            if ls.ndim:
+                # ARD factor: only planned as a single-factor pass whose
+                # pre-scaling IS this lengthscale, so its ratio is exactly 1
+                scal.append(jnp.float32(1.0))
+            else:
+                scal.append(jnp.square(l_ref / ls))
+            if kind == "rq":
+                scal.append(softplus(p.raw_alpha))
+    return scal
+
+
+def mvm_plan(kernel, params) -> MVMPlan:
+    """Plan the fused execution of `kernel` under `params` (trace-safe:
+    the plan's structure is static, its scalars are traced)."""
+    spec, kp = canonicalize_kernel(kernel, params)
+    terms = normalize_components(spec, kp)
+
+    fused, ard, linear, fallback = [], [], [], []
+    for t in terms:
+        kinds = tuple(kind for kind, _ in t.factors)
+        if _is_scalar_stationary(t.factors):
+            fused.append(t)
+        elif kinds == ("linear",):
+            linear.append((t.weight, t.factors[0][1]))
+        elif len(t.factors) == 1 and kinds[0] != "linear":
+            ard.append(t)  # single stationary ARD factor: own metric, own pass
+        else:
+            fallback.append(t)
+
+    passes = []
+    if fused:
+        l_ref = softplus(fused[0].factors[0][1].raw_lengthscale)
+        w0 = fused[0].weight
+        passes.append(_PallasPass(
+            components=tuple(tuple(k for k, _ in t.factors) for t in fused),
+            lengthscale=l_ref, base_weight=w0,
+            scalars=_pass_scalars(fused, l_ref, w0)))
+    for t in ard:
+        l_ref = softplus(t.factors[0][1].raw_lengthscale)
+        passes.append(_PallasPass(
+            components=(tuple(k for k, _ in t.factors),),
+            lengthscale=l_ref, base_weight=t.weight,
+            scalars=_pass_scalars([t], l_ref, t.weight)))
+    return MVMPlan(passes=tuple(passes), linear_terms=tuple(linear),
+                   fallback_terms=tuple(fallback))
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _run_pass(ppass: _PallasPass, Xi, Xj, V, *, bm, bn, interpret, cdt):
+    """One fused Pallas launch; returns the (m, t) fp32 contribution."""
     m, _ = Xi.shape
     n, t = V.shape
-
-    Xi_s = scale_inputs(Xi, params).astype(cdt)
-    Xj_s = scale_inputs(Xj, params).astype(cdt)
-    Vs = (outputscale(params) * V.astype(jnp.float32)).astype(cdt)
+    Xi_s = (Xi / ppass.lengthscale).astype(cdt)
+    Xj_s = (Xj / ppass.lengthscale).astype(cdt)
+    Vs = (ppass.base_weight * V.astype(jnp.float32)).astype(cdt)
+    # the kernel body is fp32 math at any operand dtype (see conformance
+    # tolerances): scalars join it in fp32
+    scalars = jnp.stack(
+        [jnp.asarray(s).astype(jnp.float32) for s in ppass.scalars])[None, :]
 
     # sublane tiling: fp32 wants multiples of 8, 16-bit dtypes of 16 —
     # Xi blocks are (bm, d) and Xj/V blocks are (bn, d)/(bn, t), so BOTH
@@ -79,24 +169,84 @@ def kmvm_block(
     Xj_p = _pad_axis(_pad_axis(Xj_s, 0, bn_eff), 1, _LANE)
     V_p = _pad_axis(_pad_axis(Vs, 0, bn_eff), 1, _LANE)
 
-    out = kmvm_pallas(kind, Xi_p, Xj_p, V_p, bm=bm_eff, bn=bn_eff,
-                      interpret=interpret, compute_dtype=str(cdt))
-    out = out[:m, :t].astype(V.dtype)
+    out = kmvm_pallas(ppass.components, Xi_p, Xj_p, V_p, scalars,
+                      bm=bm_eff, bn=bn_eff, interpret=interpret,
+                      compute_dtype=str(cdt))
+    return out[:m, :t]
+
+
+def _mixed_dot(A, B, cdt):
+    """A @ B on cdt operands with fp32 MXU accumulation."""
+    return jax.lax.dot_general(
+        A.astype(cdt), B.astype(cdt), (((A.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def kmvm_block(
+    kernel,
+    Xi: jax.Array,
+    Xj: jax.Array,
+    V: jax.Array,
+    params,
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    interpret: bool | None = None,
+    compute_dtype: str | None = None,
+) -> jax.Array:
+    """K(Xi, Xj) @ V via the fused Pallas plan; arbitrary shapes/dtypes.
+
+    kernel: legacy kind string or a KernelSpec/expression; params the
+    matching GPParams / KernelParams. Semantics identical to
+    `repro.kernels.ref.kmvm_ref` (no noise term — the diagonal sigma^2 V
+    is the caller's O(n) epilogue).
+
+    compute_dtype: MXU operand dtype of the in-kernel matmuls. "bfloat16"
+    halves the HBM operand traffic as well (tiles are stored pre-cast) and
+    accumulates in fp32; None/"float32" is the exact path. All elementwise
+    kernel math stays fp32 regardless.
+    """
+    if interpret is None:
+        interpret = _auto_interpret()
+    cdt = jnp.dtype(compute_dtype if compute_dtype is not None else jnp.float32)
+    squeeze = V.ndim == 1
+    if squeeze:
+        V = V[:, None]
+
+    plan = mvm_plan(kernel, params)
+    acc = None
+    for ppass in plan.passes:
+        out = _run_pass(ppass, Xi, Xj, V, bm=bm, bn=bn,
+                        interpret=interpret, cdt=cdt)
+        acc = out if acc is None else acc + out
+    for w, p in plan.linear_terms:
+        s = softplus(p.raw_scale)
+        # two thin matmuls: K_lin @ V = (Xi/s) (Xj/s)^T V — never (m, n)
+        proj = _mixed_dot((Xj / s).T, V.astype(jnp.float32), cdt)  # (d, t)
+        out = w * _mixed_dot(Xi / s, proj, cdt)
+        acc = out if acc is None else acc + out
+    for term in plan.fallback_terms:
+        # dense-slab fallback (fp32 math, matching the kernel's contract)
+        K = None
+        for kind, p in term.factors:
+            Kf = leaf_matrix(kind, p, Xi.astype(jnp.float32),
+                             Xj.astype(jnp.float32))
+            K = Kf if K is None else K * Kf
+        out = term.weight * _mixed_dot(K, V.astype(jnp.float32), cdt)
+        acc = out if acc is None else acc + out
+
+    out = acc.astype(V.dtype)
     return out[:, 0] if squeeze else out
 
 
-def _round_up(x: int, m: int) -> int:
-    return ((x + m - 1) // m) * m
-
-
-def pallas_block_fn(kind: str, *, bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+def pallas_block_fn(kernel, *, bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
                     interpret: bool | None = None,
                     compute_dtype: str | None = None):
     """Adapter for `partitioned.kmvm(..., block_fn=...)`: per-partition slab
     MVMs go through the fused kernel instead of the dense jnp path."""
 
     def fn(Xb, X, V, params):
-        return kmvm_block(kind, Xb, X, V, params, bm=bm, bn=bn,
+        return kmvm_block(kernel, Xb, X, V, params, bm=bm, bn=bn,
                           interpret=interpret, compute_dtype=compute_dtype)
 
     return fn

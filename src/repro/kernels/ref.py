@@ -1,8 +1,8 @@
 """Pure-jnp oracle for the fused kernel-MVM Pallas kernel.
 
 Materializes the dense slab — O(m n) memory — exactly what the Pallas path
-avoids. Every kernel test sweeps shapes/dtypes and asserts allclose against
-this reference.
+avoids. Every kernel test sweeps shapes/dtypes/specs and asserts allclose
+against this reference.
 """
 
 from __future__ import annotations
@@ -10,20 +10,24 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.kernels_math import GPParams, kernel_matrix
+from repro.core.kernels_math import kernel_matrix
 
 
-def kmvm_ref(kind: str, Xi: jax.Array, Xj: jax.Array, V: jax.Array,
-             params: GPParams) -> jax.Array:
-    """K(Xi, Xj) @ V with the dense slab, full hyperparameters applied."""
-    K = kernel_matrix(kind, Xi, Xj, params)
+def kmvm_ref(kernel, Xi: jax.Array, Xj: jax.Array, V: jax.Array,
+             params) -> jax.Array:
+    """K(Xi, Xj) @ V with the dense slab, full hyperparameters applied.
+
+    kernel: legacy kind string or a KernelSpec/expression; params the
+    matching GPParams / KernelParams — same contract as `ops.kmvm_block`.
+    """
+    K = kernel_matrix(kernel, Xi, Xj, params)
     return (K @ V.astype(K.dtype)).astype(jnp.float32)
 
 
 def kmvm_prescaled_ref(kind: str, Xi: jax.Array, Xj: jax.Array,
                        V: jax.Array) -> jax.Array:
-    """Unit-hyperparameter oracle matching `kmvm_pallas`'s contract
-    (inputs pre-scaled by lengthscale, V pre-scaled by outputscale)."""
+    """Unit-hyperparameter oracle matching one `kmvm_pallas` component
+    (inputs pre-scaled by lengthscale, V pre-scaled by the base weight)."""
     from repro.core.kernels_math import kernel_from_sqdist, sq_dist
 
     d2 = sq_dist(Xi.astype(jnp.float32), Xj.astype(jnp.float32))

@@ -38,6 +38,11 @@ def main():
     ap.add_argument("--ckpt", default="checkpoints")
     ap.add_argument("--gp-mode", default="2d", choices=("1d", "2d"))
     ap.add_argument("--gp-n", type=int, default=8192)
+    ap.add_argument("--gp-kernel", default="matern32",
+                    help="kernel: a stationary kind (matern32) or a "
+                         "composable spec expression, e.g. "
+                         "'0.5*rbf + matern32' or 'scale(rq)*linear' "
+                         "(see repro.core.kernels_math.parse_kernel)")
     ap.add_argument("--gp-backend", default="partitioned",
                     choices=("partitioned", "pallas"),
                     help="inner KernelOperator slab backend per device tile")
@@ -91,7 +96,7 @@ def main():
 def _train_gp(args):
     import jax.numpy as jnp
 
-    from repro.core import init_params
+    from repro.core import KERNEL_KINDS, init_params_for, parse_kernel, spec_expr
     from repro.core.distributed import (
         DistMLLConfig, make_geometry, replicate, shard_vector,
     )
@@ -107,17 +112,24 @@ def _train_gp(args):
     y = jnp.asarray(s.y_train[:n], jnp.float32)
     geom = make_geometry(mesh, n, X.shape[1], mode=args.gp_mode)
     gp_dtype = None if args.gp_dtype == "float32" else args.gp_dtype
-    cfg = DistMLLConfig(precond_rank=100, num_probes=8, max_cg_iters=20,
-                        cg_tol=1.0, backend=args.gp_backend,
+    # legacy stationary kinds train the flat GPParams (the paper's setup);
+    # any other expression parses to a KernelSpec + per-node KernelParams
+    # (one dispatch rule for model/launcher/tests: init_params_for)
+    kernel = args.gp_kernel if args.gp_kernel in KERNEL_KINDS \
+        else parse_kernel(args.gp_kernel)
+    params = init_params_for(kernel, noise=0.3, dtype=jnp.float32)
+    kernel_desc = kernel if isinstance(kernel, str) else spec_expr(kernel)
+    cfg = DistMLLConfig(kernel=kernel, precond_rank=100, num_probes=8,
+                        max_cg_iters=20, cg_tol=1.0, backend=args.gp_backend,
                         compute_dtype=gp_dtype)
     warm = WarmStartConfig(enabled=args.gp_refresh_every > 0,
                            refresh_every=max(args.gp_refresh_every, 1),
                            drift_threshold=args.gp_drift_threshold)
     engine = DistWarmStartEngine(mesh, geom, cfg, warm)
-    params = init_params(noise=0.3, dtype=jnp.float32)
     state = adam_init(params)
     Xr, ys = replicate(mesh, X), shard_vector(mesh, geom, y)
-    print(f"[train-gp] n={n} mode={args.gp_mode} backend={args.gp_backend} "
+    print(f"[train-gp] n={n} kernel={kernel_desc} mode={args.gp_mode} "
+          f"backend={args.gp_backend} "
           f"dtype={args.gp_dtype} refresh_every={args.gp_refresh_every} "
           f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
     for step_i in range(args.steps):

@@ -31,7 +31,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.kernels_math import GPParams
+from repro.core.kernels_math import (
+    GPParams,
+    KernelParams,
+    as_spec,
+    params_skeleton,
+    spec_from_json,
+    spec_to_json,
+)
 from repro.core.operators import OperatorConfig
 from repro.core.predcache import (
     PredictionCache,
@@ -40,15 +47,20 @@ from repro.core.predcache import (
 )
 from repro.train.checkpoint import load_checkpoint, save_checkpoint
 
-ARTIFACT_VERSION = 1
+# version history:
+#   1 — flat GPParams only (pre kernel-algebra)
+#   2 — composable kernels: the manifest records the KernelSpec tree and
+#       `params` may be a per-node KernelParams pytree
+ARTIFACT_VERSION = 2
 _STEP = 0  # artifacts are single-snapshot checkpoints
 
 
 class PosteriorArtifact(NamedTuple):
     """Everything a PredictionEngine needs to serve a trained exact GP."""
 
-    config: OperatorConfig          # static: kernel / backend / dtype policy
-    params: GPParams                # trained hyperparameters
+    config: OperatorConfig          # static: kernel spec / backend / dtype policy
+    params: GPParams | KernelParams # trained hyperparameters (pytree shape
+                                    # follows config.kernel's spec)
     X: jax.Array                    # (n, d) training inputs
     mean_cache: jax.Array           # (n,)  K_hat^{-1} (y - mu)
     var_Q: jax.Array                # (n, r) Lanczos basis
@@ -156,7 +168,17 @@ def save_artifact(directory: str, artifact: PosteriorArtifact) -> str:
     meta["artifact_version"] = ARTIFACT_VERSION
     cfg = artifact.config._asdict()
     cfg.pop("geom", None)  # mesh geometry is a runtime choice, not state
+    if not isinstance(cfg["kernel"], str):
+        # KernelSpec trees serialize structurally (JSON-able, round-trips
+        # through spec_from_json at load)
+        cfg["kernel"] = {"__kernel_spec__": spec_to_json(cfg["kernel"])}
     meta["operator_config"] = cfg
+    if isinstance(artifact.params, KernelParams):
+        # the load-time skeleton for the per-node params pytree
+        meta["kernel_spec"] = spec_to_json(as_spec(artifact.config.kernel))
+        meta["params_format"] = "kernel_params"
+    else:
+        meta["params_format"] = "gp_params"
     return save_checkpoint(directory, _STEP, _arrays_tree(artifact), meta)
 
 
@@ -167,13 +189,22 @@ def load_artifact(directory: str) -> PosteriorArtifact:
     meta = manifest["meta"]
     version = meta.get("artifact_version")
     if version != ARTIFACT_VERSION:
+        hint = (
+            " (version 1 predates the composable kernel algebra: re-run the "
+            "fit to produce a v2 artifact, or load it with a pre-algebra "
+            "release — v1 flat GPParams cannot express a KernelSpec tree)"
+            if version == 1 else "")
         raise ValueError(
             f"artifact version {version!r} under {directory} not supported "
-            f"(this build reads version {ARTIFACT_VERSION})")
+            f"(this build reads version {ARTIFACT_VERSION}){hint}")
 
     zero = np.zeros(())
+    if meta.get("params_format") == "kernel_params":
+        params_tmpl = params_skeleton(spec_from_json(meta["kernel_spec"]))
+    else:
+        params_tmpl = GPParams(zero, zero, zero, zero)
     skeleton = {
-        "params": GPParams(zero, zero, zero, zero),
+        "params": params_tmpl,
         "X": zero, "mean_cache": zero, "var_Q": zero, "var_T_chol": zero,
         "solve_rel_residual": zero,
     }
@@ -188,6 +219,8 @@ def load_artifact(directory: str) -> PosteriorArtifact:
     tree = jax.tree.map(jnp.asarray, tree)
     cfg = dict(meta["operator_config"])
     cfg["geom"] = None
+    if isinstance(cfg["kernel"], dict):
+        cfg["kernel"] = spec_from_json(cfg["kernel"]["__kernel_spec__"])
     config = OperatorConfig(**cfg)
     return PosteriorArtifact(
         config=config, params=tree["params"], X=tree["X"],

@@ -86,25 +86,36 @@ def _softplus_np(x):
     return np.log1p(np.exp(-np.abs(x))) + np.maximum(x, 0.0)
 
 
+def _constrained_leaves(params) -> list:
+    """Host-side CONSTRAINED hyperparameter leaves of a params pytree,
+    excluding the mean: softplus of every raw_* leaf that shapes K_hat.
+
+    Works uniformly over GPParams and the kernel algebra's KernelParams —
+    any spec tree flattens to its per-node raw leaves (all of which are
+    softplus-constrained: lengthscales, outputscales, rq alphas, linear
+    scales, noise); raw_mean never enters K_hat and is dropped (otherwise
+    a mean moving off its zero init would read as unbounded drift).
+    """
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        if jax.tree_util.keystr(path).endswith("raw_mean"):
+            continue
+        out.append(_softplus_np(leaf))
+    return out
+
+
 def param_drift(ref, params) -> float:
     """Max relative change of the CONSTRAINED hyperparameters that the
-    preconditioner actually depends on (host-side, concrete params).
+    preconditioner actually depends on (host-side, concrete params),
+    measured over the flattened constrained pytree (`_constrained_leaves`).
 
-    The pivoted-Cholesky factor is a function of (lengthscale, outputscale)
-    and its Woodbury solve of sigma^2; the constant mean never enters K_hat,
-    so it is excluded — otherwise a mean moving off its zero init would
-    read as unbounded relative drift. For non-GPParams pytrees this falls
-    back to max relative change over all leaves.
+    The pivoted-Cholesky factor is a function of every kernel
+    hyperparameter and its Woodbury solve of sigma^2; the constant mean is
+    excluded.
     """
-    if hasattr(ref, "raw_lengthscale"):
-        pairs = [(_softplus_np(getattr(ref, f)), _softplus_np(getattr(params, f)))
-                 for f in ("raw_lengthscale", "raw_outputscale", "raw_noise")]
-    else:
-        pairs = list(zip(
-            (np.asarray(a, np.float64) for a in jax.tree.leaves(ref)),
-            (np.asarray(b, np.float64) for b in jax.tree.leaves(params))))
     drift = 0.0
-    for a, b in pairs:
+    for a, b in zip(_constrained_leaves(ref), _constrained_leaves(params)):
         denom = np.maximum(np.abs(a), 1e-8)
         drift = max(drift, float(np.max(np.abs(b - a) / denom)))
     return drift

@@ -28,7 +28,7 @@ from repro.core import (
     dense_khat,
     dense_mll,
     exact_mll,
-    init_params,
+    init_params_for,
     make_operator,
 )
 from repro.core.distributed import (
@@ -41,7 +41,9 @@ from repro.core.distributed import (
 )
 
 SINGLE_BACKENDS = ("dense", "partitioned", "pallas")
-KERNELS = ("rbf", "matern32", "matern52")
+# the last axis entry is a composable KernelSpec expression (KernelParams
+# pytree; the Pallas backend runs it as ONE fused multi-component pass)
+KERNELS = ("rbf", "matern32", "matern52", "0.5*rbf + matern32")
 DTYPES = ("float32", "float64")
 SHAPES = ((64, 2), (96, 5))
 
@@ -66,7 +68,9 @@ def _problem(kernel, dtype, n, d, t=3, seed=0):
     w = rng.normal(size=d)
     y = jnp.asarray(np.sin(np.asarray(X, np.float64) @ w)
                     + 0.1 * rng.normal(size=n), dt)
-    params = init_params(noise=0.3, dtype=dt)
+    # one dispatch rule with the model/launcher: GPParams for legacy kinds,
+    # per-node KernelParams for the composite spec-expression axis
+    params = init_params_for(kernel, noise=0.3, dtype=dt)
     return X, V, y, params
 
 

@@ -1,0 +1,369 @@
+"""Composable kernel algebra: spec trees, parser, PSD, fused Pallas plan.
+
+Property tests over randomly sampled KernelSpec trees (leaves rbf /
+matern* / rq / linear; combinators Sum / Product / Scale): positive
+semi-definiteness, agreement of the recursive evaluator with independently
+composed leaf matrices, Matern -> RBF large-nu-style sanity limits, the
+legacy (kind, GPParams) path staying bitwise, and the Pallas fused
+multi-component plan (one HBM pass for a whole scalar-lengthscale sum;
+single-component specs take exactly one fused pass — the pre-algebra
+behavior).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep; deterministic fallback (conftest dir is on sys.path)
+    from _hypothesis_shim import given, settings, strategies as st
+
+from repro.core import (
+    GPParams,
+    LEAF_KINDS,
+    Leaf,
+    Product,
+    Scale,
+    Sum,
+    dense_khat,
+    dense_mll,
+    init_kernel_params,
+    init_params,
+    kernel_diag,
+    kernel_matrix,
+    noise_variance,
+    num_components,
+    parse_kernel,
+    spec_expr,
+    spec_from_json,
+    spec_to_json,
+)
+from repro.core.kernels_math import leaf_matrix, softplus, sq_dist
+from repro.kernels.ops import kmvm_block, mvm_plan
+from repro.kernels.ref import kmvm_ref
+from repro.train.solver_state import param_drift
+
+
+def random_spec(r, depth=0):
+    """Sample a small spec tree (leaves weighted so trees stay evaluable)."""
+    choice = int(r.integers(0, 6))
+    if depth >= 2 or choice < 3:
+        leaf = Leaf(LEAF_KINDS[int(r.integers(0, len(LEAF_KINDS)))])
+        if r.integers(0, 2):
+            return Scale(leaf, float(r.uniform(0.2, 2.0)))
+        return leaf
+    if choice == 3:
+        return Sum(tuple(random_spec(r, depth + 1)
+                         for _ in range(int(r.integers(2, 4)))))
+    if choice == 4:
+        return Product(tuple(random_spec(r, depth + 1) for _ in range(2)))
+    return Scale(random_spec(r, depth + 1), float(r.uniform(0.2, 2.0)))
+
+
+def _compose_reference(spec, nodes, X1, X2):
+    """Independent combinator walk: only `leaf_matrix` is shared with the
+    implementation under test; Sum/Product/Scale semantics are re-derived
+    here. Returns (K, nodes_consumed)."""
+    if isinstance(spec, Leaf):
+        return leaf_matrix(spec.kind, nodes[0], X1, X2), 1
+    if isinstance(spec, Scale):
+        K, used = _compose_reference(spec.inner, nodes[1:], X1, X2)
+        return softplus(nodes[0].raw_outputscale) * K, used + 1
+    kids = spec.terms if isinstance(spec, Sum) else spec.factors
+    Ks, used = [], 0
+    for k in kids:
+        K, u = _compose_reference(k, nodes[used:], X1, X2)
+        Ks.append(K)
+        used += u
+    if isinstance(spec, Sum):
+        return sum(Ks[1:], Ks[0]), used
+    out = Ks[0]
+    for K in Ks[1:]:
+        out = out * K
+    return out, used
+
+
+# ---------------------------------------------------------------------------
+# parser + serialization
+# ---------------------------------------------------------------------------
+
+
+def test_parse_kernel_expressions():
+    assert parse_kernel("matern32") == Leaf("matern32")
+    assert parse_kernel("0.5*rbf") == Scale(Leaf("rbf"), 0.5)
+    assert parse_kernel("scale(rq)") == Scale(Leaf("rq"))
+    assert parse_kernel("0.5*rbf + matern32") == \
+        Sum((Scale(Leaf("rbf"), 0.5), Leaf("matern32")))
+    assert parse_kernel("rbf*linear") == Product((Leaf("rbf"), Leaf("linear")))
+    assert parse_kernel("2*(rbf + linear)") == \
+        Scale(Sum((Leaf("rbf"), Leaf("linear"))), 2.0)
+    # precedence: * binds tighter than +
+    assert parse_kernel("rbf*linear + rq") == \
+        Sum((Product((Leaf("rbf"), Leaf("linear"))), Leaf("rq")))
+
+
+@pytest.mark.parametrize("bad", ["", "foo", "0.5", "rbf +", "rbf * -1",
+                                 "(rbf", "0*rbf"])
+def test_parse_kernel_rejects(bad):
+    with pytest.raises(ValueError):
+        parse_kernel(bad)
+
+
+@settings(deadline=None, max_examples=20)
+@given(seed=st.integers(0, 2**16))
+def test_spec_serialization_roundtrip(seed):
+    spec = random_spec(np.random.default_rng(seed))
+    assert spec_from_json(spec_to_json(spec)) == spec
+    assert parse_kernel(spec_expr(spec)) == spec
+
+
+# ---------------------------------------------------------------------------
+# algebra semantics
+# ---------------------------------------------------------------------------
+
+
+@settings(deadline=None, max_examples=15)
+@given(seed=st.integers(0, 2**16), n=st.integers(8, 40))
+def test_sampled_spec_trees_are_psd(seed, n):
+    """Cholesky of K + sigma^2 I succeeds for any sampled spec tree (sums,
+    products and scales of PSD kernels stay PSD; Schur product theorem)."""
+    r = np.random.default_rng(seed)
+    spec = random_spec(r)
+    d = int(r.integers(1, 5))
+    kp = init_kernel_params(spec, lengthscale=float(r.uniform(0.4, 1.5)),
+                            noise=0.1, dtype=jnp.float64)
+    X = jnp.asarray(r.normal(size=(n, d)))
+    L = jnp.linalg.cholesky(dense_khat(spec, X, kp))
+    assert bool(jnp.all(jnp.isfinite(L))), spec_expr(spec)
+
+
+@settings(deadline=None, max_examples=15)
+@given(seed=st.integers(0, 2**16))
+def test_spec_eval_matches_composed_leaf_matrices(seed):
+    """Sum/Product/Scale evaluation equals the dense composition of leaf
+    matrices, and kernel_diag equals diag(kernel_matrix)."""
+    r = np.random.default_rng(seed)
+    spec = random_spec(r)
+    kp = init_kernel_params(spec, dtype=jnp.float64)
+    X1 = jnp.asarray(r.normal(size=(24, 3)))
+    X2 = jnp.asarray(r.normal(size=(17, 3)))
+    K = kernel_matrix(spec, X1, X2, kp)
+    K_ref, used = _compose_reference(spec, list(kp.nodes), X1, X2)
+    assert used == len(kp.nodes)
+    np.testing.assert_allclose(np.asarray(K), np.asarray(K_ref),
+                               rtol=1e-12, atol=1e-12)
+    # kernel_diag is the EXACT diagonal; the dense matrix's diagonal goes
+    # through the ||x||^2+||y||^2-2<x,y> cancellation, whose ~1e-15 absolute
+    # d2 error a Matern sqrt amplifies to ~1e-7 — compare at that scale
+    diag = kernel_diag(spec, X1, kp)
+    np.testing.assert_allclose(
+        np.asarray(diag), np.asarray(jnp.diagonal(kernel_matrix(spec, X1, X1, kp))),
+        rtol=1e-6, atol=1e-6)
+
+
+def test_matern_family_approaches_rbf():
+    """Large-nu sanity limit: the Matern family's distance from the RBF
+    shape shrinks monotonically in nu (1/2 -> 3/2 -> 5/2), pointwise over a
+    distance grid."""
+    d2 = jnp.asarray(np.linspace(1e-4, 4.0, 200))
+    from repro.core.kernels_math import kernel_from_sqdist
+    rbf = kernel_from_sqdist("rbf", d2)
+    errs = [float(jnp.max(jnp.abs(kernel_from_sqdist(k, d2) - rbf)))
+            for k in ("matern12", "matern32", "matern52")]
+    assert errs[0] > errs[1] > errs[2], errs
+    assert errs[2] < 0.1  # matern52 already tracks RBF to <0.1 on this grid
+
+
+def test_legacy_gpparams_path_is_bitwise():
+    """(kind, GPParams) still evaluates exactly the pre-algebra formula:
+    outputscale * phi(d2(X/ls)) — bitwise, not just close."""
+    r = np.random.default_rng(0)
+    X1 = jnp.asarray(r.normal(size=(20, 3)), jnp.float32)
+    X2 = jnp.asarray(r.normal(size=(15, 3)), jnp.float32)
+    p = init_params(lengthscale=0.8, outputscale=1.3, noise=0.2)
+    from repro.core.kernels_math import kernel_from_sqdist
+    ls, os_ = softplus(p.raw_lengthscale), softplus(p.raw_outputscale)
+    for kind in ("rbf", "matern32"):
+        old = os_ * kernel_from_sqdist(kind, sq_dist(X1 / ls, X2 / ls))
+        new = kernel_matrix(kind, X1, X2, p)
+        np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
+
+
+def test_kernel_diag_dtype_follows_params_not_inputs():
+    """bf16 inputs must not downcast the fp32 diag pivoted Cholesky uses;
+    a linear leaf's input-dependent diag promotes through the params."""
+    X16 = jnp.asarray(np.random.default_rng(0).normal(size=(8, 2)), jnp.bfloat16)
+    p = init_params(noise=0.1)  # fp32 params
+    assert kernel_diag("matern32", X16, p).dtype == jnp.float32
+    spec = parse_kernel("rbf + 0.5*linear")
+    kp = init_kernel_params(spec)
+    d = kernel_diag(spec, X16, kp)
+    assert d.dtype == jnp.float32
+    # linear diag is input-dependent (non-constant)
+    assert float(jnp.std(d.astype(jnp.float32))) > 0.0
+
+
+def test_init_kernel_params_constrained_values():
+    spec = parse_kernel("0.5*rbf + matern32")
+    kp = init_kernel_params(spec, lengthscale=0.9, noise=0.2)
+    s, rbf_ls, m32_ls = kp.nodes
+    assert np.isclose(float(softplus(s.raw_outputscale)), 0.5, rtol=1e-6)
+    assert np.isclose(float(softplus(rbf_ls.raw_lengthscale)), 0.9, rtol=1e-6)
+    assert np.isclose(float(softplus(m32_ls.raw_lengthscale)), 0.9, rtol=1e-6)
+    assert np.isclose(float(noise_variance(kp, 0.0)), 0.2, rtol=1e-5)
+    assert num_components(spec) == 2
+
+
+def test_param_drift_over_flattened_pytree():
+    spec = parse_kernel("0.5*rbf + matern32")
+    kp = init_kernel_params(spec)
+    assert param_drift(kp, kp) == 0.0
+    # moving ANY node registers; moving only the mean does not
+    moved = kp._replace(nodes=(kp.nodes[0],
+                               kp.nodes[1]._replace(
+                                   raw_lengthscale=kp.nodes[1].raw_lengthscale + 1.0),
+                               kp.nodes[2]))
+    assert param_drift(kp, moved) > 0.1
+    mean_only = kp._replace(raw_mean=kp.raw_mean + 5.0)
+    assert param_drift(kp, mean_only) == 0.0
+    # legacy GPParams keeps its historical behavior
+    p = init_params(noise=0.3)
+    assert param_drift(p, p._replace(raw_mean=p.raw_mean + 5.0)) == 0.0
+    assert param_drift(p, p._replace(raw_noise=p.raw_noise + 1.0)) > 0.1
+
+
+# ---------------------------------------------------------------------------
+# fused Pallas plan + execution
+# ---------------------------------------------------------------------------
+
+
+def test_single_component_takes_exactly_one_fused_pass():
+    """No per-component regression: legacy pairs and bare leaves plan to
+    ONE Pallas pass, nothing else."""
+    p = init_params(noise=0.3)
+    plan = mvm_plan("matern32", p)
+    assert plan.num_fused_passes == 1
+    assert plan.passes[0].components == (("matern32",),)
+    assert plan.linear_terms == () and plan.num_fallback_terms == 0
+
+    spec = parse_kernel("scale(rq)")
+    kp = init_kernel_params(spec)
+    plan = mvm_plan(spec, kp)
+    assert plan.num_fused_passes == 1 and plan.num_fallback_terms == 0
+
+
+def test_scalar_lengthscale_sum_fuses_into_one_pass():
+    """The whole sum kernel costs ONE pass over HBM when every component's
+    lengthscale is shared-scalar; ARD components fall back to their own
+    fused pass; linear terms never enter Pallas at all."""
+    spec = parse_kernel("0.5*rbf + matern32 + scale(rq)")
+    kp = init_kernel_params(spec)
+    plan = mvm_plan(spec, kp)
+    assert plan.num_fused_passes == 1
+    assert plan.passes[0].components == (("rbf",), ("matern32",), ("rq",))
+    assert plan.num_fallback_terms == 0
+
+    # ARD components get their own metric -> their own pass
+    spec = parse_kernel("rbf + matern32")
+    kp_ard = init_kernel_params(spec, ard_dims=3)
+    plan = mvm_plan(spec, kp_ard)
+    assert plan.num_fused_passes == 2
+
+    # pure linear terms are thin matmuls outside Pallas
+    spec = parse_kernel("rbf + 0.5*linear")
+    kp = init_kernel_params(spec)
+    plan = mvm_plan(spec, kp)
+    assert plan.num_fused_passes == 1 and len(plan.linear_terms) == 1
+
+    # linear x stationary products use the dense-slab fallback
+    spec = parse_kernel("rbf*linear")
+    kp = init_kernel_params(spec)
+    plan = mvm_plan(spec, kp)
+    assert plan.num_fused_passes == 0 and plan.num_fallback_terms == 1
+
+
+@pytest.mark.parametrize("expr", [
+    "0.5*rbf + matern32",
+    "0.5*rbf + matern32 + scale(rq)",
+    "rbf*matern52 + 0.3*matern12",
+    "rbf + 0.5*linear",
+    "rbf*linear + matern32",
+])
+def test_fused_multicomponent_matches_dense(expr):
+    """Acceptance: the Pallas (interpret) fused multi-component MVM matches
+    the dense reference within 2e-5 fp32."""
+    spec = parse_kernel(expr)
+    kp = init_kernel_params(spec, lengthscale=0.8, noise=0.2)
+    r = np.random.default_rng(abs(hash(expr)) % 2**31)
+    Xi = jnp.asarray(r.normal(size=(100, 5)), jnp.float32)
+    Xj = jnp.asarray(r.normal(size=(130, 5)), jnp.float32)
+    V = jnp.asarray(r.normal(size=(130, 3)), jnp.float32)
+    out = kmvm_block(spec, Xi, Xj, V, kp, interpret=True)
+    ref = kmvm_ref(spec, Xi, Xj, V, kp)
+    scale = float(jnp.max(jnp.abs(ref))) + 1.0
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5 * scale)
+
+
+@settings(deadline=None, max_examples=10)
+@given(seed=st.integers(0, 2**16))
+def test_fused_random_specs_match_dense(seed):
+    r = np.random.default_rng(seed)
+    spec = random_spec(r)
+    kp = init_kernel_params(spec, lengthscale=float(r.uniform(0.5, 1.2)),
+                            noise=0.2)
+    Xi = jnp.asarray(r.normal(size=(40, 3)), jnp.float32)
+    Xj = jnp.asarray(r.normal(size=(60, 3)), jnp.float32)
+    V = jnp.asarray(r.normal(size=(60, 2)), jnp.float32)
+    out = kmvm_block(spec, Xi, Xj, V, kp, interpret=True)
+    ref = kmvm_ref(spec, Xi, Xj, V, kp)
+    scale = float(jnp.max(jnp.abs(ref))) + 1.0
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=5e-5, atol=5e-5 * scale,
+                               err_msg=spec_expr(spec))
+
+
+def test_sharded_composite_mll_matches_oracle():
+    """The fourth backend: Sum(Scale(rbf), matern32) solves on the sharded
+    engine (1-device mesh, in-process) and tracks the dense-Cholesky oracle
+    on value and the probe-free raw_mean gradient."""
+    from repro.core.distributed import (
+        DistMLLConfig, make_geometry, make_mll_value_and_grad, replicate,
+        shard_vector,
+    )
+    spec = Sum((Scale(Leaf("rbf")), Leaf("matern32")))
+    n, d = 128, 3
+    r = np.random.default_rng(2)
+    X = jnp.asarray(r.normal(size=(n, d)))
+    y = jnp.asarray(np.sin(np.asarray(X) @ r.normal(size=d))
+                    + 0.1 * r.normal(size=n))
+    kp = init_kernel_params(spec, noise=0.3, dtype=jnp.float64)
+    mesh = jax.make_mesh((1,), ("data",))
+    geom = make_geometry(mesh, n, d, mode="1d", row_block=32)
+    cfg = DistMLLConfig(kernel=spec, precond_rank=30, num_probes=64,
+                        max_cg_iters=200, cg_tol=1e-8)
+    vg = make_mll_value_and_grad(mesh, geom, cfg)
+    loss, _, grads = vg(replicate(mesh, X), shard_vector(mesh, geom, y),
+                        replicate(mesh, kp), jax.random.PRNGKey(0))
+    oracle_loss, g_oracle = jax.value_and_grad(
+        lambda p: -dense_mll(spec, X, y, p) / n)(kp)
+    assert abs(float(loss) - float(oracle_loss)) < \
+        2e-2 * abs(float(oracle_loss)) + 1e-3
+    assert abs(float(grads.raw_mean) - float(g_oracle.raw_mean)) < 1e-6
+
+
+def test_ard_composite_operators_agree():
+    """ARD lengthscales per component: dense vs partitioned vs pallas."""
+    from repro.core import OperatorConfig, make_operator
+    spec = parse_kernel("rbf + matern32")
+    kp = init_kernel_params(spec, ard_dims=3, noise=0.3)
+    r = np.random.default_rng(5)
+    X = jnp.asarray(r.normal(size=(64, 3)), jnp.float32)
+    V = jnp.asarray(r.normal(size=(64, 2)), jnp.float32)
+    ref = dense_khat(spec, X, kp) @ V
+    for backend in ("dense", "partitioned", "pallas"):
+        op = make_operator(OperatorConfig(kernel=spec, backend=backend,
+                                          row_block=32, interpret=True), X, kp)
+        np.testing.assert_allclose(np.asarray(op.matvec(V)), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-4, err_msg=backend)
