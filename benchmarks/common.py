@@ -9,6 +9,7 @@ experiments/benchmarks/<name>.csv + .md.
 from __future__ import annotations
 
 import csv
+import json
 import os
 import time
 
@@ -45,8 +46,28 @@ def write_rows(name: str, header: list, rows: list):
         f.write("|" + "---|" * len(header) + "\n")
         for r in rows:
             f.write("| " + " | ".join(
-                f"{v:.4f}" if isinstance(v, float) else str(v)
+                f"{v:.4g}" if isinstance(v, float) else str(v)
                 for v in r) + " |\n")
+    # machine-readable companion: one BENCH_<name>.json per CSV so the
+    # perf trajectory across PRs is diffable/scriptable without parsing
+    # the human-facing tables (records stay keyed by column name)
+    def jsonable(v):
+        # numpy scalars -> Python numbers so trackers never re-parse
+        # strings; anything else non-native falls back to str
+        if isinstance(v, (np.floating, np.integer)):
+            return v.item()
+        return str(v)
+
+    summary = {
+        "bench": name,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "header": list(header),
+        "records": [dict(zip(header, r)) for r in rows],
+    }
+    with open(os.path.join(OUT_DIR, f"BENCH_{name}.json"), "w") as f:
+        json.dump(summary, f, indent=1, default=jsonable)
+        f.write("\n")
     print(f"[bench] wrote {path}")
     return path
 

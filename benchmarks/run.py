@@ -10,8 +10,13 @@ One module per paper table/figure (+ extra ablations):
     ablation_tolerance  Sec 3    CG tolerance train vs predict
     ablation_warmstart  §Warm-start  cold vs warm-started finetune solves
     ablation_kernels    §Kernel algebra  1/2/4-component sums x backends
+    ablation_sparsity   §Sparsity  fill-ratio sweep: blocksparse vs dense
     roofline_report     §Roofline tables from experiments/dryrun/*.json
     serve_latency       §Serving p50/p99/QPS: backend x chunk x batch sweep
+
+Each benchmark writes <name>.csv/.md plus a machine-readable
+BENCH_<name>.json (keyed records) under experiments/benchmarks/, so the
+perf trajectory stays comparable across PRs.
 """
 
 import argparse
@@ -27,10 +32,10 @@ def main():
                     help="single-seed Table 1")
     args = ap.parse_args()
 
-    from . import (ablation_kernels, ablation_tolerance, ablation_warmstart,
-                   fig1_fig5_init, fig2_multidevice, fig3_inducing,
-                   fig4_subset, roofline_report, serve_latency,
-                   table1_accuracy, table2_timing)
+    from . import (ablation_kernels, ablation_sparsity, ablation_tolerance,
+                   ablation_warmstart, fig1_fig5_init, fig2_multidevice,
+                   fig3_inducing, fig4_subset, roofline_report,
+                   serve_latency, table1_accuracy, table2_timing)
 
     benches = {
         "table1_accuracy": (lambda: table1_accuracy.run(
@@ -43,6 +48,7 @@ def main():
         "ablation_tolerance": ablation_tolerance.run,
         "ablation_warmstart": ablation_warmstart.run,
         "ablation_kernels": ablation_kernels.run,
+        "ablation_sparsity": ablation_sparsity.run,
         "roofline_report": roofline_report.run,
         "serve_latency": serve_latency.run,
     }

@@ -1,0 +1,102 @@
+"""Spatial GP regression with a compactly-supported kernel (repro.sparse).
+
+The gp2Scale workload: 2-D spatial data, a `matern32 * wendland2` spec
+whose Wendland taper gives the kernel matrix compact support, and the
+`blocksparse` backend that turns that support into skipped MVM tiles.
+Reports the plan's fill ratio, dense-vs-blocksparse MVM timing on the
+same data, the trained fit, and pruned predictions.
+
+    PYTHONPATH=src python examples/spatial_gp.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    ExactGP, ExactGPConfig, OperatorConfig, init_kernel_params,
+    make_operator, parse_kernel, rmse,
+)
+from repro.sparse import build_plan, spec_support_radius
+from repro.train.gp_trainer import GPTrainConfig, fit_exact_gp
+
+EXPR = "matern32 * wendland2"
+
+
+def make_spatial_field(n, seed=0):
+    """Clustered 2-D sensor field on the unit square: 32 station clusters,
+    a smooth latent surface plus observation noise."""
+    rng = np.random.default_rng(seed)
+    centers = rng.uniform(size=(32, 2))
+    X = centers[rng.integers(0, 32, n)] + 0.03 * rng.normal(size=(n, 2))
+    latent = (np.sin(6.0 * X[:, 0]) * np.cos(4.0 * X[:, 1])
+              + 0.5 * np.sin(9.0 * X[:, 0] * X[:, 1]))
+    y = latent + 0.1 * rng.normal(size=n)
+    return (jnp.asarray(X, jnp.float32), jnp.asarray(y, jnp.float32),
+            jnp.asarray(latent, jnp.float32))
+
+
+def main():
+    n = 2048
+    X, y, latent = make_spatial_field(n)
+    ntr = int(0.8 * n)
+    Xtr, ytr = X[:ntr], y[:ntr]
+    Xte, lte = X[ntr:], latent[ntr:]
+    print(f"spatial field: n={ntr} train / {n - ntr} test, d=2")
+
+    spec = parse_kernel(EXPR)
+    params = init_kernel_params(spec, noise=0.3, radius=0.15)
+    print(f"kernel: {EXPR}, support radius "
+          f"{float(spec_support_radius(spec, params)):.3f}")
+
+    # --- the plan, and what it buys on a raw MVM -------------------------
+    plan = build_plan(spec, Xtr, params, tile=64)
+    print(f"plan: {plan.num_tiles} tiles x {plan.tile} points, "
+          f"{plan.num_pairs} active pairs -> fill={plan.fill:.3f}")
+
+    V = jnp.asarray(np.random.default_rng(1).normal(size=(ntr, 8)),
+                    jnp.float32)
+    ops = {
+        "partitioned": make_operator(
+            OperatorConfig(kernel=spec, backend="partitioned",
+                           row_block=64), Xtr, params),
+        "blocksparse": make_operator(
+            OperatorConfig(kernel=spec, backend="blocksparse", plan=plan),
+            Xtr, params),
+    }
+    times = {}
+    for name, op in ops.items():
+        mvm = jax.jit(op.matvec)
+        jax.block_until_ready(mvm(V))  # compile
+        t0 = time.perf_counter()
+        for _ in range(3):
+            jax.block_until_ready(mvm(V))
+        times[name] = (time.perf_counter() - t0) / 3 * 1e3
+    err = float(jnp.max(jnp.abs(
+        ops["blocksparse"].matvec(V) - ops["partitioned"].matvec(V))))
+    print(f"K_hat @ V (t=8): dense-slab {times['partitioned']:.1f} ms, "
+          f"pruned {times['blocksparse']:.1f} ms "
+          f"({times['partitioned'] / times['blocksparse']:.1f}x at "
+          f"{plan.fill:.0%} fill), max dev {err:.1e}")
+
+    # --- train on the blocksparse backend (drift-checked replanning) ----
+    gp = ExactGP(ExactGPConfig(kernel=spec, precond_rank=50, row_block=64,
+                               train_max_cg_iters=50, lanczos_rank=100,
+                               backend="blocksparse"))
+    res = fit_exact_gp(gp, Xtr, ytr, method="adam",
+                       cfg=GPTrainConfig(plain_adam_steps=5, seed=0),
+                       verbose=True)
+    print(f"trained {len(res.loss_trace)} steps in {res.seconds:.1f}s "
+          f"(solve modes: {[t['mode'] for t in res.telemetry]})")
+
+    # --- predict (cross-covariance tiles pruned per query chunk) ---------
+    cache = gp.precompute(Xtr, ytr, res.params, jax.random.PRNGKey(0))
+    mean, var = gp.predict(Xtr, Xte, res.params, cache)
+    print(f"test rmse vs latent surface: {float(rmse(mean, lte)):.4f} "
+          f"(mean predictive sd {float(jnp.mean(jnp.sqrt(var))):.3f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -33,6 +33,7 @@ from .kernels_math import (
     STATIONARY_KINDS,
     Scale,
     Sum,
+    TAPER_KINDS,
     as_spec,
     canonicalize_kernel,
     dense_khat,
@@ -91,7 +92,7 @@ from .dkl import DKLModel, make_mlp_dkl
 __all__ = [
     "DenseOperator", "ExactGP", "ExactGPConfig", "GPParams", "KERNEL_KINDS",
     "KernelParams", "LEAF_KINDS", "Leaf", "Product", "STATIONARY_KINDS",
-    "Scale", "Sum", "as_spec", "canonicalize_kernel", "init_kernel_params", "init_params_for",
+    "Scale", "Sum", "TAPER_KINDS", "as_spec", "canonicalize_kernel", "init_kernel_params", "init_params_for",
     "normalize_components", "num_components", "parse_kernel",
     "params_skeleton", "spec_expr", "spec_from_json", "spec_to_json",
     "KernelOperator", "MLLConfig", "OperatorConfig", "PCGResult",

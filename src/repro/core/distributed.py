@@ -339,6 +339,17 @@ class ShardedOperator(KernelOperator):
         if config.geom is None:
             raise ValueError("backend='sharded' requires OperatorConfig.geom")
         self.geom: DistGeometry = config.geom
+        if config.inner_backend == "blocksparse":
+            # the mask-aware composition replaces the per-slab path: each
+            # row shard owns a contiguous range of the plan's row tiles
+            # (pre-sorted data, 1-D layout — validated here, at trace time)
+            from repro.sparse import validate_dist_plan
+
+            if config.plan is None:
+                raise ValueError(
+                    "inner_backend='blocksparse' requires a pre-built "
+                    "OperatorConfig.plan (assume_sorted=True)")
+            validate_dist_plan(self.geom, config.plan)
 
     @property
     def shape(self) -> tuple[int, int]:
@@ -355,6 +366,16 @@ class ShardedOperator(KernelOperator):
             self.config.inner_backend, self.config, self.dtype)
 
     def matvec(self, V_local: jax.Array) -> jax.Array:
+        if self.config.inner_backend == "blocksparse":
+            from repro.sparse import dist_blocksparse_kmvm
+            from .operators import _compute_dtype_of
+
+            return dist_blocksparse_kmvm(
+                self.geom, self.config.kernel, self.X, V_local, self.params,
+                self.config.plan,
+                add_noise=self.config.add_noise,
+                noise_floor=self.config.noise_floor,
+                compute_dtype=_compute_dtype_of(self.config, self.dtype))
         return dist_kmvm(
             self.geom, self.config.kernel, self.X, V_local, self.params,
             add_noise=self.config.add_noise,
@@ -472,6 +493,8 @@ class DistMLLConfig(NamedTuple):
     pcg_method: str = "standard"
     backend: str = "partitioned"          # inner slab backend per tile
     compute_dtype: str | None = None      # "bfloat16" = MXU fast path
+    plan: object | None = None            # SparsePlan (backend="blocksparse":
+                                          # pre-sorted data, 1-D mode only)
 
     def operator_config(self, geom: DistGeometry) -> OperatorConfig:
         return OperatorConfig(
@@ -483,6 +506,7 @@ class DistMLLConfig(NamedTuple):
             compute_dtype=self.compute_dtype,
             geom=geom,
             inner_backend=self.backend,
+            plan=self.plan,
         )
 
 

@@ -55,6 +55,9 @@ class ExactGPConfig(NamedTuple):
     pcg_method: str = "standard"      # "pipelined" = beyond-paper variant
     backend: str = "partitioned"      # KernelOperator registry key
     compute_dtype: str | None = None  # "bfloat16" = MXU fast path
+    plan: object | None = None        # SparsePlan (backend="blocksparse");
+                                      # the trainer builds/replans one when
+                                      # left None (repro.train.gp_trainer)
 
     def mll_config(self) -> MLLConfig:
         return MLLConfig(
@@ -68,6 +71,7 @@ class ExactGPConfig(NamedTuple):
             pcg_method=self.pcg_method,
             backend=self.backend,
             compute_dtype=self.compute_dtype,
+            plan=self.plan,
         )
 
     def operator_config(self) -> OperatorConfig:

@@ -14,7 +14,8 @@ Two parameterizations coexist:
 
 * **Composable** — a static, hashable :class:`KernelSpec` tree (leaves
   ``rbf`` / ``matern12`` / ``matern32`` / ``matern52`` / ``rq`` /
-  ``linear``; combinators :class:`Sum`, :class:`Product`, :class:`Scale`)
+  ``linear`` / the compactly-supported ``wendland2`` / ``wendland4``
+  tapers; combinators :class:`Sum`, :class:`Product`, :class:`Scale`)
   paired with a matching :class:`KernelParams` pytree of per-node raw
   hyperparameters. The spec is structure (jit-static, serializable); the
   params are the differentiable leaves the optimizer moves.
@@ -39,8 +40,18 @@ import jax.numpy as jnp
 
 # Legacy stationary set: the kinds a plain (kind, GPParams) pair may use.
 KERNEL_KINDS = ("rbf", "matern12", "matern32", "matern52")
+# Compactly-supported Wendland tapers: k(x, z) = phi(||x - z|| / R) with
+# phi IDENTICALLY ZERO at r >= 1, so Product(stationary, wendland*) has
+# compact support R in input space — the hook `repro.sparse` turns into
+# skipped MVM tiles. The learnable support radius R rides the node's
+# raw_lengthscale (StationaryParams), so every consumer (init, skeletons,
+# the fused Pallas pass's lengthscale-ratio trick, drift tracking) treats
+# a taper exactly like any other scalar-lengthscale stationary leaf.
+# PSD for input dimension <= 3 (Wendland 1995): wendland2 is C^2 at the
+# origin, wendland4 is C^4.
+TAPER_KINDS = ("wendland2", "wendland4")
 # d2-shaped leaves (evaluable from squared scaled distances alone + extras).
-STATIONARY_KINDS = KERNEL_KINDS + ("rq",)
+STATIONARY_KINDS = KERNEL_KINDS + ("rq",) + TAPER_KINDS
 # every leaf the algebra knows.
 LEAF_KINDS = STATIONARY_KINDS + ("linear",)
 
@@ -364,7 +375,8 @@ def init_params(
     )
 
 
-def _init_node(node, ard_dims, lengthscale_init, alpha_init, dtype):
+def _init_node(node, ard_dims, lengthscale_init, alpha_init, radius_init,
+               dtype):
     ls_shape = () if ard_dims is None else (ard_dims,)
     raw_ls = jnp.full(ls_shape, inv_softplus(lengthscale_init), dtype)
     if isinstance(node, Scale):
@@ -373,6 +385,12 @@ def _init_node(node, ard_dims, lengthscale_init, alpha_init, dtype):
         return RQParams(raw_ls, jnp.asarray(inv_softplus(alpha_init), dtype))
     if node.kind == "linear":
         return LinearParams(raw_ls)
+    if node.kind in TAPER_KINDS:
+        # the support radius is ALWAYS a scalar (even under ARD: a per-dim
+        # radius would make the support region anisotropic and break the
+        # Euclidean box-distance bound the sparsity planner relies on)
+        r0 = lengthscale_init if radius_init is None else radius_init
+        return StationaryParams(jnp.asarray(inv_softplus(r0), dtype))
     return StationaryParams(raw_ls)
 
 
@@ -381,6 +399,7 @@ def init_kernel_params(
     ard_dims: int | None = None,
     lengthscale: float = DEFAULT_LENGTHSCALE,
     alpha: float = DEFAULT_ALPHA,
+    radius: float | None = None,
     noise: float = 0.1,
     mean: float = 0.0,
     dtype=jnp.float32,
@@ -388,9 +407,12 @@ def init_kernel_params(
     """KernelParams matching `spec`, constrained values at the given floats.
 
     Every lengthscale-like node gets the same init (shared or per-dim ARD);
-    Scale nodes start at their spec-recorded `init` (parser weights)."""
+    Scale nodes start at their spec-recorded `init` (parser weights).
+    `radius` overrides the init of Wendland taper support radii only, so a
+    Product(stationary, taper) can start with a support radius decoupled
+    from the stationary lengthscale (None = use `lengthscale`)."""
     spec = as_spec(spec)
-    nodes = tuple(_init_node(n, ard_dims, lengthscale, alpha, dtype)
+    nodes = tuple(_init_node(n, ard_dims, lengthscale, alpha, radius, dtype)
                   for n in spec_param_nodes(spec))
     return KernelParams(
         nodes=nodes,
@@ -546,6 +568,23 @@ def _k_matern52(r):
     return (1.0 + a + (a * a) / 3.0) * jnp.exp(-a)
 
 
+def _k_wendland2(r):
+    """Wendland C2 taper: (1 - r)_+^4 (4r + 1). EXACTLY 0.0 at r >= 1 (the
+    jnp.maximum clamp, not underflow), which is what makes block pruning in
+    `repro.sparse` bitwise-exact; phi(0) = 1, and dphi/dr = 0 at the support
+    boundary, so gradients of pruned tiles are exactly zero too."""
+    b = jnp.maximum(1.0 - r, 0.0)
+    b2 = b * b
+    return b2 * b2 * (4.0 * r + 1.0)
+
+
+def _k_wendland4(r):
+    """Wendland C4 taper: (1 - r)_+^6 (35 r^2 + 18 r + 3) / 3."""
+    b = jnp.maximum(1.0 - r, 0.0)
+    b3 = b * b * b
+    return b3 * b3 * ((35.0 * r * r + 18.0 * r + 3.0) / 3.0)
+
+
 def rq_from_sqdist(d2, alpha):
     """Rational quadratic (1 + d2 / 2a)^-a via a stable exp(log1p) form."""
     return jnp.exp(-alpha * jnp.log1p(d2 / (2.0 * alpha)))
@@ -569,6 +608,10 @@ def kernel_from_sqdist(kind: str, d2: jax.Array, alpha=None) -> jax.Array:
         return _k_matern32(r)
     if kind == "matern52":
         return _k_matern52(r)
+    if kind == "wendland2":
+        return _k_wendland2(r)
+    if kind == "wendland4":
+        return _k_wendland4(r)
     raise ValueError(
         f"unknown kernel kind: {kind!r} (expected one of {STATIONARY_KINDS})")
 

@@ -41,7 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .kernels_math import constant_mean, dense_khat
-from .operators import OperatorConfig, make_operator
+from .operators import OperatorConfig, backward_backend_for, make_operator
 from .pcg import pcg
 from .slq import slq_logdet_correction
 
@@ -66,6 +66,7 @@ class MLLConfig(NamedTuple):
     pcg_method: str = "standard"
     backend: str = "partitioned"          # operator registry key
     compute_dtype: str | None = None      # "bfloat16" = MXU fast path
+    plan: object | None = None            # SparsePlan (backend="blocksparse")
 
     def operator_config(self) -> OperatorConfig:
         return OperatorConfig(
@@ -75,6 +76,7 @@ class MLLConfig(NamedTuple):
             add_noise=True,
             noise_floor=self.noise_floor,
             compute_dtype=self.compute_dtype,
+            plan=self.plan,
         )
 
 
@@ -175,11 +177,13 @@ def operator_mll_backward(cfg: MLLConfig, X, params, u_y, U, pinv_z, g_value):
     jax.grad. Bitwise-identical to the historical `_mll_bwd` body.
     """
     # the backward surface is operator-owned too, but always full precision;
-    # backend is pinned to "partitioned": quad_form_grads is identical for
-    # every single-device backend (base-class blockwise partials — NOT AD
-    # through the forward, see partitioned.quad_form_partials for why)
+    # the backend is re-resolved through `backward_backend_for`: every dense
+    # single-device backend shares the "partitioned" blockwise partials
+    # (base-class quad_form_grads — NOT AD through the forward, see
+    # partitioned.quad_form_partials for why), while blocksparse keeps its
+    # own fill-proportional gradient surface
     bwd_cfg = cfg.operator_config()._replace(
-        compute_dtype=None, backend="partitioned")
+        compute_dtype=None, backend=backward_backend_for(cfg.backend))
 
     # d(-0.5[-u_y^T Khat u_y + (1/t) sum_i u_i^T Khat P^{-1}z_i])/d(theta, X)
     g_params, g_X = operator_mll_quad_grads(

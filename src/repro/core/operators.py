@@ -34,11 +34,19 @@ Implementations register under a string name (mirroring
 ``repro.models.registry``) and are selected by ``make_operator``:
 
     dense         materialize K_hat once; O(n^2) memory reference/oracle
+                  (fastest at small n, the test oracle everywhere)
     partitioned   row-block slabs, checkpointed backward — the paper's
                   O(n)-memory path (`repro.core.partitioned`)
     pallas        partitioned outer loop + fused Pallas slab MVM
                   (`repro.kernels.ops.kmvm_block`): the slab never reaches
-                  HBM at all
+                  HBM at all — the TPU hot path for dense kernels
+    blocksparse   distance-pruned MVMs for compactly-supported specs
+                  (`stationary * wendland2` etc.): a Morton-ordered static
+                  block mask skips tile pairs beyond the support radius,
+                  so cost scales with the FILL RATIO instead of n^2
+                  (`repro.sparse`; registered lazily). Non-compact specs
+                  plan to the all-active mask and match the other
+                  backends, so it is safe to select unconditionally.
     sharded       shard_map over the kernel row axis on a TPU mesh,
                   composing any inner backend (`repro.core.distributed`;
                   registered lazily so single-device imports stay light)
@@ -46,8 +54,9 @@ Implementations register under a string name (mirroring
     op = make_operator(OperatorConfig(backend="pallas"), X, params)
     res = pcg(op, B, op.preconditioner(100).solve)
 
-Adding a backend (sparse/compactly-supported kernels, a new accelerator,
-a multi-host mesh) is one registered class; no consumer changes.
+Adding a backend (a new accelerator, a multi-host mesh) is one registered
+class; no consumer changes. See README.md §Module map / §Sparse kernels
+for which backend to pick when.
 
 Mixed precision
 ---------------
@@ -98,9 +107,15 @@ class OperatorConfig(NamedTuple):
                    "bfloat16" = bf16 operands + fp32 accumulation in the
                    two large matmuls (the speed headline on MXU hardware).
     interpret:     Pallas interpret-mode override (None = auto: interpret
-                   off TPU). Ignored by non-Pallas backends.
+                   off TPU). Ignored by non-Pallas backends; for the
+                   blocksparse backend True forces the gathered-grid
+                   Pallas kernel (interpret mode) off-TPU — the test hook.
     geom:          DistGeometry for the sharded backend (None otherwise).
     inner_backend: slab backend composed by the sharded operator.
+    plan:          repro.sparse.SparsePlan for the blocksparse backend
+                   (content-hashed, so configs stay jit-static). None lets
+                   the operator build one at construction — but only with
+                   concrete X; under jit thread a pre-built plan here.
     """
 
     kernel: str = "matern32"
@@ -112,6 +127,7 @@ class OperatorConfig(NamedTuple):
     interpret: bool | None = None
     geom: object | None = None
     inner_backend: str = "partitioned"
+    plan: object | None = None
 
 
 _REGISTRY: dict[str, type] = {}
@@ -129,21 +145,24 @@ def register_operator(name: str) -> Callable[[type], type]:
 
 
 def operator_backends() -> tuple[str, ...]:
-    """Registered backend names (triggers the lazy sharded registration)."""
-    _ensure_sharded_registered()
+    """Registered backend names (triggers the lazy registrations)."""
+    _ensure_lazy_registered()
     return tuple(sorted(_REGISTRY))
 
 
-def _ensure_sharded_registered() -> None:
+def _ensure_lazy_registered() -> None:
     if "sharded" not in _REGISTRY:
         # distributed.py registers ShardedOperator on import; kept lazy so
         # single-device users never pay for shard_map machinery.
         from . import distributed  # noqa: F401
+    if "blocksparse" not in _REGISTRY:
+        # likewise: repro.sparse registers BlockSparseOperator on import
+        from repro.sparse import blocksparse  # noqa: F401
 
 
 def _resolve_backend(name: str) -> type:
     if name not in _REGISTRY:
-        _ensure_sharded_registered()
+        _ensure_lazy_registered()
     try:
         return _REGISTRY[name]
     except KeyError:
@@ -240,6 +259,11 @@ class KernelOperator:
     """
 
     backend_name = "abstract"
+    # the backend the MLL Eq. 2 backward routes quad_form_grads through:
+    # "partitioned" (the base-class blockwise partials) is identical for
+    # every dense single-device backend; a backend with its own bounded-
+    # memory gradient surface (blocksparse) overrides this with its name
+    grad_backend = "partitioned"
 
     def __init__(self, config: OperatorConfig, X: jax.Array, params):
         # params: GPParams (legacy single-kernel) or KernelParams (algebra)
@@ -437,3 +461,9 @@ def slab_block_fn_for(backend: str, config: OperatorConfig,
     """Resolve a backend's per-slab MVM through the registry — the single
     dispatch point for operators that compose an inner backend (sharded)."""
     return _resolve_backend(backend).slab_block_fn(config, operand_dtype)
+
+
+def backward_backend_for(backend: str) -> str:
+    """The backend the MLL backward contracts Eq. 2 through (see
+    `KernelOperator.grad_backend`)."""
+    return _resolve_backend(backend).grad_backend

@@ -44,8 +44,11 @@ def main():
                          "'0.5*rbf + matern32' or 'scale(rq)*linear' "
                          "(see repro.core.kernels_math.parse_kernel)")
     ap.add_argument("--gp-backend", default="partitioned",
-                    choices=("partitioned", "pallas"),
-                    help="inner KernelOperator slab backend per device tile")
+                    choices=("partitioned", "pallas", "blocksparse"),
+                    help="inner KernelOperator backend per device tile; "
+                         "blocksparse = distance-pruned MVMs for "
+                         "compactly-supported specs (forces --gp-mode 1d, "
+                         "Morton-sorts the data; see repro.sparse)")
     ap.add_argument("--gp-dtype", default="float32",
                     choices=("float32", "bfloat16"),
                     help="operator compute dtype (bf16 = MXU fast path)")
@@ -107,10 +110,7 @@ def _train_gp(args):
 
     mesh = make_host_mesh(data=args.data, model=args.model)
     s = make_regression_dataset("houseelectric", max_points=args.gp_n * 3)
-    n = (s.X_train.shape[0] // mesh.devices.size) * mesh.devices.size
-    X = jnp.asarray(s.X_train[:n], jnp.float32)
-    y = jnp.asarray(s.y_train[:n], jnp.float32)
-    geom = make_geometry(mesh, n, X.shape[1], mode=args.gp_mode)
+    gp_mode = args.gp_mode
     gp_dtype = None if args.gp_dtype == "float32" else args.gp_dtype
     # legacy stationary kinds train the flat GPParams (the paper's setup);
     # any other expression parses to a KernelSpec + per-node KernelParams
@@ -119,20 +119,68 @@ def _train_gp(args):
         else parse_kernel(args.gp_kernel)
     params = init_params_for(kernel, noise=0.3, dtype=jnp.float32)
     kernel_desc = kernel if isinstance(kernel, str) else spec_expr(kernel)
+
+    plan = None
+    if args.gp_backend == "blocksparse":
+        # the distance-pruned engine: rows sharded (1-D, paper-faithful),
+        # data Morton-sorted so contiguous shards own contiguous tiles,
+        # n truncated so every shard holds whole tiles
+        from repro.sparse import build_plan, morton_order
+
+        if gp_mode != "1d":
+            print("[train-gp] blocksparse: forcing --gp-mode 1d "
+                  "(row shards own their mask slices)")
+            gp_mode = "1d"
+        tile = 256
+        n = (s.X_train.shape[0] // (mesh.devices.size * tile)) \
+            * mesh.devices.size * tile
+        if n == 0:
+            tile = 8
+            n = (s.X_train.shape[0] // (mesh.devices.size * tile)) \
+                * mesh.devices.size * tile
+        Xh = s.X_train[:n]
+        perm = morton_order(Xh)
+        X = jnp.asarray(Xh[perm], jnp.float32)
+        y = jnp.asarray(s.y_train[:n][perm], jnp.float32)
+        plan = build_plan(kernel, X, params, tile=tile,
+                          margin=args.gp_drift_threshold,
+                          assume_sorted=True)
+        print(f"[train-gp] sparsity plan: {plan}")
+    else:
+        n = (s.X_train.shape[0] // mesh.devices.size) * mesh.devices.size
+        X = jnp.asarray(s.X_train[:n], jnp.float32)
+        y = jnp.asarray(s.y_train[:n], jnp.float32)
+    geom = make_geometry(mesh, n, X.shape[1], mode=gp_mode)
     cfg = DistMLLConfig(kernel=kernel, precond_rank=100, num_probes=8,
                         max_cg_iters=20, cg_tol=1.0, backend=args.gp_backend,
-                        compute_dtype=gp_dtype)
+                        compute_dtype=gp_dtype, plan=plan)
     warm = WarmStartConfig(enabled=args.gp_refresh_every > 0,
                            refresh_every=max(args.gp_refresh_every, 1),
                            drift_threshold=args.gp_drift_threshold)
     engine = DistWarmStartEngine(mesh, geom, cfg, warm)
     state = adam_init(params)
+    telemetry_done: list = []  # closed-out engines' telemetry (replans)
     Xr, ys = replicate(mesh, X), shard_vector(mesh, geom, y)
-    print(f"[train-gp] n={n} kernel={kernel_desc} mode={args.gp_mode} "
+    print(f"[train-gp] n={n} kernel={kernel_desc} mode={gp_mode} "
           f"backend={args.gp_backend} "
           f"dtype={args.gp_dtype} refresh_every={args.gp_refresh_every} "
           f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
     for step_i in range(args.steps):
+        if plan is not None:
+            from repro.sparse import build_plan, needs_replan
+
+            replan, _drift = needs_replan(plan, params,
+                                          args.gp_drift_threshold,
+                                          kernel=kernel)
+            if replan:
+                plan = build_plan(kernel, X, params, tile=plan.tile,
+                                  margin=args.gp_drift_threshold,
+                                  assume_sorted=True)
+                cfg = cfg._replace(plan=plan)
+                telemetry_done.extend(engine.telemetry)
+                engine = DistWarmStartEngine(mesh, geom, cfg, warm)
+                print(f"[train-gp] step {step_i}: replanned sparsity "
+                      f"(drift={_drift:.3f}, fill={plan.fill:.3f})")
         loss, aux, grads = engine.step(Xr, ys, params,
                                        jax.random.PRNGKey(step_i))
         params, state = adam_update(params, grads, state, 0.1)
@@ -140,8 +188,9 @@ def _train_gp(args):
         print(f"[train-gp] step {step_i}: nll/n={float(loss):.4f} "
               f"solve={t['mode']} cg_iters={t['cg_iters']} "
               f"drift={t['drift']:.3f} dt={t['seconds']:.2f}s")
-    total = sum(t["cg_iters"] for t in engine.telemetry)
-    refreshes = sum(t["refreshed"] for t in engine.telemetry)
+    telemetry_done.extend(engine.telemetry)
+    total = sum(t["cg_iters"] for t in telemetry_done)
+    refreshes = sum(t["refreshed"] for t in telemetry_done)
     print(f"[train-gp] solver telemetry: total_cg_iters={total} "
           f"precond_refreshes={refreshes} steps={args.steps}")
 

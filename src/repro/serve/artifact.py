@@ -50,7 +50,12 @@ from repro.train.checkpoint import load_checkpoint, save_checkpoint
 # version history:
 #   1 — flat GPParams only (pre kernel-algebra)
 #   2 — composable kernels: the manifest records the KernelSpec tree and
-#       `params` may be a per-node KernelParams pytree
+#       `params` may be a per-node KernelParams pytree. With the sparse
+#       subsystem the v2 manifest additionally records the sparsity plan
+#       (`meta["sparse_plan"]`: tile / margin / fill / content digest) for
+#       blocksparse-backed artifacts; the plan itself is deterministic
+#       from (kernel, X, params) and is rebuilt — and digest-verified —
+#       at load time rather than serialized.
 ARTIFACT_VERSION = 2
 _STEP = 0  # artifacts are single-snapshot checkpoints
 
@@ -168,6 +173,17 @@ def save_artifact(directory: str, artifact: PosteriorArtifact) -> str:
     meta["artifact_version"] = ARTIFACT_VERSION
     cfg = artifact.config._asdict()
     cfg.pop("geom", None)  # mesh geometry is a runtime choice, not state
+    plan = cfg.pop("plan", None)
+    if plan is not None:
+        # record what the plan WAS (enough to rebuild it bit-identically
+        # at load and to track the fill trajectory); arrays stay out of
+        # the manifest
+        meta["sparse_plan"] = {
+            "tile": plan.tile, "margin": plan.margin,
+            "assume_sorted": bool((plan.perm[:-1] <= plan.perm[1:]).all()),
+            "fill": plan.fill, "support": plan.support,
+            "num_pairs": plan.num_pairs, "digest": plan.digest,
+        }
     if not isinstance(cfg["kernel"], str):
         # KernelSpec trees serialize structurally (JSON-able, round-trips
         # through spec_from_json at load)
@@ -219,8 +235,26 @@ def load_artifact(directory: str) -> PosteriorArtifact:
     tree = jax.tree.map(jnp.asarray, tree)
     cfg = dict(meta["operator_config"])
     cfg["geom"] = None
+    cfg["plan"] = None
     if isinstance(cfg["kernel"], dict):
         cfg["kernel"] = spec_from_json(cfg["kernel"]["__kernel_spec__"])
+    if meta.get("sparse_plan") is not None:
+        # the plan is a pure function of (kernel, X, params): rebuild it
+        # and verify the content digest recorded at save time — a mismatch
+        # means the arrays and the manifest disagree
+        from repro.sparse import build_plan
+
+        sp = meta["sparse_plan"]
+        plan = build_plan(cfg["kernel"], tree["X"], tree["params"],
+                          tile=int(sp["tile"]), margin=float(sp["margin"]),
+                          assume_sorted=bool(sp.get("assume_sorted", False)))
+        if plan.digest != sp["digest"]:
+            raise ValueError(
+                f"sparsity plan rebuilt from {directory} does not match "
+                f"the manifest digest ({plan.digest[:12]} != "
+                f"{sp['digest'][:12]}): artifact arrays and manifest "
+                f"disagree")
+        cfg["plan"] = plan
     config = OperatorConfig(**cfg)
     return PosteriorArtifact(
         config=config, params=tree["params"], X=tree["X"],

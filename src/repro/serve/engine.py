@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.operators import make_operator
 from repro.core.partitioned import map_row_chunks
@@ -52,13 +53,19 @@ class PredictionEngine:
       chunk_size: fixed test-set chunk (rows per launch). Prefer a multiple
         of 128 to keep MXU-aligned tiles on the Pallas backend.
       include_noise: add sigma^2 to returned variances (predictive vs latent).
+      sort_queries: Morton-sort each request batch before chunking (results
+        come back in request order). Defaults on for a compactly-supported
+        blocksparse backend, where it makes chunks spatially local so the
+        operator's runtime cross-covariance tile pruning actually bites;
+        off otherwise (sorting is pure overhead for dense backends).
     """
 
     def __init__(self, artifact: PosteriorArtifact, *,
                  backend: str | None = None,
                  compute_dtype: str | None = _KEEP,
                  chunk_size: int = 1024,
-                 include_noise: bool = True):
+                 include_noise: bool = True,
+                 sort_queries: bool | None = None):
         config = artifact.config._replace(geom=None)
         if backend is not None:
             config = config._replace(backend=backend)
@@ -70,6 +77,10 @@ class PredictionEngine:
         self.include_noise = include_noise
         self.op = make_operator(config, artifact.X, artifact.params)
         self._cache = artifact.cache()
+        if sort_queries is None:
+            plan = getattr(self.op, "plan", None)
+            sort_queries = plan is not None and plan.compact
+        self.sort_queries = bool(sort_queries)
         # launch counters (exported by the latency benchmark / CLI)
         self.chunks_run = 0
         self.rows_served = 0
@@ -103,7 +114,19 @@ class PredictionEngine:
         if Xstar.ndim == 1:
             Xstar = Xstar[None, :]
         m = Xstar.shape[0]
+        order = None
+        if self.sort_queries and m > 1:
+            # spatially local chunks let the blocksparse operator skip
+            # cross-covariance tiles; results return in request order
+            from repro.sparse import morton_order
+
+            order = morton_order(np.asarray(Xstar))
+            Xstar = Xstar[jnp.asarray(order)]
         out = map_row_chunks(self._predict_chunk, Xstar, self.chunk_size)
+        if order is not None:
+            inv = np.empty_like(order)
+            inv[order] = np.arange(m, dtype=order.dtype)
+            out = jax.tree.map(lambda a: a[jnp.asarray(inv)], out)
         self.chunks_run += -(-max(m, 1) // self.chunk_size)
         self.rows_served += m
         return out

@@ -1,0 +1,50 @@
+"""repro.sparse — compactly-supported kernels with distance-pruned MVMs.
+
+The fill ratio, not n^2, becomes the MVM cost (the gp2Scale recipe,
+Noack et al.) once the kernel algebra's Wendland taper leaves give the
+spec compact support. Layering:
+
+    plan         Morton reordering, per-tile bounding boxes, the static
+                 block mask + active-pair list, drift-triggered replanning
+    blocksparse  the "blocksparse" KernelOperator backend (masked-
+                 partitioned off-TPU, Pallas gathered grid on TPU) +
+                 the sharded 1-D composition
+    kmvm_sparse  the Pallas gathered-grid kernel itself
+
+Typical use:
+
+    from repro.sparse import build_plan
+    plan = build_plan("matern32 * wendland2", X, params, tile=256)
+    cfg = MLLConfig(kernel="matern32 * wendland2",
+                    backend="blocksparse", plan=plan)
+"""
+
+from .plan import (
+    SparsePlan,
+    build_plan,
+    morton_order,
+    needs_replan,
+    plan_is_safe,
+    spec_support_radius,
+)
+from .blocksparse import (
+    BlockSparseOperator,
+    dist_blocksparse_kmvm,
+    masked_kmvm,
+    sparse_quad_form_partials,
+    validate_dist_plan,
+)
+
+__all__ = [
+    "BlockSparseOperator",
+    "SparsePlan",
+    "build_plan",
+    "dist_blocksparse_kmvm",
+    "masked_kmvm",
+    "morton_order",
+    "needs_replan",
+    "plan_is_safe",
+    "sparse_quad_form_partials",
+    "spec_support_radius",
+    "validate_dist_plan",
+]

@@ -1,0 +1,272 @@
+"""Sparsity planner: kernel compact support -> a static block mask.
+
+The gp2Scale observation (Noack et al.): once the kernel is compactly
+supported — here via the Wendland taper leaves of the kernel algebra,
+``Product(stationary, wendland2)`` — the kernel matrix is block-sparse
+under ANY ordering that clusters nearby points, and the MVM cost drops
+from n^2 to fill * n^2. This module produces the static plan the
+``blocksparse`` operator backend executes:
+
+  1. reorder points along a Morton (z-order) curve so spatial neighbors
+     land in the same tile (`morton_order`);
+  2. cut the reordered points into fixed `tile`-row tiles and record each
+     tile's bounding box;
+  3. lower-bound every inter-tile distance by the box-to-box distance —
+     a pair of tiles farther apart than the spec's support radius holds
+     EXACTLY ZERO kernel entries (the Wendland clamp, not a threshold),
+     so dropping it is bitwise-exact;
+  4. emit the active-pair index list (Pallas gathered grid) and its
+     row-grouped form (the masked-partitioned fallback).
+
+The mask is STATIC (jit-friendly: the plan hashes by content digest and
+rides inside OperatorConfig/MLLConfig), so a margin guards it against the
+support radius moving during training: the plan is built at
+``support * (1 + margin)`` and `needs_replan` — riding
+`repro.train.solver_state.param_drift`, the warm-start engine's drift
+machinery — fires before the radius can outgrow it. Specs with no taper
+factor in some additive term have unbounded support and plan to the
+all-active mask (every backend consumer stays correct, nothing is
+pruned).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import math
+
+import jax
+import numpy as np
+
+from repro.core.kernels_math import (
+    TAPER_KINDS,
+    canonicalize_kernel,
+    normalize_components,
+    softplus,
+)
+
+
+def morton_order(X, bits_total: int = 30) -> np.ndarray:
+    """Permutation sorting rows of X along a Morton (z-order) curve.
+
+    Coordinates are quantized to `bits_total // d` bits over the data's
+    bounding box and bit-interleaved; the stable argsort makes the order
+    (and therefore every downstream plan digest) deterministic.
+    """
+    X = np.asarray(X, np.float64)
+    n, d = X.shape
+    b = max(1, bits_total // d)
+    lo, hi = X.min(axis=0), X.max(axis=0)
+    span = np.where(hi > lo, hi - lo, 1.0)
+    q = np.clip((X - lo) / span * (2**b - 1), 0, 2**b - 1).astype(np.uint64)
+    code = np.zeros(n, np.uint64)
+    for bit in range(b):
+        for j in range(d):
+            code |= ((q[:, j] >> np.uint64(bit)) & np.uint64(1)) << \
+                np.uint64(bit * d + j)
+    return np.argsort(code, kind="stable").astype(np.int32)
+
+
+def spec_support_radius(kernel, params):
+    """Compact-support radius of a spec in INPUT space (traced scalar).
+
+    Per additive component, the support is the smallest Wendland radius
+    among its factors (a product is zero wherever any factor is); a
+    component with no taper factor is unbounded. The spec's support is the
+    max over components. Returns jnp/np inf when any component is
+    unbounded — callers treat that as "plan all-active".
+    """
+    import jax.numpy as jnp
+
+    spec, kp = canonicalize_kernel(kernel, params)
+    sup = jnp.zeros(())
+    for term in normalize_components(spec, kp):
+        t_sup = jnp.asarray(jnp.inf)
+        for kind, p in term.factors:
+            if kind in TAPER_KINDS:
+                t_sup = jnp.minimum(t_sup, softplus(p.raw_lengthscale))
+        sup = jnp.maximum(sup, t_sup)
+    return sup
+
+
+class SparsePlan:
+    """Static block-sparsity structure (content-hashed, jit-static).
+
+    Arrays (all numpy, host-side):
+      perm/inv_perm  (n,)      Morton permutation and its inverse
+      box_lo/box_hi  (T, d)    per-tile bounding boxes (real rows only)
+      pair_rows/pair_cols (P,) active (row-tile, col-tile) pairs, sorted by
+                               row then col — the Pallas gathered grid
+      pair_first     (P,)      1 where a pair starts a new output row tile
+      row_cols       (T, kmax) per-row active col tiles, 0-padded
+      row_valid      (T, kmax) validity mask for row_cols
+
+    Scalars: n, d, tile, num_tiles, kmax, fill (= P / T^2),
+    support (input-space radius at the reference params; inf = all-active),
+    support_planned (= support * (1 + margin); the correctness envelope),
+    margin. `params_ref` holds the host copy of the hyperparameters the
+    plan was built under — `needs_replan` measures drift against it.
+    """
+
+    def __init__(self, *, n, d, tile, perm, inv_perm, box_lo, box_hi,
+                 pair_rows, pair_cols, pair_first, row_cols, row_valid,
+                 support, support_planned, margin, params_ref):
+        self.n = int(n)
+        self.d = int(d)
+        self.tile = int(tile)
+        self.num_tiles = box_lo.shape[0]
+        self.perm = perm
+        self.inv_perm = inv_perm
+        self.box_lo = box_lo
+        self.box_hi = box_hi
+        self.pair_rows = pair_rows
+        self.pair_cols = pair_cols
+        self.pair_first = pair_first
+        self.row_cols = row_cols
+        self.row_valid = row_valid
+        self.kmax = int(row_cols.shape[1])
+        self.num_pairs = int(pair_rows.shape[0])
+        self.fill = self.num_pairs / float(self.num_tiles**2)
+        self.support = float(support)
+        self.support_planned = float(support_planned)
+        self.margin = float(margin)
+        self.params_ref = params_ref
+        h = hashlib.sha1()
+        h.update(np.asarray([self.n, self.d, self.tile], np.int64).tobytes())
+        h.update(np.float64([self.support_planned]).tobytes())
+        h.update(perm.tobytes())
+        h.update(pair_rows.tobytes())
+        h.update(pair_cols.tobytes())
+        self.digest = h.hexdigest()
+
+    @property
+    def n_pad(self) -> int:
+        return self.num_tiles * self.tile
+
+    @property
+    def compact(self) -> bool:
+        return math.isfinite(self.support)
+
+    def __hash__(self):
+        return hash(self.digest)
+
+    def __eq__(self, other):
+        return isinstance(other, SparsePlan) and self.digest == other.digest
+
+    def __repr__(self):
+        return (f"SparsePlan(n={self.n}, tile={self.tile}, "
+                f"tiles={self.num_tiles}, pairs={self.num_pairs}, "
+                f"fill={self.fill:.3f}, support={self.support:.4g})")
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def build_plan(kernel, X, params, *, tile: int = 256, margin: float = 0.1,
+               assume_sorted: bool = False) -> SparsePlan:
+    """Host-side planning: (kernel, X, params) -> SparsePlan.
+
+    Requires CONCRETE X/params (raises on tracers — build the plan outside
+    jit and thread it through `OperatorConfig.plan`). `tile` is clamped to
+    the dataset and rounded to a multiple of 8 (the fp32 sublane size the
+    Pallas gathered grid needs; use multiples of 16 for bf16 compute).
+    `margin` widens the planned support so `needs_replan`'s drift threshold
+    can fire before the mask goes stale. `assume_sorted=True` skips the
+    Morton reorder and emits an identity permutation — the distributed
+    engine's contract, where X/y are pre-sorted so contiguous row shards
+    own contiguous tile ranges.
+    """
+    if isinstance(X, jax.core.Tracer) or any(
+            isinstance(l, jax.core.Tracer) for l in jax.tree.leaves(params)):
+        raise ValueError(
+            "build_plan needs concrete X/params (got tracers): build the "
+            "plan outside jit and pass it via OperatorConfig/MLLConfig.plan")
+    Xh = np.asarray(X, np.float64)
+    n, d = Xh.shape
+    tile = max(8, min(_round_up(tile, 8), _round_up(n, 8)))
+    if assume_sorted:
+        perm = np.arange(n, dtype=np.int32)
+    else:
+        perm = morton_order(Xh)
+    inv_perm = np.empty(n, np.int32)
+    inv_perm[perm] = np.arange(n, dtype=np.int32)
+    Xs = Xh[perm]
+
+    T = -(-n // tile)
+    box_lo = np.empty((T, d), np.float64)
+    box_hi = np.empty((T, d), np.float64)
+    for t in range(T):
+        blk = Xs[t * tile:min((t + 1) * tile, n)]
+        box_lo[t] = blk.min(axis=0)
+        box_hi[t] = blk.max(axis=0)
+
+    support = float(spec_support_radius(kernel, params))
+    if math.isfinite(support):
+        support_planned = support * (1.0 + margin)
+        # box-to-box distance lower-bounds every pairwise distance
+        gap = np.maximum(box_lo[:, None, :] - box_hi[None, :, :], 0.0)
+        gap = np.maximum(gap, np.maximum(
+            box_lo[None, :, :] - box_hi[:, None, :], 0.0))
+        dist = np.sqrt(np.sum(gap * gap, axis=-1))
+        mask = dist < support_planned
+    else:
+        support_planned = math.inf
+        mask = np.ones((T, T), bool)
+
+    pair_rows, pair_cols = np.nonzero(mask)  # row-major: sorted by row, col
+    pair_rows = pair_rows.astype(np.int32)
+    pair_cols = pair_cols.astype(np.int32)
+    pair_first = np.zeros(pair_rows.shape[0], np.int32)
+    pair_first[np.searchsorted(pair_rows, np.arange(T))] = 1
+
+    counts = np.bincount(pair_rows, minlength=T)
+    kmax = int(counts.max())
+    row_cols = np.zeros((T, kmax), np.int32)
+    row_valid = np.zeros((T, kmax), bool)
+    for t in range(T):
+        sel = pair_cols[pair_rows == t]
+        row_cols[t, :sel.shape[0]] = sel
+        row_valid[t, :sel.shape[0]] = True
+
+    params_ref = jax.tree.map(lambda a: np.asarray(a), params)
+    return SparsePlan(
+        n=n, d=d, tile=tile, perm=perm, inv_perm=inv_perm,
+        box_lo=np.asarray(box_lo, np.float32),
+        box_hi=np.asarray(box_hi, np.float32),
+        pair_rows=pair_rows, pair_cols=pair_cols, pair_first=pair_first,
+        row_cols=row_cols, row_valid=row_valid,
+        support=support, support_planned=support_planned, margin=margin,
+        params_ref=params_ref)
+
+
+def needs_replan(plan: SparsePlan, params, threshold: float | None = None,
+                 kernel=None):
+    """(replan?, drift) — the warm-start drift machinery applied to plans.
+
+    Drift is `repro.train.solver_state.param_drift` over the constrained
+    hyperparameters (the same measure the preconditioner refresh schedule
+    uses; the support radius is one of its leaves). A replan fires when
+    drift exceeds `threshold` (defaults to the plan's margin — the envelope
+    the mask was widened by) or, when `kernel` is given, as a correctness
+    backstop whenever the CURRENT support radius has outgrown the planned
+    one. All-active plans never need replanning (any radius is covered by
+    the full mask).
+    """
+    from repro.train.solver_state import param_drift  # lazy: no import cycle
+
+    drift = param_drift(plan.params_ref, params)
+    if not plan.compact:
+        return False, drift
+    thr = plan.margin if threshold is None else threshold
+    if drift > thr:
+        return True, drift
+    if kernel is not None and not plan_is_safe(plan, kernel, params):
+        return True, drift
+    return False, drift
+
+
+def plan_is_safe(plan: SparsePlan, kernel, params) -> bool:
+    """True while the mask provably covers the current support radius."""
+    if not plan.compact:
+        return True
+    return float(spec_support_radius(kernel, params)) <= plan.support_planned

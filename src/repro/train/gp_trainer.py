@@ -81,6 +81,12 @@ def fit_exact_gp(gp: ExactGP, X, y, *, cfg: GPTrainConfig = GPTrainConfig(),
     KernelOperator backend `gp.config.backend` selects, per the
     cfg.refresh_every / cfg.drift_threshold schedule. Per-step telemetry
     lands in GPFitResult.telemetry.
+
+    backend="blocksparse" (compactly-supported specs, `repro.sparse`):
+    each stage plans the block mask for its own inputs, and the full-data
+    loop replans whenever hyperparameter drift exceeds
+    cfg.drift_threshold — the mask's margin — so the support radius can
+    train freely while MVMs stay fill-proportional and exact.
     """
     t0 = time.time()
     key = jax.random.PRNGKey(cfg.seed)
@@ -89,17 +95,75 @@ def fit_exact_gp(gp: ExactGP, X, y, *, cfg: GPTrainConfig = GPTrainConfig(),
     trace: list = []
     telemetry: tuple = ()
 
-    def make_loss(Xs, ys):
+    def stage_gp(Xstage, p) -> ExactGP:
+        """The GP whose config a full-data stage jits against. The
+        blocksparse backend needs a STATIC plan in the config (the mask
+        cannot be built from tracers), so the stage gets one planned for
+        its own inputs at its incoming hyperparameters — a caller-supplied
+        plan is reused only if it covers exactly these inputs and its
+        margin still covers `p`; other backends pass through untouched."""
+        if gp.config.backend != "blocksparse":
+            return gp
+        from repro.sparse import build_plan, plan_is_safe
+
+        plan = gp.config.plan
+        if plan is not None and plan.n == Xstage.shape[0] \
+                and plan_is_safe(plan, gp.config.kernel, p):
+            return gp
+        plan = build_plan(gp.config.kernel, Xstage, p,
+                          tile=max(8, min(gp.config.row_block, 256)),
+                          margin=cfg.drift_threshold)
+        return ExactGP(gp.config._replace(plan=plan))
+
+    def subset_gp() -> ExactGP:
+        """The subset-pretraining stage runs blocksparse configs on the
+        PARTITIONED backend instead: the subset exists to initialize
+        hyperparameters (they move a lot there — LBFGS — and the jitted
+        LBFGS/Adam closures cannot replan mid-loop), it is small by
+        design, and the dense path sidesteps mask staleness entirely.
+        Sparsity pays off on the full-data stages, which replan per
+        step."""
+        if gp.config.backend != "blocksparse":
+            return gp
+        return ExactGP(gp.config._replace(backend="partitioned", plan=None))
+
+    def make_loss(gp_s, Xs, ys):
         def loss_fn(p, k):
-            val, aux = gp.loss(Xs, ys, p, k)
+            val, aux = gp_s.loss(Xs, ys, p, k)
             return val
         return loss_fn
 
     def run_full_data_stage(steps, lr, params, tag):
         nonlocal key
-        engine = WarmStartEngine(gp.config.mll_config(), cfg.warm_config())
+        gp_s = stage_gp(X, params)
+        engine = WarmStartEngine(gp_s.config.mll_config(), cfg.warm_config())
         state = adam_init(params)
+        telem: list = []
         for i in range(steps):
+            if gp_s.config.backend == "blocksparse":
+                # drift-triggered replanning: the same machinery that
+                # schedules preconditioner refreshes guards the mask —
+                # if the constrained hyperparameters (the support radius
+                # among them) drift past the plan's margin, rebuild the
+                # plan and the engine around it (the first step after a
+                # replan runs cold; solver state is re-seeded)
+                from repro.sparse import build_plan, needs_replan
+
+                replan, drift = needs_replan(
+                    gp_s.config.plan, params, cfg.drift_threshold,
+                    kernel=gp_s.config.kernel)
+                if replan:
+                    telem.extend(engine.telemetry)
+                    plan = build_plan(
+                        gp_s.config.kernel, X, params,
+                        tile=gp_s.config.plan.tile,
+                        margin=cfg.drift_threshold)
+                    gp_s = ExactGP(gp_s.config._replace(plan=plan))
+                    engine = WarmStartEngine(gp_s.config.mll_config(),
+                                             cfg.warm_config())
+                    if verbose:
+                        print(f"  {tag} {i}: replanned sparsity "
+                              f"(drift={drift:.3f}, fill={plan.fill:.3f})")
             key, k = jax.random.split(key)
             val, aux, g = engine.step(X, y, params, k)
             params, state = adam_update(params, g, state, lr)
@@ -109,7 +173,8 @@ def fit_exact_gp(gp: ExactGP, X, y, *, cfg: GPTrainConfig = GPTrainConfig(),
                 print(f"  {tag} {i}: {float(val):.5f} "
                       f"[{t['mode']} cg_iters={t['cg_iters']} "
                       f"dt={t['seconds']:.2f}s]")
-        return params, tuple(engine.telemetry)
+        telem.extend(engine.telemetry)
+        return params, tuple(telem)
 
     if method == "pretrain":
         # --- stage 1: subset pretraining ---------------------------------
@@ -117,7 +182,7 @@ def fit_exact_gp(gp: ExactGP, X, y, *, cfg: GPTrainConfig = GPTrainConfig(),
         key, sub = jax.random.split(key)
         idx = jax.random.choice(sub, n, (m,), replace=False)
         Xs, ys = X[idx], y[idx]
-        loss_sub = make_loss(Xs, ys)
+        loss_sub = make_loss(subset_gp(), Xs, ys)
 
         key, k_lbfgs = jax.random.split(key)
         params, tr = lbfgs_minimize(
@@ -151,8 +216,13 @@ def fit_exact_gp(gp: ExactGP, X, y, *, cfg: GPTrainConfig = GPTrainConfig(),
 
         key, k_art = jax.random.split(key)
         c = gp.config
+        # blocksparse: the posterior solves (and the plan the artifact
+        # manifest records) must run on a mask planned at the FINAL
+        # hyperparameters — any training-time plan is stale by now
+        gp_art = ExactGP(c._replace(plan=None)) \
+            if c.backend == "blocksparse" else gp
         art = fit_posterior(
-            gp.operator(X, params), y, k_art,
+            gp_art.operator(X, params), y, k_art,
             precond_rank=c.precond_rank, lanczos_rank=c.lanczos_rank,
             pred_tol=c.pred_cg_tol, max_cg_iters=c.pred_max_cg_iters)
         path = _save_artifact(save_artifact, art)

@@ -40,9 +40,14 @@ from repro.core.distributed import (
     shard_vector,
 )
 
-SINGLE_BACKENDS = ("dense", "partitioned", "pallas")
+SINGLE_BACKENDS = ("dense", "partitioned", "pallas", "blocksparse")
 # the last axis entry is a composable KernelSpec expression (KernelParams
-# pytree; the Pallas backend runs it as ONE fused multi-component pass)
+# pytree; the Pallas backend runs it as ONE fused multi-component pass).
+# The blocksparse backend runs every kernel here through its ALL-ACTIVE
+# plan (none of these specs is compactly supported) on the gathered-grid
+# Pallas kernel (interpret=True) — the golden pin that non-compact specs
+# match the established backends; its compact-support behavior lives in
+# tests/test_sparse.py.
 KERNELS = ("rbf", "matern32", "matern52", "0.5*rbf + matern32")
 DTYPES = ("float32", "float64")
 SHAPES = ((64, 2), (96, 5))
@@ -51,13 +56,21 @@ SHAPES = ((64, 2), (96, 5))
 # differ from the oracle only by blocked-summation order in the operand
 # dtype, while the Pallas kernel's contract is fp32 math at every operand
 # dtype (`kernels.ops` casts f64 operands to fp32; returns V.dtype) — so
-# pallas rows of the matrix are held to fp32-grade tolerances even on f64.
+# pallas rows of the matrix are held to fp32-grade tolerances even on f64;
+# blocksparse with interpret=True runs the same fp32 kernel-body contract.
 VAL_TOL = {"float32": 3e-5, "float64": 1e-10}
 MAT_TOL = {"float32": 2e-4, "float64": 1e-9}
 
 
 def _compute_dtype(backend, dtype):
-    return "float32" if backend == "pallas" else dtype
+    return "float32" if backend in ("pallas", "blocksparse") else dtype
+
+
+def _plan_for(backend, kernel, X, params, tile=32):
+    if backend != "blocksparse":
+        return None
+    from repro.sparse import build_plan
+    return build_plan(kernel, X, params, tile=tile)
 
 
 def _problem(kernel, dtype, n, d, t=3, seed=0):
@@ -77,7 +90,8 @@ def _problem(kernel, dtype, n, d, t=3, seed=0):
 def _op(backend, kernel, X, params):
     return make_operator(
         OperatorConfig(kernel=kernel, backend=backend, row_block=32,
-                       interpret=True), X, params)
+                       interpret=True,
+                       plan=_plan_for(backend, kernel, X, params)), X, params)
 
 
 def _mesh_geom(n, d):
@@ -133,7 +147,8 @@ def test_mll_value_and_grad_conformance(kernel, dtype):
         cfg = MLLConfig(kernel=kernel, precond_rank=30, num_probes=16,
                         max_cg_iters=200,
                         cg_tol=1e-10 if cdt == "float64" else 1e-6,
-                        row_block=32, backend=backend)
+                        row_block=32, backend=backend,
+                        plan=_plan_for(backend, kernel, X, params))
         def value(p, x):
             v, _ = exact_mll(cfg, x, y, p, key)
             return v
