@@ -27,6 +27,7 @@ from repro.core import (
     make_operator,
     parse_kernel,
 )
+from repro.kernels.autotune import prewarm, tiles_for_spec
 from repro.kernels.ops import mvm_plan
 
 from .common import write_rows
@@ -67,15 +68,26 @@ def run():
         params = init_kernel_params(spec, noise=0.3)
         plan = mvm_plan(spec, params)
         for backend in BACKENDS:
+            # pallas rows run the full fused stack: autotuned (bm, bn)
+            # tiles (cache pre-warmed outside the timed region) + the
+            # fused-CG megakernel step inside the MLL solve
+            tune = backend == "pallas"
+            if tune:
+                # eager sweeps for BOTH shape buckets hit below: the MLL
+                # solve's (n, probes+1) matmat and the bare T-RHS matvec
+                prewarm(spec, params, N, D, num_probes=4, interpret=True)
+                tiles_for_spec(spec, params, N, N, D, T, interpret=True)
             ocfg = OperatorConfig(kernel=spec, backend=backend,
-                                  row_block=ROW_BLOCK, interpret=True)
+                                  row_block=ROW_BLOCK, interpret=True,
+                                  autotune=tune)
             mvm = jax.jit(
                 lambda p, v, c=ocfg: make_operator(c, X, p).matvec(v))
             mvm_ms = _timeit(mvm, params, V) * 1e3
 
             mcfg = MLLConfig(kernel=spec, precond_rank=30, num_probes=4,
                              max_cg_iters=20, cg_tol=1.0,
-                             row_block=ROW_BLOCK, backend=backend)
+                             row_block=ROW_BLOCK, backend=backend,
+                             autotune=tune)
             step = jax.jit(jax.value_and_grad(
                 lambda p, c=mcfg: exact_mll(c, X, y, p, key)[0]))
             mll_ms = _timeit(step, params) * 1e3

@@ -43,6 +43,26 @@ err = float(jnp.max(jnp.abs(
 print(f"fused kmvm err vs dense: {err:.2e}")
 assert err < 2e-4
 
+# 1b. fused-CG megakernel step (pallas-interpret): one launch returns the
+# matmat AND the CG reductions; solves must match the classic two-launch path
+from repro.core import OperatorConfig, init_params, make_operator, pcg
+
+op = make_operator(OperatorConfig(kernel="matern32", backend="pallas",
+                                  row_block=128, interpret=True),
+                   X, init_params(noise=0.3))
+assert op.supports_fused_step
+KV, dots = op.fused_matvec_dots(V, V)
+ref = op.matvec(V)
+fmv_err = float(jnp.max(jnp.abs(KV - ref)))
+d0_err = float(jnp.max(jnp.abs(dots[0] - jnp.sum(ref * V, 0))))
+print(f"fused step: matmat err {fmv_err:.2e}, <Kv,v> err {d0_err:.2e}")
+assert fmv_err < 2e-4 and d0_err < 1e-2
+r_f = pcg(op, V, None, max_iters=60, min_iters=3, tol=1e-6, fused=True)
+r_c = pcg(op, V, None, max_iters=60, min_iters=3, tol=1e-6, fused=False)
+sol_err = float(jnp.max(jnp.abs(r_f.solution - r_c.solution)))
+print(f"fused-vs-classic pcg solution err: {sol_err:.2e}")
+assert sol_err < 2e-5
+
 # 2. fit 2 full-data Adam steps (warm-start engine, pallas backend)
 gp = ExactGP(ExactGPConfig(kernel=spec, precond_rank=30, row_block=128,
                            train_max_cg_iters=50, lanczos_rank=64,

@@ -332,6 +332,12 @@ class ShardedOperator(KernelOperator):
     Prediction-time surfaces (cross_matvec / kernel_rows) are single-device
     by design — the paper runs predictions on one device from the gathered
     mean cache (`make_mean_cache_solve`).
+
+    The fused-CG surface (`fused_matvec_dots`) is inherited from the base
+    class as the column-batched fallback: the local matvec plus shard-local
+    partial dots, which PCG allreduces exactly like its unfused reductions
+    — so the sharded backend keeps the same solver surface without
+    claiming `supports_fused_step` (the cross-shard launch cannot fuse).
     """
 
     def __init__(self, config: OperatorConfig, X: jax.Array, params):

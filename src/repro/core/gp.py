@@ -58,6 +58,10 @@ class ExactGPConfig(NamedTuple):
     plan: object | None = None        # SparsePlan (backend="blocksparse");
                                       # the trainer builds/replans one when
                                       # left None (repro.train.gp_trainer)
+    autotune: bool = False            # Pallas (bm, bn) tile autotuner
+                                      # (repro.kernels.autotune; the trainer
+                                      # pre-warms the cache before jitting)
+    fused_cg: bool | None = None      # fused-CG megakernel step (None=auto)
 
     def mll_config(self) -> MLLConfig:
         return MLLConfig(
@@ -72,6 +76,8 @@ class ExactGPConfig(NamedTuple):
             backend=self.backend,
             compute_dtype=self.compute_dtype,
             plan=self.plan,
+            autotune=self.autotune,
+            fused_cg=self.fused_cg,
         )
 
     def operator_config(self) -> OperatorConfig:

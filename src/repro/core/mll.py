@@ -67,6 +67,8 @@ class MLLConfig(NamedTuple):
     backend: str = "partitioned"          # operator registry key
     compute_dtype: str | None = None      # "bfloat16" = MXU fast path
     plan: object | None = None            # SparsePlan (backend="blocksparse")
+    autotune: bool = False                # Pallas (bm, bn) tile autotuner
+    fused_cg: bool | None = None          # fused-CG megakernel step (None=auto)
 
     def operator_config(self) -> OperatorConfig:
         return OperatorConfig(
@@ -77,6 +79,8 @@ class MLLConfig(NamedTuple):
             noise_floor=self.noise_floor,
             compute_dtype=self.compute_dtype,
             plan=self.plan,
+            autotune=self.autotune,
+            fused_cg=self.fused_cg,
         )
 
 
@@ -99,7 +103,11 @@ def operator_mll_forward(op, y, key, *, precond_rank: int, num_probes: int,
 
     y is the operator-local slice of the targets (the full vector on one
     device, the row-shard chunk inside shard_map); scalar reductions go
-    through op.allreduce, so the same code runs in both worlds.
+    through op.allreduce, so the same code runs in both worlds. The y
+    column and every SLQ/trace probe ride the SAME (n, t+1) mBCG matmat —
+    one kernel traversal per CG iteration amortized over all right-hand
+    sides — and on operators with `supports_fused_step` (Pallas) each
+    iteration's reductions fuse into that traversal too (`pcg(fused=...)`).
 
     Warm-start surface (the stateful training engine,
     `repro.train.solver_state`): `precond` reuses a previous step's
@@ -153,18 +161,23 @@ def operator_mll_quad_grads(make_op, X, u_y, U, pinv_z):
     Returns (g_params, g_X) of the MLL w.r.t. (theta, X) BEFORE any
     cross-device reduction, g_value scaling, or the raw_mean term — the
     callers layer those on (the sharded VJP psums partials first).
+
+    Both Eq. 2 contractions — the data-fit term -u_y^T dK u_y and the
+    trace term (1/t) sum_i u_i^T dK P^{-1}z_i — are LINEAR in the (a, v)
+    column pairs of the quadratic form, so they batch into ONE
+    `quad_form_grads` call over t+1 columns. Every backend's gradient
+    surface walks its slabs/tiles once for the whole column block (the
+    kernel slab and its VJP residuals are shared across columns), halving
+    the backward's HBM traversals vs the historical two-call assembly; it
+    also obviates the barrier link that serialized the two chains.
     """
     t = max(U.shape[1], 1)
     op = make_op(X)
-    gp_d, gx_d = op.quad_form_grads(u_y, u_y)
-    # gate the second chain on the first (opaque zero, bitwise identity):
-    # two concurrent block chains would double peak memory
-    link = jax.lax.optimization_barrier(
-        jnp.zeros((), X.dtype)) * gx_d[0, 0]
-    op2 = make_op(X + link)
-    gp_t, gx_t = op2.quad_form_grads(U, pinv_z)
-    g_params = jax.tree.map(lambda a, b: -0.5 * (-a + b / t), gp_d, gp_t)
-    g_X = -0.5 * (-gx_d + gx_t / t)
+    A = jnp.concatenate([-u_y[:, None], U / t], axis=1)
+    V = jnp.concatenate([u_y[:, None], pinv_z], axis=1)
+    gp, gx = op.quad_form_grads(A, V)
+    g_params = jax.tree.map(lambda a: -0.5 * a, gp)
+    g_X = -0.5 * gx
     return g_params, g_X
 
 

@@ -116,6 +116,16 @@ class OperatorConfig(NamedTuple):
                    (content-hashed, so configs stay jit-static). None lets
                    the operator build one at construction — but only with
                    concrete X; under jit thread a pre-built plan here.
+    autotune:      sweep (bm, bn) Pallas tile sizes per dtype/backend/
+                   shape-bucket with an on-disk content-hashed cache
+                   (`repro.kernels.autotune`) instead of the static
+                   defaults. Pallas backend only; the sweep runs once per
+                   machine per bucket.
+    fused_cg:      the fused-CG megakernel step (`fused_matvec_dots`:
+                   MVM + the CG dot block in one launch). None = auto
+                   (on wherever the backend supports it — pallas with a
+                   single-fused-pass plan); False forces the classic
+                   matvec + separate-reductions path everywhere.
     """
 
     kernel: str = "matern32"
@@ -128,6 +138,8 @@ class OperatorConfig(NamedTuple):
     geom: object | None = None
     inner_backend: str = "partitioned"
     plan: object | None = None
+    autotune: bool = False
+    fused_cg: bool | None = None
 
 
 _REGISTRY: dict[str, type] = {}
@@ -342,6 +354,37 @@ class KernelOperator:
         """Sum partial reductions over row shards (identity here)."""
         return x
 
+    @property
+    def supports_fused_step(self) -> bool:
+        """Whether `fused_matvec_dots` is genuinely fused (one launch).
+
+        PCG consults this to pick its loop body: False means the base
+        column-batched fallback below would run — correct, but no faster
+        than matvec + separate reductions, so not worth the different
+        summation order by default.
+        """
+        return False
+
+    def fused_matvec_dots(self, V: jax.Array, R: jax.Array):
+        """(K_hat @ V, dots) with dots (4, t) = per-column LOCAL partials
+        [<K_hat v, v>, <r, v>, <r, r>, <v, v>] — the reduction block one CG
+        iteration needs (standard: rows 0/2; pipelined: rows 1/0/2). The
+        caller applies `allreduce`; under sharding these are shard-local
+        sums, matching the unfused loop's reduction contract.
+
+        Base implementation: the plain matvec followed by jnp reductions —
+        the column-loop-equivalent fallback every backend shares, so the
+        fused PCG surface is uniform even where no fusion exists.
+        """
+        out = self.matvec(V)
+        dots = jnp.stack([
+            jnp.sum(out * V, axis=0),
+            jnp.sum(R * V, axis=0),
+            jnp.sum(R * R, axis=0),
+            jnp.sum(V * V, axis=0),
+        ])
+        return out, dots
+
     def quad_form_grads(self, A: jax.Array, V: jax.Array):
         """(g_params, g_X) of q = sum_j a_j^T K_hat v_j, bounded memory.
 
@@ -440,10 +483,24 @@ class PartitionedOperator(KernelOperator):
 
 @register_operator("pallas")
 class PallasFusedOperator(PartitionedOperator):
-    """Partitioned outer loop + fused Pallas slab MVM: the (row_block, n)
-    kernel slab lives tile-by-tile in VMEM and never reaches HBM
-    (`repro.kernels.ops.kmvm_block`). Interpret mode runs the same kernel
-    body on CPU."""
+    """Fused Pallas MVMs: the kernel slab lives tile-by-tile in VMEM and
+    never reaches HBM (`repro.kernels.ops`). Interpret mode runs the same
+    kernel body on CPU.
+
+    matvec is a MEGAKERNEL: one pallas_call whose grid tiles the whole
+    (n, n) matrix (one launch per fused pass — a single launch for any
+    shared-lengthscale spec), instead of the partitioned outer loop's one
+    launch per row slab. O(n) memory is unchanged — the grid IS the
+    partitioning — and because V is a kernel operand, XLA cannot hoist
+    anything slab-like out of the CG loop (the LICM hazard the slab loop
+    needs opaque-zero links for). Specs with dense fallback terms keep the
+    slab loop, which bounds the fallback's transient memory.
+
+    With a single-fused-pass plan the operator also supports the fused-CG
+    step: `fused_matvec_dots` returns the MVM and the CG dot block from
+    ONE launch (`kmvm_fused_matmat`), making a warm CG iteration a single
+    kernel launch (+ the O(nk) preconditioner apply).
+    """
 
     @classmethod
     def slab_block_fn(cls, config: OperatorConfig, operand_dtype) -> Callable:
@@ -454,6 +511,64 @@ class PallasFusedOperator(PartitionedOperator):
             config.kernel,
             interpret=config.interpret,
             compute_dtype=config.compute_dtype)
+
+    def _tiles(self, t: int) -> tuple[int, int]:
+        """(bm, bn) for an (n, n) x (n, t) launch — autotuned when asked."""
+        from repro.kernels.kmvm import DEFAULT_BM, DEFAULT_BN
+
+        if not self.config.autotune:
+            return DEFAULT_BM, DEFAULT_BN
+        from repro.kernels.autotune import tiles_for_spec
+
+        n, d = self.X.shape
+        return tiles_for_spec(
+            self.config.kernel, self.params, n, n, d, t,
+            compute_dtype=self.config.compute_dtype,
+            interpret=self.config.interpret)
+
+    def matvec(self, V: jax.Array) -> jax.Array:
+        from repro.kernels.ops import kmvm_block, mvm_plan
+
+        if mvm_plan(self.config.kernel, self.params).fallback_terms:
+            # dense-slab fallback terms need the partitioned outer loop to
+            # bound their transient (row_block, n) memory
+            return super().matvec(V)
+        squeeze = V.ndim == 1
+        if squeeze:
+            V = V[:, None]
+        bm, bn = self._tiles(V.shape[1])
+        out = kmvm_block(
+            self.config.kernel, self.X, self.X, V, self.params,
+            bm=bm, bn=bn, interpret=self.config.interpret,
+            compute_dtype=self.config.compute_dtype)
+        out = self._add_noise(out, V)
+        return out[:, 0] if squeeze else out
+
+    @property
+    def supports_fused_step(self) -> bool:
+        if self.config.fused_cg is False:
+            return False
+        from repro.kernels.ops import fused_pass_or_none
+
+        return fused_pass_or_none(self.config.kernel, self.params) is not None
+
+    def fused_matvec_dots(self, V: jax.Array, R: jax.Array):
+        from repro.kernels.ops import fused_pass_or_none, kmvm_fused_matmat
+
+        if fused_pass_or_none(self.config.kernel, self.params) is None:
+            return super().fused_matvec_dots(V, R)
+        bm, bn = self._tiles(V.shape[1])
+        out, dots = kmvm_fused_matmat(
+            self.config.kernel, self.X, V, R, self.params,
+            bm=bm, bn=bn, interpret=self.config.interpret,
+            compute_dtype=self.config.compute_dtype)
+        out = out.astype(V.dtype)
+        if self.config.add_noise:
+            sigma2 = noise_variance(self.params, self.config.noise_floor)
+            out = out + sigma2 * V
+            # <K_hat v, v> = <K v, v> + sigma^2 <v, v>
+            dots = dots.at[0].add(sigma2.astype(dots.dtype) * dots[3])
+        return out, dots
 
 
 def slab_block_fn_for(backend: str, config: OperatorConfig,

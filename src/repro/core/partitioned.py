@@ -219,6 +219,14 @@ def quad_form_partials(
     blocks so that exactly ONE transient slab (+ its VJP residuals) is
     live at any point.
 
+    The column axis t is the batching surface: each block builds its
+    kernel slab (and VJP residuals) ONCE for all t column pairs, so
+    callers that need several quadratic-form gradients against the same K
+    should concatenate columns rather than call twice —
+    `repro.core.mll.operator_mll_quad_grads` batches the Eq. 2 data-fit
+    and trace contractions into one (n, t+1) call exactly this way,
+    halving the backward's slab traversals.
+
     This replaces reverse-mode AD through the partitioned forward: AD of an
     unrolled/remat'd block loop leaves the per-block backward recomputes
     data-independent, and XLA schedules them all concurrently (64 slabs

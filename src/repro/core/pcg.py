@@ -35,6 +35,14 @@ optionally with a bf16-compute fast path) and the matching `allreduce` — a
 function summing per-shard partial reductions across the row axis (identity
 on a single device, `lax.psum` under shard_map) — see
 `repro.core.distributed`.
+
+Operators that report `supports_fused_step` (the Pallas megakernel path)
+additionally supply `fused_matvec_dots`: the MVM and the iteration's whole
+reduction block out of ONE kernel launch. Both loop bodies exploit it —
+the standard method fuses <p, Kp> and ||r||^2 into the MVM (its <r, z>
+reduction depends on alpha and stays separate); the pipelined method's
+reductions are ALL formable pre-reduction, so a warm iteration becomes a
+single launch plus the O(nk) preconditioner apply. See the `fused` arg.
 """
 
 from __future__ import annotations
@@ -92,6 +100,7 @@ def pcg(
     allreduce: Callable[[jax.Array], jax.Array] | None = None,
     method: str = "standard",
     x0: jax.Array | None = None,
+    fused: bool | None = None,
 ) -> PCGResult:
     """Solve K_hat U = B for all columns of B at once.
 
@@ -115,17 +124,30 @@ def pcg(
         branch is the identical trace; no extra MVM is issued). The
         convergence norm stays ||r||/||b|| with b from B, so a warm start
         that begins nearly converged exits at `min_iters`.
+      fused: use the operator's `fused_matvec_dots` — MVM and the
+        iteration's reduction block from ONE kernel launch. None (default)
+        engages it exactly where the operator reports
+        `supports_fused_step` (the Pallas megakernel path); True forces
+        the fused loop body onto any operator (the base column-batched
+        fallback is numerically the same reductions); False forces the
+        classic body. Bare-callable A always runs the classic body
+        bitwise-unchanged — the golden-pinned trace.
     """
+    fused_mvm = None
     if hasattr(A, "matvec"):
         mvm = A.matvec
         if allreduce is None:
             allreduce = A.allreduce
+        if fused is not False and hasattr(A, "fused_matvec_dots"):
+            if fused is True or getattr(A, "supports_fused_step", False):
+                fused_mvm = A.fused_matvec_dots
     else:
         mvm = A
     if B.ndim == 1:
-        res = pcg(mvm, B[:, None], precond_solve, max_iters=max_iters,
+        res = pcg(A if fused_mvm is not None else mvm, B[:, None],
+                  precond_solve, max_iters=max_iters,
                   min_iters=min_iters, tol=tol, allreduce=allreduce, method=method,
-                  x0=None if x0 is None else x0[:, None])
+                  x0=None if x0 is None else x0[:, None], fused=fused)
         return res._replace(solution=res.solution[:, 0])
 
     if precond_solve is None:
@@ -133,9 +155,11 @@ def pcg(
     if allreduce is None:
         allreduce = _identity
     if method == "standard":
-        return _pcg_standard(mvm, B, precond_solve, max_iters, min_iters, tol, allreduce, x0)
+        return _pcg_standard(mvm, B, precond_solve, max_iters, min_iters, tol,
+                             allreduce, x0, fused_mvm)
     if method == "pipelined":
-        return _pcg_pipelined(mvm, B, precond_solve, max_iters, min_iters, tol, allreduce, x0)
+        return _pcg_pipelined(mvm, B, precond_solve, max_iters, min_iters, tol,
+                              allreduce, x0, fused_mvm)
     raise ValueError(f"unknown PCG method {method!r}")
 
 
@@ -157,7 +181,7 @@ def _warm_init(mvm, B, x0):
 
 
 def _pcg_standard(mvm, B, precond_solve, max_iters, min_iters, tol, allreduce,
-                  x0=None):
+                  x0=None, fused_mvm=None):
     dtype = B.dtype
 
     def vdot(a, b):
@@ -173,10 +197,18 @@ def _pcg_standard(mvm, B, precond_solve, max_iters, min_iters, tol, allreduce,
 
     def body(carry, j):
         u, r, z, p, rz = carry
-        Kp = mvm(p)
-        # reduction 1: <p, Kp> and <r, r> fused
-        red1 = allreduce(jnp.stack([jnp.sum(p * Kp, 0), jnp.sum(r * r, 0)]))
-        pKp, r_norm2 = red1[0], red1[1]
+        if fused_mvm is None:
+            Kp = mvm(p)
+            # reduction 1: <p, Kp> and <r, r> fused
+            red1 = allreduce(
+                jnp.stack([jnp.sum(p * Kp, 0), jnp.sum(r * r, 0)]))
+            pKp, r_norm2 = red1[0], red1[1]
+        else:
+            # megakernel step: the MVM epilogue already holds the row tiles
+            # of Kp in VMEM — <p, Kp> and <r, r> come out of the same launch
+            Kp, dots = fused_mvm(p, r)
+            red1 = allreduce(dots.astype(dtype))
+            pKp, r_norm2 = red1[0], red1[2]
         rel = jnp.sqrt(r_norm2 / b_norm2)
         active = (rel > tol) | (j < min_iters)
         alpha = jnp.where(active, _safe_div(rz, pKp), 0.0)
@@ -201,7 +233,7 @@ def _pcg_standard(mvm, B, precond_solve, max_iters, min_iters, tol, allreduce,
 
 
 def _pcg_pipelined(mvm, B, precond_solve, max_iters, min_iters, tol, allreduce,
-                   x0=None):
+                   x0=None, fused_mvm=None):
     """Chronopoulos–Gear CG: one fused all-reduce per iteration."""
     dtype = B.dtype
 
@@ -211,11 +243,21 @@ def _pcg_pipelined(mvm, B, precond_solve, max_iters, min_iters, tol, allreduce,
         red = allreduce(part)
         return red[0], red[1], red[2]
 
+    def mvm_and_reductions(u_, r_):
+        """w = K_hat u plus (gamma, delta, rr) — the Chronopoulos–Gear
+        structure makes ALL three reductions formable alongside the MVM,
+        so with an operator megakernel a warm iteration is one launch."""
+        if fused_mvm is None:
+            w_ = mvm(u_)
+            return (w_,) + fused(r_, u_, w_)
+        w_, dots = fused_mvm(u_, r_)
+        red = allreduce(dots.astype(dtype))
+        return w_, red[1], red[0], red[2]
+
     x, r = _warm_init(mvm, B, x0)
     b_norm2 = jnp.maximum(allreduce(jnp.sum(B * B, 0)), 1e-30)
     u = precond_solve(r)
-    w = mvm(u)
-    gamma, delta, rr = fused(r, u, w)
+    w, gamma, delta, rr = mvm_and_reductions(u, r)
     rz0 = gamma
     p = jnp.zeros_like(B)
     s = jnp.zeros_like(B)
@@ -236,8 +278,7 @@ def _pcg_pipelined(mvm, B, precond_solve, max_iters, min_iters, tol, allreduce,
         x = x + alpha * p
         r = r - alpha * s
         u_new = precond_solve(r)
-        w_new = mvm(u_new)
-        gamma_new, delta_new, rr_new = fused(r, u_new, w_new)
+        w_new, gamma_new, delta_new, rr_new = mvm_and_reductions(u_new, r)
         u = jnp.where(active, u_new, u)
         w = jnp.where(active, w_new, w)
         gamma_prev_n = jnp.where(active, gamma, gamma_prev)

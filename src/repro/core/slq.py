@@ -92,9 +92,12 @@ def slq_logdet(
 
     Runs one mBCG solve on probes z ~ N(0, P) drawn from the operator's
     pivoted-Cholesky preconditioner and assembles logdet(P) + the Lanczos
-    correction. This is the logdet the MLL forward gets for free from its
-    shared solve (`repro.core.mll`); use this entry point when only the
-    log-determinant is needed (e.g. model comparison, ablations).
+    correction. All probes ride one (n, num_probes) matmat — a single
+    kernel traversal per CG iteration, with the per-iteration reductions
+    fused into it on operators that support the fused step (see
+    `repro.core.pcg`). This is the logdet the MLL forward gets for free
+    from its shared solve (`repro.core.mll`); use this entry point when
+    only the log-determinant is needed (e.g. model comparison, ablations).
     """
     from .pcg import pcg  # local import: pcg has no slq dependency
 

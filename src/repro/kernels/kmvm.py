@@ -31,10 +31,13 @@ pre-scaled by the base weight (both O(n d) host-side ops); a single
 component degenerates to w = q = 1.0 — bitwise the pre-algebra kernel.
 
 Grid: (rb/bm, n/bn), with the n axis innermost so each output tile stays
-resident in VMEM across the whole reduction. Tile sizes are multiples of
-(8, 128) sublane x lane; the feature dim d and RHS count t are zero-padded
-to 128 by the wrapper (exact: padded features contribute 0 to distances,
-padded V columns are sliced off).
+resident in VMEM across the whole reduction. On TPU tile sizes are
+multiples of (8, 128) sublane x lane and the feature dim d and RHS count t
+are zero-padded to 128 by the wrapper (exact: padded features contribute 0
+to distances, padded V columns are sliced off); in interpret mode the
+wrapper skips the lane/sublane padding entirely — there is no MXU to
+align for, and padding d 8->128 and t 4->128 was measured as a 16-32x
+flop multiplier on the CPU emulation path.
 
 Validated against `repro.kernels.ref` in interpret mode on CPU (this
 container has no TPU); `repro.kernels.ops` picks interpret automatically.
@@ -75,24 +78,12 @@ def scalar_layout(components: tuple) -> int:
     return n
 
 
-def _kmvm_kernel(components, compute_dtype, scal_ref, xi_ref, xj_ref, v_ref,
-                 out_ref):
-    """One (i, j) grid step: out[i] += K_tile @ V_j with
-    K_tile = sum_c w_c prod_f phi_cf(q_cf * d2(Xi_i, Xj_j)).
-
-    compute_dtype is the MXU operand dtype of the two matmuls (fp32 by
-    default, bf16 on the mixed-precision path); BOTH accumulate in fp32
-    via preferred_element_type, and phi/norms always run fp32 on the VPU.
-    """
-    j = pl.program_id(1)
-
-    @pl.when(j == 0)
-    def _init():
-        out_ref[...] = jnp.zeros_like(out_ref)
-
+def _kernel_tile(components, compute_dtype, scal_ref, xi_ref, xj_ref):
+    """The shared tile body: d2 on the MXU/VPU, then the multi-component
+    epilogue — every component evaluated on the SAME d2 tile (VMEM only).
+    Returns the (bm, bn) fp32 kernel tile."""
     xi = xi_ref[...].astype(compute_dtype)   # (bm, d)
     xj = xj_ref[...].astype(compute_dtype)   # (bn, d)
-    v = v_ref[...].astype(compute_dtype)     # (bn, t)
 
     # MXU: cross term (fp32 accumulation); VPU: norms in fp32
     g = jax.lax.dot_general(
@@ -103,7 +94,6 @@ def _kmvm_kernel(components, compute_dtype, scal_ref, xi_ref, xj_ref, v_ref,
     nj = jnp.sum(xj32 * xj32, axis=1, keepdims=True).T     # (1, bn)
     d2 = jnp.maximum(ni + nj - 2.0 * g, 0.0)
 
-    # multi-component epilogue: all shapes share the one d2 tile (VMEM only)
     k = None
     s = 0
     for kinds in components:
@@ -122,10 +112,127 @@ def _kmvm_kernel(components, compute_dtype, scal_ref, xi_ref, xj_ref, v_ref,
             term = f if term is None else term * f
         term = w * term
         k = term if k is None else k + term                # (bm, bn)
+    return k
 
+
+def _kmvm_kernel(components, compute_dtype, scal_ref, xi_ref, xj_ref, v_ref,
+                 out_ref):
+    """One (i, j) grid step: out[i] += K_tile @ V_j with
+    K_tile = sum_c w_c prod_f phi_cf(q_cf * d2(Xi_i, Xj_j)).
+
+    compute_dtype is the MXU operand dtype of the two matmuls (fp32 by
+    default, bf16 on the mixed-precision path); BOTH accumulate in fp32
+    via preferred_element_type, and phi/norms always run fp32 on the VPU.
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    k = _kernel_tile(components, compute_dtype, scal_ref, xi_ref, xj_ref)
+    v = v_ref[...].astype(compute_dtype)     # (bn, t)
     out_ref[...] += jax.lax.dot_general(
         k.astype(compute_dtype), v, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)
+
+
+def _kmvm_dots_kernel(components, compute_dtype, scal_ref, xi_ref, xj_ref,
+                      v_ref, vr_ref, r_ref, out_ref, dots_ref):
+    """The fused-CG megakernel step: out[i] += K_tile @ V_j as above, plus —
+    at the LAST column step, when the row tile of K@V is complete in VMEM —
+    the per-row-tile partial dot block the CG iteration needs:
+
+        dots[i] = [ <Kv, v>, <r, v>, <r, r>, <v, v> ]   (per RHS column)
+
+    vr/r are the i-indexed (bm, t) row views of the UNSCALED direction block
+    and the residual block (zero rows in the padding region, so every dot is
+    exact despite row padding even though the padded rows of K@V are not).
+    Summing the (grid_m, ...) partials and adding the noise correction
+    sigma^2 <v, v> happens outside; one launch replaces an MVM plus two
+    HBM-traversing reduction passes.
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+        dots_ref[...] = jnp.zeros_like(dots_ref)
+
+    k = _kernel_tile(components, compute_dtype, scal_ref, xi_ref, xj_ref)
+    v = v_ref[...].astype(compute_dtype)     # (bn, t)
+    out_ref[...] += jax.lax.dot_general(
+        k.astype(compute_dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _dots():
+        kv = out_ref[...]                          # (bm, t) complete fp32
+        vr = vr_ref[...].astype(jnp.float32)
+        r = r_ref[...].astype(jnp.float32)
+        d0 = jnp.sum(kv * vr, axis=0)              # <Kv, v>
+        d1 = jnp.sum(r * vr, axis=0)               # <r, v>
+        d2 = jnp.sum(r * r, axis=0)                # <r, r>
+        d3 = jnp.sum(vr * vr, axis=0)              # <v, v>
+        z = jnp.zeros_like(d0)
+        dots_ref[...] = jnp.stack([d0, d1, d2, d3, z, z, z, z])[None]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("components", "bm", "bn", "interpret",
+                              "compute_dtype"))
+def kmvm_pallas_dots(
+    components,
+    Xi: jax.Array,       # (m, d)  pre-scaled rows, m % bm == 0
+    Xj: jax.Array,       # (n, d)  pre-scaled columns, n % bn == 0
+    V: jax.Array,        # (n, t)  pre-scaled RHS (column view)
+    Vrow: jax.Array,     # (m, t)  UNSCALED RHS, row view (zero-padded rows)
+    R: jax.Array,        # (m, t)  unscaled residual block, row view
+    scalars: jax.Array,  # (1, L)
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    interpret: bool = False,
+    compute_dtype: str = "float32",
+) -> tuple[jax.Array, jax.Array]:
+    """Fused K @ V plus the CG dot block; returns (out (m, t) fp32,
+    dots (m/bm, 8, t) fp32 per-row-tile partials, rows [<Kv,v>, <r,v>,
+    <r,r>, <v,v>, 0...])."""
+    m, d = Xi.shape
+    n, t = V.shape
+    assert Xj.shape == (n, d), (Xi.shape, Xj.shape, V.shape)
+    assert Vrow.shape == (m, t) and R.shape == (m, t), (Vrow.shape, R.shape)
+    assert m % bm == 0 and n % bn == 0, (m, bm, n, bn)
+    L = scalar_layout(components)
+    assert scalars.shape == (1, L), (scalars.shape, components)
+
+    grid = (m // bm, n // bn)
+    out, dots = pl.pallas_call(
+        functools.partial(_kmvm_dots_kernel, components,
+                          jnp.dtype(compute_dtype)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, L), lambda i, j: (0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, t), lambda i, j: (j, 0)),
+            pl.BlockSpec((bm, t), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, t), lambda i, j: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, t), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, 8, t), lambda i, j: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, t), jnp.float32),
+            jax.ShapeDtypeStruct((m // bm, 8, t), jnp.float32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(scalars, Xi, Xj, V, Vrow, R)
+    return out, dots
 
 
 @functools.partial(

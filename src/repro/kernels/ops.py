@@ -43,7 +43,13 @@ from repro.core.kernels_math import (
     softplus,
 )
 
-from .kmvm import DEFAULT_BM, DEFAULT_BN, kmvm_pallas, scalar_layout
+from .kmvm import (
+    DEFAULT_BM,
+    DEFAULT_BN,
+    kmvm_pallas,
+    kmvm_pallas_dots,
+    scalar_layout,
+)
 
 _LANE = 128
 
@@ -147,6 +153,31 @@ def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
+def _tile_geometry(m: int, n: int, bm: int, bn: int, cdt, interpret: bool):
+    """(bm_eff, bn_eff, lane): the padded tile geometry of one launch.
+
+    On TPU, sublane tiling wants block row counts in multiples of 8 (fp32)
+    or 16 (16-bit dtypes) and lane dims (d, t, bn) padded to 128. In
+    interpret mode there is no MXU to align for, and the unconditional
+    lane padding is a measured 16-32x flop multiplier on CPU (d 8->128
+    squares through the distance matmul, t 4->128 through K@V) — so the
+    emulation path skips it entirely.
+    """
+    if interpret:
+        return min(bm, m), min(bn, n), 1
+    sublane = 16 if cdt.itemsize < 4 else 8
+    bm_eff = min(_round_up(bm, sublane), _round_up(m, sublane))
+    bn_eff = min(_round_up(bn, sublane), _round_up(n, _LANE))
+    return bm_eff, bn_eff, _LANE
+
+
+def _pass_inputs(ppass: _PallasPass, cdt):
+    """The fp32 SMEM scalar vector of one pass (the kernel body is fp32
+    math at any operand dtype — see conformance tolerances)."""
+    return jnp.stack(
+        [jnp.asarray(s).astype(jnp.float32) for s in ppass.scalars])[None, :]
+
+
 def _run_pass(ppass: _PallasPass, Xi, Xj, V, *, bm, bn, interpret, cdt):
     """One fused Pallas launch; returns the (m, t) fp32 contribution."""
     m, _ = Xi.shape
@@ -154,20 +185,12 @@ def _run_pass(ppass: _PallasPass, Xi, Xj, V, *, bm, bn, interpret, cdt):
     Xi_s = (Xi / ppass.lengthscale).astype(cdt)
     Xj_s = (Xj / ppass.lengthscale).astype(cdt)
     Vs = (ppass.base_weight * V.astype(jnp.float32)).astype(cdt)
-    # the kernel body is fp32 math at any operand dtype (see conformance
-    # tolerances): scalars join it in fp32
-    scalars = jnp.stack(
-        [jnp.asarray(s).astype(jnp.float32) for s in ppass.scalars])[None, :]
+    scalars = _pass_inputs(ppass, cdt)
 
-    # sublane tiling: fp32 wants multiples of 8, 16-bit dtypes of 16 —
-    # Xi blocks are (bm, d) and Xj/V blocks are (bn, d)/(bn, t), so BOTH
-    # block row counts must honor the operand dtype's sublane multiple
-    sublane = 16 if cdt.itemsize < 4 else 8
-    bm_eff = min(_round_up(bm, sublane), _round_up(m, sublane))
-    bn_eff = min(_round_up(bn, sublane), _round_up(n, _LANE))
-    Xi_p = _pad_axis(_pad_axis(Xi_s, 0, bm_eff), 1, _LANE)
-    Xj_p = _pad_axis(_pad_axis(Xj_s, 0, bn_eff), 1, _LANE)
-    V_p = _pad_axis(_pad_axis(Vs, 0, bn_eff), 1, _LANE)
+    bm_eff, bn_eff, lane = _tile_geometry(m, n, bm, bn, cdt, interpret)
+    Xi_p = _pad_axis(_pad_axis(Xi_s, 0, bm_eff), 1, lane)
+    Xj_p = _pad_axis(_pad_axis(Xj_s, 0, bn_eff), 1, lane)
+    V_p = _pad_axis(_pad_axis(Vs, 0, bn_eff), 1, lane)
 
     out = kmvm_pallas(ppass.components, Xi_p, Xj_p, V_p, scalars,
                       bm=bm_eff, bn=bn_eff, interpret=interpret,
@@ -237,6 +260,71 @@ def kmvm_block(
 
     out = acc.astype(V.dtype)
     return out[:, 0] if squeeze else out
+
+
+def fused_pass_or_none(kernel, params) -> _PallasPass | None:
+    """The single fused Pallas pass covering the WHOLE spec, or None when
+    the spec needs anything else (ARD metrics, linear terms, dense
+    fallbacks). The gate for every all-in-one-launch fast path: the
+    blocksparse gathered grid and the fused-CG megakernel both require the
+    complete kernel sum to live in one tile epilogue."""
+    mp = mvm_plan(kernel, params)
+    if len(mp.passes) == 1 and not mp.linear_terms and not mp.fallback_terms:
+        return mp.passes[0]
+    return None
+
+
+def kmvm_fused_matmat(
+    kernel,
+    X: jax.Array,        # (n, d)
+    V: jax.Array,        # (n, t) the direction block
+    R: jax.Array,        # (n, t) the residual block
+    params,
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    interpret: bool | None = None,
+    compute_dtype: str | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """K(X, X) @ V plus the CG dot block, in ONE Pallas launch.
+
+    Returns (KV (n, t) fp32, dots (4, t) fp32) with dots rows
+    [<Kv, v>, <r, v>, <r, r>, <v, v>] per column — exactly the reductions a
+    CG iteration needs (standard: pKp and ||r||^2; pipelined: gamma, delta,
+    ||r||^2), formed from VMEM while the output row tile is still resident
+    instead of via separate HBM-traversing reduction passes. NO noise term
+    anywhere: the caller adds sigma^2 V to KV and sigma^2 <v,v> to dots[0].
+
+    Requires the spec to plan to a single fused pass
+    (`fused_pass_or_none`); raises ValueError otherwise — callers gate.
+    """
+    if interpret is None:
+        interpret = _auto_interpret()
+    cdt = jnp.dtype(compute_dtype if compute_dtype is not None else jnp.float32)
+    ppass = fused_pass_or_none(kernel, params)
+    if ppass is None:
+        raise ValueError(
+            f"kmvm_fused_matmat needs a single-fused-pass plan; "
+            f"{kernel!r} plans to {mvm_plan(kernel, params)}")
+    n, _ = X.shape
+    t = V.shape[1]
+    Xs = (X / ppass.lengthscale).astype(cdt)
+    Vs = (ppass.base_weight * V.astype(jnp.float32)).astype(cdt)
+    scalars = _pass_inputs(ppass, cdt)
+
+    bm_eff, bn_eff, lane = _tile_geometry(n, n, bm, bn, cdt, interpret)
+    Xi_p = _pad_axis(_pad_axis(Xs, 0, bm_eff), 1, lane)
+    Xj_p = _pad_axis(_pad_axis(Xs, 0, bn_eff), 1, lane)
+    V_p = _pad_axis(_pad_axis(Vs, 0, bn_eff), 1, lane)
+    # row views enter UNSCALED and fp32: zero-padded rows contribute zero
+    # to every dot, so the dot block is exact despite row padding
+    Vr_p = _pad_axis(_pad_axis(V.astype(jnp.float32), 0, bm_eff), 1, lane)
+    R_p = _pad_axis(_pad_axis(R.astype(jnp.float32), 0, bm_eff), 1, lane)
+
+    out, dots = kmvm_pallas_dots(
+        ppass.components, Xi_p, Xj_p, V_p, Vr_p, R_p, scalars,
+        bm=bm_eff, bn=bn_eff, interpret=interpret, compute_dtype=str(cdt))
+    return out[:n, :t], jnp.sum(dots, axis=0)[:4, :t]
 
 
 def pallas_block_fn(kernel, *, bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,

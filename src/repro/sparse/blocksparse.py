@@ -122,13 +122,12 @@ def masked_kmvm(kernel, Xs: jax.Array, Vs: jax.Array, params,
 def _fused_pass_or_none(kernel, params):
     """The single fused Pallas pass covering the WHOLE spec, or None when
     the spec needs anything else (ARD metrics, linear terms, fallbacks) —
-    in which case the masked-partitioned path handles it."""
-    from repro.kernels.ops import mvm_plan  # lazy: avoids import cycle
+    in which case the masked-partitioned path handles it. Now the shared
+    gate in `repro.kernels.ops` (the fused-CG megakernel uses the same
+    condition); kept as a lazy re-export to avoid the import cycle."""
+    from repro.kernels.ops import fused_pass_or_none
 
-    mp = mvm_plan(kernel, params)
-    if len(mp.passes) == 1 and not mp.linear_terms and not mp.fallback_terms:
-        return mp.passes[0]
-    return None
+    return fused_pass_or_none(kernel, params)
 
 
 def pallas_sorted_kmvm(ppass, Xs: jax.Array, Vs: jax.Array,

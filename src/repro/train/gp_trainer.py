@@ -136,6 +136,19 @@ def fit_exact_gp(gp: ExactGP, X, y, *, cfg: GPTrainConfig = GPTrainConfig(),
     def run_full_data_stage(steps, lr, params, tag):
         nonlocal key
         gp_s = stage_gp(X, params)
+        if gp_s.config.backend == "pallas" and gp_s.config.autotune:
+            # resolve (and persist) the full-data-shape Pallas tiles OUTSIDE
+            # jit: the sweep's wall time lands here, in setup, instead of
+            # inside the first traced MLL step
+            from repro.kernels.autotune import prewarm
+
+            bm, bn = prewarm(
+                gp_s.config.kernel, params, n, d,
+                num_probes=gp_s.config.num_probes,
+                compute_dtype=gp_s.config.compute_dtype)
+            if verbose:
+                print(f"  {tag}: autotuned Pallas tiles (bm, bn) = "
+                      f"({bm}, {bn})")
         engine = WarmStartEngine(gp_s.config.mll_config(), cfg.warm_config())
         state = adam_init(params)
         telem: list = []

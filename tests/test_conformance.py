@@ -209,6 +209,74 @@ def test_sharded_mll_value_and_grad_conformance(kernel):
         assert abs(a - b) < 0.15 * abs(b) + 0.02, (fname, a, b)
 
 
+@pytest.mark.parametrize("shape", SHAPES, ids=lambda s: f"n{s[0]}d{s[1]}")
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("kernel", KERNELS)
+def test_fused_matvec_dots_conformance(kernel, dtype, shape):
+    """The fused-CG step surface: every backend's `fused_matvec_dots(V, R)`
+    returns (K_hat @ V, [<K_hat v, v>, <r, v>, <r, r>, <v, v>]) matching the
+    dense reference — whether it runs the Pallas megakernel (pallas backend,
+    single fused pass) or the base-class matvec+reduction fallback."""
+    n, d = shape
+    t = 3
+    X, V, _, params = _problem(kernel, dtype, n, d, t=t)
+    rng = np.random.default_rng(7)
+    R = jnp.asarray(rng.normal(size=(n, t)), jnp.dtype(dtype))
+    Khat = dense_khat(kernel, X, params)
+    KV = Khat @ V
+    ref_dots = np.asarray(jnp.stack([
+        jnp.sum(KV * V, 0), jnp.sum(R * V, 0),
+        jnp.sum(R * R, 0), jnp.sum(V * V, 0)]), np.float64)
+    for backend in SINGLE_BACKENDS:
+        tol = MAT_TOL[_compute_dtype(backend, dtype)]
+        op = _op(backend, kernel, X, params)
+        out, dots = op.fused_matvec_dots(V, R)
+        assert out.dtype == V.dtype, backend
+        np.testing.assert_allclose(np.asarray(out), np.asarray(KV),
+                                   rtol=tol, atol=tol, err_msg=backend)
+        # dot magnitudes scale with n: compare relatively
+        np.testing.assert_allclose(
+            np.asarray(dots, np.float64), ref_dots,
+            rtol=10 * tol, atol=10 * tol * float(np.abs(ref_dots).max()),
+            err_msg=f"{backend} dots")
+
+
+@pytest.mark.parametrize("kernel", KERNELS)
+def test_mll_fused_step_value_and_grad_conformance(kernel):
+    """The matmat axis end-to-end: the pallas MLL with the fused megakernel
+    step engaged (fused_cg=True — y and all probes in one (n, t+1) matmat
+    per iteration, reductions fused into the launch) agrees with the same
+    backend's classic step (fused_cg=False) on the VALUE and on the Eq. 2
+    gradients (params and X) that flow through the merged quad-form
+    backward."""
+    n, d = 96, 4
+    X, _, y, params = _problem(kernel, "float32", n, d)
+    key = jax.random.PRNGKey(0)
+
+    out = {}
+    for fused in (False, True):
+        cfg = MLLConfig(kernel=kernel, precond_rank=30, num_probes=8,
+                        max_cg_iters=150, cg_tol=1e-6, row_block=32,
+                        backend="pallas", fused_cg=fused)
+
+        def value(p, x):
+            v, _ = exact_mll(cfg, x, y, p, key)
+            return v
+
+        v, (gp, gx) = jax.value_and_grad(
+            value, argnums=(0, 1))(params, X)
+        out[fused] = (float(v), gp, gx)
+
+    v0, gp0, gx0 = out[False]
+    v1, gp1, gx1 = out[True]
+    assert abs(v1 - v0) < 3e-5 * max(1.0, abs(v0)), (v0, v1)
+    for a, b in zip(jax.tree.leaves(gp0), jax.tree.leaves(gp1)):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                   rtol=5e-3, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(gx1), np.asarray(gx0),
+                               rtol=5e-3, atol=5e-4)
+
+
 @pytest.mark.parametrize("dtype", DTYPES)
 def test_mll_value_agreement_includes_sharded(dtype):
     """Value-level four-way agreement on one grid point: the sharded MLL
