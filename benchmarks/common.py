@@ -9,18 +9,52 @@ experiments/benchmarks/<name>.csv + .md.
 from __future__ import annotations
 
 import csv
+import datetime
 import json
 import os
+import subprocess
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import ExactGP, ExactGPConfig, gaussian_nll, rmse
 from repro.data import make_regression_dataset
 
 OUT_DIR = os.environ.get("REPRO_BENCH_OUT", "experiments/benchmarks")
+
+
+def _git_sha() -> str | None:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=5, cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or None
+    except (OSError, subprocess.SubprocessError):
+        return None
+
+
+def bench_meta() -> dict:
+    """Provenance block embedded in every BENCH JSON: enough to answer
+    "what produced this number" when comparing across PRs/machines."""
+    import jaxlib
+
+    devices = jax.devices()
+    return {
+        "git_sha": _git_sha(),
+        "jax_version": jax.__version__,
+        "jaxlib_version": jaxlib.__version__,
+        "device_kind": devices[0].device_kind if devices else None,
+        "device_count": jax.device_count(),
+        "platform": jax.default_backend(),
+        # Pallas kernels run under pl.pallas_call(interpret=...) off-TPU —
+        # timing columns from interpret-mode runs are shapes, not speeds
+        "interpret_mode": jax.default_backend() != "tpu",
+        "timestamp_utc": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+    }
 
 # CPU-scale dataset list: name -> max_points cap (None = paper size).
 # --scale full lifts the caps (hardware run).
@@ -62,8 +96,13 @@ def write_rows(name: str, header: list, rows: list):
         "bench": name,
         "backend": jax.default_backend(),
         "device_count": jax.device_count(),
+        "meta": bench_meta(),
         "header": list(header),
         "records": [dict(zip(header, r)) for r in rows],
+        # obs registry snapshot at write time: CG totals, autotune
+        # hit/miss, solver step modes, serve distributions — the counters
+        # behind the rows, for cross-PR perf archaeology
+        "metrics": obs.registry().snapshot(),
     }
     with open(os.path.join(OUT_DIR, f"BENCH_{name}.json"), "w") as f:
         json.dump(summary, f, indent=1, default=jsonable)

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import OperatorConfig, init_params, make_operator
 from repro.serve import BatcherConfig, MicroBatcher, PredictionEngine, fit_posterior
 
@@ -53,6 +54,10 @@ def run():
             engine = PredictionEngine(art, backend=backend, chunk_size=chunk)
             engine.warmup()
             for mb in MAX_BATCH:
+                # per-cell batch-size distribution: the serve.* histograms
+                # accumulate inside MicroBatcher; reset so each sweep cell
+                # reports only its own batches
+                obs.registry().reset("serve.")
                 batcher = MicroBatcher(engine, BatcherConfig(
                     max_batch=mb, max_wait_ms=2.0,
                     bucket_sizes=(16, 64, max(mb, 64))))
@@ -67,17 +72,21 @@ def run():
                     lats = np.asarray(list(ex.map(one, queries)))
                     wall = time.perf_counter() - t0
                 batcher.close()
-                p50, p99 = np.percentile(lats, (50, 99)) * 1e3
+                s = obs.latency_summary(lats, wall)
+                bs = obs.histogram("serve.batch_rows").summary()
                 rows.append([backend, chunk, mb,
-                             round(float(p50), 2), round(float(p99), 2),
-                             round(N_REQ / wall, 1), batcher.batches_run])
+                             round(s["p50_ms"], 2), round(s["p99_ms"], 2),
+                             round(s["qps"], 1), batcher.batches_run,
+                             round(bs["p50"], 1), round(bs["max"], 1)])
                 print(f"[serve_latency] {backend} chunk={chunk} "
-                      f"max_batch={mb}: p50={p50:.1f}ms p99={p99:.1f}ms "
-                      f"qps={N_REQ / wall:.0f} launches={batcher.batches_run}")
+                      f"max_batch={mb}: p50={s['p50_ms']:.1f}ms "
+                      f"p99={s['p99_ms']:.1f}ms qps={s['qps']:.0f} "
+                      f"launches={batcher.batches_run} "
+                      f"batch_rows_p50={bs['p50']:.0f}")
 
     write_rows("serve_latency",
                ["backend", "chunk", "max_batch", "p50_ms", "p99_ms", "qps",
-                "launches"], rows)
+                "launches", "batch_rows_p50", "batch_rows_max"], rows)
 
 
 if __name__ == "__main__":

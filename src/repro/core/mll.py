@@ -40,6 +40,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.profiling import named_scope
+
 from .kernels_math import constant_mean, dense_khat
 from .operators import OperatorConfig, backward_backend_for, make_operator
 from .pcg import pcg
@@ -128,7 +130,8 @@ def operator_mll_forward(op, y, key, *, precond_rank: int, num_probes: int,
     n = op.shape[0]
     yc = y - constant_mean(op.params)
     if precond is None:
-        precond = op.preconditioner(precond_rank)
+        with named_scope("precond_build"):
+            precond = op.preconditioner(precond_rank)
     if probes is None:
         probes = precond.sample(key, num_probes, dtype=yc.dtype)
     B = jnp.concatenate([yc[:, None], probes], axis=1)
@@ -142,8 +145,10 @@ def operator_mll_forward(op, y, key, *, precond_rank: int, num_probes: int,
 
     if logdet_carry is None:
         # alphas/betas/rz0 are replicated scalars under sharding -> SLQ is free
-        logdet = precond.logdet() + slq_logdet_correction(
-            res.alphas[:, 1:], res.betas[:, 1:], res.active[:, 1:], res.rz0[1:])
+        with named_scope("slq_logdet"):
+            logdet = precond.logdet() + slq_logdet_correction(
+                res.alphas[:, 1:], res.betas[:, 1:], res.active[:, 1:],
+                res.rz0[1:])
     else:
         logdet = logdet_carry
     quad = op.allreduce(jnp.dot(yc, u_y))
@@ -199,8 +204,9 @@ def operator_mll_backward(cfg: MLLConfig, X, params, u_y, U, pinv_z, g_value):
         compute_dtype=None, backend=backward_backend_for(cfg.backend))
 
     # d(-0.5[-u_y^T Khat u_y + (1/t) sum_i u_i^T Khat P^{-1}z_i])/d(theta, X)
-    g_params, g_X = operator_mll_quad_grads(
-        lambda x: make_operator(bwd_cfg, x, params), X, u_y, U, pinv_z)
+    with named_scope("eq2_backward"):
+        g_params, g_X = operator_mll_quad_grads(
+            lambda x: make_operator(bwd_cfg, x, params), X, u_y, U, pinv_z)
     # mean parameter: d mll / d mu = sum(u_y); noise & kernel already covered.
     g_params = g_params._replace(
         raw_mean=g_params.raw_mean + jnp.sum(u_y))

@@ -52,6 +52,11 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+# opt-in HLO name scopes (null contexts unless REPRO_OBS_PROFILE is on);
+# device-side accounting leaves via PCGResult.iterations — returned aux,
+# never host callbacks on the jit path (see repro.obs)
+from repro.obs.profiling import named_scope
+
 
 class SolveState(NamedTuple):
     """Portable warm-start state for a linear system that recurs across
@@ -155,11 +160,13 @@ def pcg(
     if allreduce is None:
         allreduce = _identity
     if method == "standard":
-        return _pcg_standard(mvm, B, precond_solve, max_iters, min_iters, tol,
-                             allreduce, x0, fused_mvm)
+        with named_scope("pcg"):
+            return _pcg_standard(mvm, B, precond_solve, max_iters, min_iters,
+                                 tol, allreduce, x0, fused_mvm)
     if method == "pipelined":
-        return _pcg_pipelined(mvm, B, precond_solve, max_iters, min_iters, tol,
-                              allreduce, x0, fused_mvm)
+        with named_scope("pcg"):
+            return _pcg_pipelined(mvm, B, precond_solve, max_iters, min_iters,
+                                  tol, allreduce, x0, fused_mvm)
     raise ValueError(f"unknown PCG method {method!r}")
 
 
@@ -198,7 +205,8 @@ def _pcg_standard(mvm, B, precond_solve, max_iters, min_iters, tol, allreduce,
     def body(carry, j):
         u, r, z, p, rz = carry
         if fused_mvm is None:
-            Kp = mvm(p)
+            with named_scope("pcg.matvec"):
+                Kp = mvm(p)
             # reduction 1: <p, Kp> and <r, r> fused
             red1 = allreduce(
                 jnp.stack([jnp.sum(p * Kp, 0), jnp.sum(r * r, 0)]))
@@ -206,7 +214,8 @@ def _pcg_standard(mvm, B, precond_solve, max_iters, min_iters, tol, allreduce,
         else:
             # megakernel step: the MVM epilogue already holds the row tiles
             # of Kp in VMEM — <p, Kp> and <r, r> come out of the same launch
-            Kp, dots = fused_mvm(p, r)
+            with named_scope("pcg.fused_step"):
+                Kp, dots = fused_mvm(p, r)
             red1 = allreduce(dots.astype(dtype))
             pKp, r_norm2 = red1[0], red1[2]
         rel = jnp.sqrt(r_norm2 / b_norm2)
@@ -248,9 +257,11 @@ def _pcg_pipelined(mvm, B, precond_solve, max_iters, min_iters, tol, allreduce,
         structure makes ALL three reductions formable alongside the MVM,
         so with an operator megakernel a warm iteration is one launch."""
         if fused_mvm is None:
-            w_ = mvm(u_)
+            with named_scope("pcg.matvec"):
+                w_ = mvm(u_)
             return (w_,) + fused(r_, u_, w_)
-        w_, dots = fused_mvm(u_, r_)
+        with named_scope("pcg.fused_step"):
+            w_, dots = fused_mvm(u_, r_)
         red = allreduce(dots.astype(dtype))
         return w_, red[1], red[0], red[2]
 

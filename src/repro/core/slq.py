@@ -24,8 +24,20 @@ no ragged handling.
 
 from __future__ import annotations
 
+from typing import NamedTuple
+
 import jax
 import jax.numpy as jnp
+
+
+class SLQAux(NamedTuple):
+    """Probe accounting for the standalone estimator — returned aux, the
+    only way device-side counts reach the obs metrics registry (no host
+    callbacks on the jit path; see `repro.obs`)."""
+
+    iterations: jax.Array    # (t,) CG iterations applied per probe
+    rel_residual: jax.Array  # (t,) final relative residual per probe
+    num_probes: int
 
 
 def lanczos_tridiag_from_coeffs(
@@ -87,7 +99,8 @@ def slq_logdet(
     max_iters: int = 100,
     tol: float = 1e-8,
     method: str = "standard",
-) -> jax.Array:
+    with_aux: bool = False,
+):
     """Standalone SLQ estimate of logdet(K_hat) from a KernelOperator.
 
     Runs one mBCG solve on probes z ~ N(0, P) drawn from the operator's
@@ -98,6 +111,10 @@ def slq_logdet(
     `repro.core.pcg`). This is the logdet the MLL forward gets for free
     from its shared solve (`repro.core.mll`); use this entry point when
     only the log-determinant is needed (e.g. model comparison, ablations).
+
+    With `with_aux=True` also returns an `SLQAux` carrying per-probe CG
+    iteration counts and final residuals as device arrays — jit-safe
+    accounting the caller feeds to the obs registry after fencing.
     """
     from .pcg import pcg  # local import: pcg has no slq dependency
 
@@ -105,8 +122,14 @@ def slq_logdet(
     probes = precond.sample(key, num_probes, dtype=op.dtype)
     res = pcg(op, probes, precond.solve, max_iters=max_iters,
               min_iters=3, tol=tol, method=method)
-    return precond.logdet() + slq_logdet_correction(
+    logdet = precond.logdet() + slq_logdet_correction(
         res.alphas, res.betas, res.active, res.rz0)
+    if with_aux:
+        aux = SLQAux(iterations=res.iterations,
+                     rel_residual=res.rel_residual,
+                     num_probes=num_probes)
+        return logdet, aux
+    return logdet
 
 
 def exact_logdet(A: jax.Array) -> jax.Array:

@@ -46,6 +46,8 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro import obs
+
 # Sweep order is part of the determinism contract (ties break earliest).
 # Small on purpose: 5 candidates x ~3 timed reps per cache miss.
 DEFAULT_CANDIDATES: tuple[tuple[int, int], ...] = (
@@ -164,6 +166,7 @@ def autotune_tiles(
                     compute_dtype=compute_dtype, interpret=interpret)
     h = key_hash(key)
     if h in _MEMO:
+        obs.counter("autotune.hits").inc()
         return _MEMO[h]
 
     cdir = cache_dir if cache_dir is not None else default_cache_dir()
@@ -173,6 +176,7 @@ def autotune_tiles(
             entry = json.load(f)
         choice = (int(entry["bm"]), int(entry["bn"]))
         _MEMO[h] = choice
+        obs.counter("autotune.hits").inc()
         return choice
     except (OSError, ValueError, KeyError):
         pass
@@ -182,20 +186,32 @@ def autotune_tiles(
         # tracers. Fall back to the static defaults and do NOT memoize,
         # so a later eager call (prewarm) can still run the sweep.
         from repro.kernels.kmvm import DEFAULT_BM, DEFAULT_BN
+        obs.counter("autotune.trace_fallbacks").inc()
         return DEFAULT_BM, DEFAULT_BN
 
+    # miss: sweep. The historical code swallowed the outcome (the winner,
+    # the timings, and the cost of finding it were invisible outside the
+    # JSON file); the registry + span now carry it to obs_report.
+    obs.counter("autotune.misses").inc()
     if measure is None:
         measure = _default_measure(key)
     cands = candidates if candidates is not None else DEFAULT_CANDIDATES
     timings = {}
     best = None
-    for bm, bn in cands:
-        secs = float(measure(bm, bn))
-        timings[f"{bm}x{bn}"] = secs
-        # strict < : ties break toward the earliest candidate in the sweep
-        if best is None or secs < best[0]:
-            best = (secs, bm, bn)
+    sweep_t0 = time.perf_counter()
+    with obs.span("autotune_sweep", candidates=len(cands),
+                  m=key["m"], n=key["n"]) as sp:
+        for bm, bn in cands:
+            secs = float(measure(bm, bn))
+            timings[f"{bm}x{bn}"] = secs
+            # strict < : ties break toward the earliest candidate in sweep
+            if best is None or secs < best[0]:
+                best = (secs, bm, bn)
+        sp.set(bm=best[1], bn=best[2])
     choice = (best[1], best[2])
+    sweep_ms = (time.perf_counter() - sweep_t0) * 1e3
+    obs.counter("autotune.sweeps").inc()
+    obs.histogram("autotune.sweep_ms").observe(sweep_ms)
 
     os.makedirs(cdir, exist_ok=True)
     tmp = path + f".tmp.{os.getpid()}"

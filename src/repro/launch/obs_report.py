@@ -1,0 +1,59 @@
+"""obs_report — turn a span-trace JSONL into the paper-Table-2-style table.
+
+    PYTHONPATH=src python -m repro.launch.obs_report trace.jsonl \
+        [--root fit_exact_gp] [--json]
+
+Input is what `repro.obs` tracing writes (REPRO_OBS_TRACE=trace.jsonl, or
+`obs.trace_session(path)` around any entry point — e.g. `repro.launch.train
+--obs-trace`). Output: the per-phase wall-clock breakdown (self-time
+attribution, so phase rows partition the root span's duration exactly —
+untracked host time appears as "(self)" rows, never silently) plus the
+metrics-registry snapshot the trace carries (CG iteration totals, solver
+step modes, autotune hit/miss/sweep, serve distributions).
+
+The same JSONL loads in Perfetto / chrome://tracing after
+`jq -s . trace.jsonl > trace.json` for a visual timeline.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.obs.report import (
+    assign_self_times,
+    format_report,
+    load_trace,
+    phase_breakdown,
+)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        prog="obs_report",
+        description="Per-phase breakdown of a repro.obs trace JSONL")
+    ap.add_argument("trace", help="trace JSONL written by repro.obs")
+    ap.add_argument("--root", default="fit_exact_gp",
+                    help="span name treated as the wall-clock root "
+                         "(default: fit_exact_gp; falls back to the trace "
+                         "extent when absent)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the breakdown as JSON instead of markdown")
+    args = ap.parse_args(argv)
+
+    if args.json:
+        events, metrics = load_trace(args.trace)
+        spans = assign_self_times(events)
+        rows, wall = phase_breakdown(spans, root=args.root)
+        print(json.dumps({
+            "trace": args.trace,
+            "wall_ms": wall,
+            "phases": [r._asdict() for r in rows],
+            "metrics": metrics,
+        }, indent=1))
+    else:
+        print(format_report(args.trace, root=args.root))
+
+
+if __name__ == "__main__":
+    main()

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import ExactGP, ExactGPConfig
 from repro.core.predcache import predict_mean, predict_var_cached
 from repro.data import make_regression_dataset
@@ -142,14 +143,19 @@ def main():
         wall = time.perf_counter() - t0
     batcher.close()
 
-    p50, p99 = np.percentile(lats, (50, 99)) * 1e3
+    s = obs.latency_summary(lats, wall)
     print(f"[serve-gp] {args.requests} requests x {ppr} pts "
           f"({args.clients} clients, backend={args.backend}, "
-          f"chunk={args.chunk}): p50={p50:.1f} ms p99={p99:.1f} ms "
-          f"qps={args.requests / wall:.1f}")
+          f"chunk={args.chunk}): p50={s['p50_ms']:.1f} ms "
+          f"p99={s['p99_ms']:.1f} ms qps={s['qps']:.1f}")
     print(f"[serve-gp] {batcher.batches_run} device launches, "
           f"{batcher.requests_served / max(batcher.batches_run, 1):.1f} "
           f"req/launch, {batcher.rows_padded} padded rows")
+    bh = obs.histogram("serve.batch_rows").summary()
+    if bh["count"]:
+        print(f"[serve-gp] batch rows: p50={bh['p50']:.0f} "
+              f"p99={bh['p99']:.0f} max={bh['max']:.0f} "
+              f"(n={bh['count']})")
 
 
 if __name__ == "__main__":

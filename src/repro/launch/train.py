@@ -62,8 +62,18 @@ def main():
     ap.add_argument("--save-artifact", default="",
                     help="directory: persist a servable repro.serve "
                          "PosteriorArtifact after GP training")
+    ap.add_argument("--obs-trace", default="",
+                    help="path: write a repro.obs span-trace JSONL for this "
+                         "run (render with `python -m repro.launch."
+                         "obs_report <path>`); equivalent to setting "
+                         "REPRO_OBS_TRACE")
     args = ap.parse_args()
     _maybe_init_distributed()
+
+    if args.obs_trace:
+        from repro import obs
+
+        obs.enable_tracing(args.obs_trace)
 
     if args.arch == "gp-exact-1m":
         return _train_gp(args)

@@ -1,0 +1,67 @@
+"""`repro.obs` — unified tracing, metrics, and profiling for the GP spine.
+
+One observability surface for the three questions the paper's timing
+claims force: where did this solve spend its WALL CLOCK (span tracing ->
+`repro.launch.obs_report` per-phase tables), what did it COUNT (metrics
+registry: CG iterations, step modes, autotune hits, sparsity fill, serve
+batch distributions), and what did the DEVICE do (opt-in jax.profiler
+bridge). See the submodule docstrings for the contracts; the headline
+one: everything here is a strict no-op on the default path — tracing off
+means identity-wrapped functions and zero events, metrics touch only
+host code after `block_until_ready`, and nothing ever runs inside jit
+(device values arrive via returned aux).
+
+    from repro import obs
+    with obs.trace_session("trace.jsonl"):
+        fit_exact_gp(...)
+    # then: python -m repro.launch.obs_report trace.jsonl
+
+Env knobs: REPRO_OBS_TRACE=<path.jsonl> (enable span tracing),
+REPRO_OBS_PROFILE=1 (enable jax.profiler annotations + memory gauges).
+"""
+
+from .costmodel import StepCost, mll_step_cost
+from .metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    counter,
+    gauge,
+    histogram,
+    latency_summary,
+    record_solver_step,
+    registry,
+)
+from .profiling import (
+    annotate,
+    disable_profiling,
+    enable_profiling,
+    memory_snapshot,
+    named_scope,
+    profile_session,
+    profiling_enabled,
+    step_annotation,
+)
+from .trace import (
+    counter_event,
+    disable_tracing,
+    drain_events,
+    enable_tracing,
+    instant,
+    maybe_wrap,
+    span,
+    trace_session,
+    tracing_enabled,
+)
+
+__all__ = [
+    "StepCost", "mll_step_cost",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "counter", "gauge", "histogram", "latency_summary",
+    "record_solver_step", "registry",
+    "annotate", "disable_profiling", "enable_profiling", "memory_snapshot",
+    "named_scope", "profile_session", "profiling_enabled", "step_annotation",
+    "counter_event", "disable_tracing", "drain_events", "enable_tracing",
+    "instant", "maybe_wrap", "span", "trace_session", "tracing_enabled",
+]

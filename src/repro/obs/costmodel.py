@@ -1,0 +1,110 @@
+"""Modeled kernel-launch and HBM-traffic accounting per MLL solver step.
+
+Mirrors the EXPERIMENTS.md §Roofline napkin math (the same accounting
+`repro.launch.roofline` applies to dry-run HLO) so the metrics registry
+can carry "how many kernel launches / how many modeled HBM bytes did this
+solve cost" without instrumenting the jit path:
+
+* dense / partitioned slab path: the (rb, n) slab is written to HBM once
+  and read back once by the GEMM — 2 * itemsize bytes per kernel-matrix
+  entry per traversal; one launch per row slab.
+* pallas fused path: the slab never reaches HBM; traffic per entry is the
+  Xj/V tile streaming amortized over the bm output rows —
+  itemsize * (d + r) / bm bytes per entry — and the whole (n, n) grid is
+  ONE launch (the megakernel).
+* blocksparse: the partitioned accounting scaled by the plan's fill
+  ratio (work and traffic are pair-proportional by construction).
+
+The CG scan has a FIXED trip count (`lax.scan` over max_iters with
+convergence masking — see `repro.core.pcg`), so the compiled program
+executes max_iters kernel traversals regardless of when columns converge;
+the model charges exactly that (plus one warm-init MVM when x0 is
+seeded). Converged-column masking saves flops via masked updates, not
+traversals. The Eq. 2 backward adds ~2.5 slab-equivalent traversals over
+the merged (t+1)-column quad-form chain (§Roofline "backward accounting").
+
+These are MODELED numbers — a consistent cost ruler across steps and
+backends, not measured hardware counters. `obs_report` labels them so.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+# mirrors repro.kernels.kmvm.DEFAULT_BM (not imported: obs stays
+# dependency-free of the kernels package)
+_DEFAULT_BM = 256
+
+# §Roofline: the merged backward is one quad-form chain of ~2-3 slab
+# passes (slab + VJP residuals); we charge the midpoint.
+BACKWARD_TRAVERSALS = 2.5
+
+
+class StepCost(NamedTuple):
+    launches: int          # device kernel launches for the step's MVMs
+    hbm_bytes: float       # modeled HBM traffic of those traversals
+    traversals: float      # kernel-matrix traversals charged
+
+
+def mll_step_cost(
+    n: int,
+    d: int,
+    num_rhs: int,
+    max_cg_iters: int,
+    *,
+    backend: str = "partitioned",
+    row_block: int = 1024,
+    bm: int | None = None,
+    dtype_bytes: int = 4,
+    fill: float = 1.0,
+    warm_init: bool = False,
+    include_backward: bool = True,
+) -> StepCost:
+    """Modeled launches + HBM bytes for ONE MLL solver step.
+
+    num_rhs: mBCG matmat width r = 1 + num_probes (y rides with the SLQ
+    probes). warm_init: x0 was seeded, adding the r0 = B - K x0 MVM.
+    fill: blocksparse active fraction (1.0 = dense mask).
+    """
+    if bm is None:
+        bm = _DEFAULT_BM
+    fwd_traversals = max_cg_iters + (1 if warm_init else 0)
+    traversals = float(fwd_traversals)
+    if include_backward:
+        traversals += BACKWARD_TRAVERSALS
+
+    entries = float(n) * float(n)
+    if backend in ("dense",):
+        bytes_per_entry = 2.0 * dtype_bytes
+        launches_per_traversal = 1
+    elif backend == "pallas":
+        bytes_per_entry = dtype_bytes * (d + num_rhs) / max(bm, 1)
+        launches_per_traversal = 1
+    elif backend == "blocksparse":
+        entries *= max(min(fill, 1.0), 0.0)
+        bytes_per_entry = 2.0 * dtype_bytes
+        # the gathered grid is one launch; the jnp pair-scan is rolled into
+        # one compiled scan — either way one logical launch per traversal
+        launches_per_traversal = 1
+    else:  # partitioned and sharded-partitioned slabs
+        bytes_per_entry = 2.0 * dtype_bytes
+        launches_per_traversal = max(1, math.ceil(n / max(row_block, 1)))
+
+    # backward always contracts through the partitioned (or blocksparse)
+    # gradient surface at full precision — but the per-entry slab traffic
+    # model is the same 2 * itemsize, already covered by `bytes_per_entry`
+    # for those backends; for pallas the backward ALSO runs the slab path,
+    # so charge its traversals at slab cost.
+    fwd_bytes = entries * bytes_per_entry * fwd_traversals
+    bwd_bytes = 0.0
+    bwd_launches = 0
+    if include_backward:
+        slab_bytes_per_entry = 2.0 * dtype_bytes
+        bwd_bytes = entries * slab_bytes_per_entry * BACKWARD_TRAVERSALS
+        bwd_launches = max(1, math.ceil(n / max(row_block, 1)))
+
+    launches = fwd_traversals * launches_per_traversal + bwd_launches
+    return StepCost(launches=int(launches),
+                    hbm_bytes=fwd_bytes + bwd_bytes,
+                    traversals=traversals)

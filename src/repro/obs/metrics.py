@@ -1,0 +1,280 @@
+"""Metrics registry: counters, gauges, histograms for the GP spine.
+
+A process-global registry of cheap host-side instruments. Unlike tracing
+(`repro.obs.trace`, off by default), metrics are ALWAYS on: every record
+is one Python-level lock + arithmetic op per *step/batch/solve* (never
+per element, never on the jit path), and several consumers are
+load-bearing even without tracing — `GPFitResult.telemetry` sources its
+per-step records here, the serve CLI and latency benchmark share the
+percentile summary helper, and `benchmarks.common.write_rows` embeds a
+snapshot in every BENCH JSON.
+
+Jit discipline: values that originate on device (CG iteration counts,
+residuals) reach the registry exclusively via RETURNED AUX — the engine
+records `aux.cg_iterations` after `block_until_ready`, never through
+host callbacks inside a traced function. That keeps the compiled
+programs bitwise-identical to the uninstrumented ones (pinned by
+tests/test_obs.py trace-count + goldens).
+
+Instrument naming convention: dotted lowercase, subsystem first —
+`cg.iters`, `solver.steps.warm`, `autotune.misses`, `sparse.fill`,
+`serve.batch_rows`. `snapshot()` returns a plain-JSON dict keyed by
+those names (histograms summarize to count/mean/percentiles).
+"""
+
+from __future__ import annotations
+
+import threading
+
+import numpy as np
+
+
+class Counter:
+    """Monotonic accumulator (float to allow byte counts > 2^53 loss-free
+    enough; ints pass through exactly until then)."""
+
+    __slots__ = ("name", "_value", "_lock")
+
+    def __init__(self, name: str):
+        self.name = name
+        self._value = 0
+        self._lock = threading.Lock()
+
+    def inc(self, amount=1):
+        with self._lock:
+            self._value += amount
+
+    @property
+    def value(self):
+        return self._value
+
+    def reset(self):
+        with self._lock:
+            self._value = 0
+
+    def snapshot(self):
+        return self._value
+
+
+class Gauge:
+    """Last-write-wins sample (fill ratios, queue depths, memory bytes)."""
+
+    __slots__ = ("name", "_value", "_lock")
+
+    def __init__(self, name: str):
+        self.name = name
+        self._value = None
+        self._lock = threading.Lock()
+
+    def set(self, value):
+        with self._lock:
+            self._value = value
+
+    @property
+    def value(self):
+        return self._value
+
+    def reset(self):
+        with self._lock:
+            self._value = None
+
+    def snapshot(self):
+        return self._value
+
+
+class Histogram:
+    """Raw-sample histogram with percentile summaries.
+
+    Stores samples exactly up to `max_samples`, then decimates by keeping
+    every other sample and doubling the stride — a deterministic reservoir
+    that preserves order statistics well at the scales this repo records
+    (per-step, per-batch observations; thousands, not billions).
+    """
+
+    __slots__ = ("name", "_samples", "_stride", "_seen", "_sum", "_lock",
+                 "max_samples")
+
+    def __init__(self, name: str, max_samples: int = 65536):
+        self.name = name
+        self.max_samples = max_samples
+        self._samples: list[float] = []
+        self._stride = 1
+        self._seen = 0
+        self._sum = 0.0
+        self._lock = threading.Lock()
+
+    def observe(self, value) -> None:
+        with self._lock:
+            v = float(value)
+            self._sum += v
+            if self._seen % self._stride == 0:
+                self._samples.append(v)
+                if len(self._samples) >= self.max_samples:
+                    self._samples = self._samples[::2]
+                    self._stride *= 2
+            self._seen += 1
+
+    def observe_many(self, values) -> None:
+        for v in np.asarray(values).ravel():
+            self.observe(v)
+
+    @property
+    def count(self) -> int:
+        return self._seen
+
+    @property
+    def sum(self) -> float:
+        return self._sum
+
+    def percentiles(self, qs=(50, 99)):
+        with self._lock:
+            if not self._samples:
+                return tuple(float("nan") for _ in qs)
+            arr = np.asarray(self._samples)
+        return tuple(float(np.percentile(arr, q)) for q in qs)
+
+    def reset(self):
+        with self._lock:
+            self._samples = []
+            self._stride = 1
+            self._seen = 0
+            self._sum = 0.0
+
+    def summary(self) -> dict:
+        p50, p90, p99 = self.percentiles((50, 90, 99))
+        mx = max(self._samples) if self._samples else float("nan")
+        return {
+            "count": self._seen,
+            "sum": self._sum,
+            "mean": self._sum / self._seen if self._seen else float("nan"),
+            "p50": p50,
+            "p90": p90,
+            "p99": p99,
+            "max": mx,
+        }
+
+    def snapshot(self):
+        return self.summary()
+
+
+class MetricsRegistry:
+    """Name -> instrument map; `counter`/`gauge`/`histogram` are
+    get-or-create (idempotent, so call sites never coordinate)."""
+
+    def __init__(self):
+        self._instruments: dict[str, object] = {}
+        self._lock = threading.Lock()
+
+    def _get(self, name: str, cls):
+        with self._lock:
+            inst = self._instruments.get(name)
+            if inst is None:
+                inst = cls(name)
+                self._instruments[name] = inst
+            elif not isinstance(inst, cls):
+                raise TypeError(
+                    f"metric {name!r} already registered as "
+                    f"{type(inst).__name__}, not {cls.__name__}")
+            return inst
+
+    def counter(self, name: str) -> Counter:
+        return self._get(name, Counter)
+
+    def gauge(self, name: str) -> Gauge:
+        return self._get(name, Gauge)
+
+    def histogram(self, name: str) -> Histogram:
+        return self._get(name, Histogram)
+
+    def snapshot(self) -> dict:
+        """Plain-JSON view of every instrument (sorted by name)."""
+        with self._lock:
+            items = sorted(self._instruments.items())
+        return {name: inst.snapshot() for name, inst in items}
+
+    def reset(self, prefix: str = "") -> None:
+        """Zero every instrument whose name starts with `prefix`."""
+        with self._lock:
+            items = list(self._instruments.values())
+        for inst in items:
+            if inst.name.startswith(prefix):
+                inst.reset()
+
+
+_REGISTRY = MetricsRegistry()
+
+
+def registry() -> MetricsRegistry:
+    return _REGISTRY
+
+
+def counter(name: str) -> Counter:
+    return _REGISTRY.counter(name)
+
+
+def gauge(name: str) -> Gauge:
+    return _REGISTRY.gauge(name)
+
+
+def histogram(name: str) -> Histogram:
+    return _REGISTRY.histogram(name)
+
+
+def latency_summary(latencies_s, wall_s: float | None = None) -> dict:
+    """The shared p50/p99/QPS summary the serve CLI inlined pre-obs.
+
+    latencies_s: per-request wall seconds; wall_s: total elapsed seconds
+    for the request set (QPS denominator; omit to skip qps).
+    Returns ms-scaled percentiles, mean, count, and qps.
+    """
+    lats = np.asarray(latencies_s, dtype=np.float64)
+    if lats.size == 0:
+        return {"count": 0, "p50_ms": float("nan"), "p99_ms": float("nan"),
+                "mean_ms": float("nan"), "qps": float("nan")}
+    p50, p99 = np.percentile(lats, (50, 99)) * 1e3
+    out = {
+        "count": int(lats.size),
+        "p50_ms": float(p50),
+        "p99_ms": float(p99),
+        "mean_ms": float(lats.mean() * 1e3),
+        "qps": float(lats.size / wall_s) if wall_s else float("nan"),
+    }
+    return out
+
+
+def record_solver_step(*, mode: str, iters_per_rhs, drift: float,
+                       seconds: float, launches: int | None = None,
+                       hbm_bytes: float | None = None,
+                       reg: MetricsRegistry | None = None) -> dict:
+    """Record one MLL solver step into the registry and return the
+    telemetry dict (`GPFitResult.telemetry` entry — shape-compatible
+    with the pre-obs bare dicts, extended with per-RHS iteration counts
+    and the modeled MVM cost).
+
+    iters_per_rhs: the per-column iteration counts from the solve's
+    returned aux (MLLAux.cg_iterations) — host-concrete by now.
+    """
+    r = reg if reg is not None else _REGISTRY
+    iters = np.asarray(iters_per_rhs).ravel()
+    total = int(iters.sum())
+    r.counter(f"solver.steps.{mode}").inc()
+    r.counter("cg.iters").inc(total)
+    h = r.histogram("cg.iters_per_rhs")
+    for it in iters:
+        h.observe(int(it))
+    r.histogram("solver.step_seconds").observe(seconds)
+    entry = {
+        "mode": mode,
+        "refreshed": mode != "warm",
+        "cg_iters": total,
+        "cg_iters_per_rhs": [int(i) for i in iters],
+        "drift": drift,
+        "seconds": seconds,
+    }
+    if launches is not None:
+        r.counter("mvm.matmat_launches").inc(int(launches))
+        entry["mvm_launches"] = int(launches)
+    if hbm_bytes is not None:
+        r.counter("mvm.hbm_bytes_modeled").inc(float(hbm_bytes))
+        entry["hbm_bytes_modeled"] = float(hbm_bytes)
+    return entry

@@ -30,6 +30,8 @@ from typing import NamedTuple
 
 import numpy as np
 
+from repro import obs
+
 
 class BatcherConfig(NamedTuple):
     """max_batch: rows that close a batch immediately once reached.
@@ -45,6 +47,7 @@ class BatcherConfig(NamedTuple):
 class _Request(NamedTuple):
     X: np.ndarray
     future: Future
+    t_enq: float = 0.0  # monotonic enqueue time (serve.request_wait_ms)
 
 
 _SENTINEL = None  # queue poison pill
@@ -80,7 +83,7 @@ class MicroBatcher:
         if X.ndim == 1:
             X = X[None, :]
         f: Future = Future()
-        self._q.put(_Request(X, f))
+        self._q.put(_Request(X, f, time.monotonic()))
         return f
 
     def predict(self, Xstar, timeout: float | None = None):
@@ -148,13 +151,26 @@ class MicroBatcher:
 
     def _run_batch(self, batch: list) -> None:
         try:
+            # batch-close accounting: the size/wait distributions and the
+            # backlog left behind are the serve path's tuning surface
+            # (BatcherConfig max_batch / max_wait_ms / buckets)
+            now = time.monotonic()
+            obs.gauge("serve.queue_depth").set(self._q.qsize())
+            obs.histogram("serve.batch_requests").observe(len(batch))
+            wait_h = obs.histogram("serve.request_wait_ms")
+            for r in batch:
+                wait_h.observe((now - r.t_enq) * 1e3)
             X = np.concatenate([r.X for r in batch], axis=0)
             rows = X.shape[0]
             padded = self._bucket_rows(rows)
+            obs.histogram("serve.batch_rows").observe(rows)
+            obs.histogram("serve.batch_pad_rows").observe(padded - rows)
             Xp = np.zeros((padded,) + X.shape[1:], X.dtype)
             Xp[:rows] = X
-            mean, var = self.engine.predict(Xp)
-            mean, var = np.asarray(mean), np.asarray(var)
+            with obs.span("serve_batch", requests=len(batch), rows=rows,
+                          padded=padded):
+                mean, var = self.engine.predict(Xp)
+                mean, var = np.asarray(mean), np.asarray(var)
             offset = 0
             for r in batch:
                 m = r.X.shape[0]

@@ -26,10 +26,13 @@ predict path.
 
 from __future__ import annotations
 
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.operators import make_operator
 from repro.core.partitioned import map_row_chunks
 from repro.core.predcache import predict_mean, predict_var_cached
@@ -110,25 +113,32 @@ class PredictionEngine:
 
     def predict(self, Xstar) -> tuple[jax.Array, jax.Array]:
         """(mean, var) for (m, d) query points; any m, one compiled shape."""
-        Xstar = jnp.asarray(Xstar, self.op.dtype)
-        if Xstar.ndim == 1:
-            Xstar = Xstar[None, :]
-        m = Xstar.shape[0]
-        order = None
-        if self.sort_queries and m > 1:
-            # spatially local chunks let the blocksparse operator skip
-            # cross-covariance tiles; results return in request order
-            from repro.sparse import morton_order
+        t0 = time.perf_counter()
+        with obs.span("serve_predict"):
+            Xstar = jnp.asarray(Xstar, self.op.dtype)
+            if Xstar.ndim == 1:
+                Xstar = Xstar[None, :]
+            m = Xstar.shape[0]
+            order = None
+            if self.sort_queries and m > 1:
+                # spatially local chunks let the blocksparse operator skip
+                # cross-covariance tiles; results return in request order
+                from repro.sparse import morton_order
 
-            order = morton_order(np.asarray(Xstar))
-            Xstar = Xstar[jnp.asarray(order)]
-        out = map_row_chunks(self._predict_chunk, Xstar, self.chunk_size)
-        if order is not None:
-            inv = np.empty_like(order)
-            inv[order] = np.arange(m, dtype=order.dtype)
-            out = jax.tree.map(lambda a: a[jnp.asarray(inv)], out)
+                order = morton_order(np.asarray(Xstar))
+                Xstar = Xstar[jnp.asarray(order)]
+            out = map_row_chunks(self._predict_chunk, Xstar, self.chunk_size)
+            if order is not None:
+                inv = np.empty_like(order)
+                inv[order] = np.arange(m, dtype=order.dtype)
+                out = jax.tree.map(lambda a: a[jnp.asarray(inv)], out)
+            if obs.tracing_enabled():
+                jax.block_until_ready(out)
         self.chunks_run += -(-max(m, 1) // self.chunk_size)
         self.rows_served += m
+        obs.histogram("serve.predict_ms").observe(
+            (time.perf_counter() - t0) * 1e3)
+        obs.histogram("serve.predict_rows").observe(m)
         return out
 
     def predict_mean(self, Xstar) -> jax.Array:

@@ -37,6 +37,7 @@ import math
 import jax
 import numpy as np
 
+from repro import obs
 from repro.core.kernels_math import (
     TAPER_KINDS,
     canonicalize_kernel,
@@ -229,7 +230,7 @@ def build_plan(kernel, X, params, *, tile: int = 256, margin: float = 0.1,
         row_valid[t, :sel.shape[0]] = True
 
     params_ref = jax.tree.map(lambda a: np.asarray(a), params)
-    return SparsePlan(
+    plan = SparsePlan(
         n=n, d=d, tile=tile, perm=perm, inv_perm=inv_perm,
         box_lo=np.asarray(box_lo, np.float32),
         box_hi=np.asarray(box_hi, np.float32),
@@ -237,6 +238,14 @@ def build_plan(kernel, X, params, *, tile: int = 256, margin: float = 0.1,
         row_cols=row_cols, row_valid=row_valid,
         support=support, support_planned=support_planned, margin=margin,
         params_ref=params_ref)
+    # host-side accounting: the MVM cost story of the sparse backend IS
+    # the fill ratio — surface it next to the solver counters
+    obs.counter("sparse.plans_built").inc()
+    obs.gauge("sparse.fill").set(plan.fill)
+    obs.gauge("sparse.active_pairs").set(plan.num_pairs)
+    obs.instant("sparse_plan", n=plan.n, tile=plan.tile,
+                pairs=plan.num_pairs, fill=plan.fill)
+    return plan
 
 
 def needs_replan(plan: SparsePlan, params, threshold: float | None = None,

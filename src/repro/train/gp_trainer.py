@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.gp import ExactGP, ExactGPConfig
 from repro.core.kernels_math import GPParams
 from repro.core.sgpr import SGPRParams, init_sgpr_params, sgpr_loss
@@ -80,14 +81,30 @@ def fit_exact_gp(gp: ExactGP, X, y, *, cfg: GPTrainConfig = GPTrainConfig(),
     preconditioner — is carried across optimizer steps on whatever
     KernelOperator backend `gp.config.backend` selects, per the
     cfg.refresh_every / cfg.drift_threshold schedule. Per-step telemetry
-    lands in GPFitResult.telemetry.
+    lands in GPFitResult.telemetry (registry-backed records — see
+    `repro.obs.metrics.record_solver_step`).
 
     backend="blocksparse" (compactly-supported specs, `repro.sparse`):
     each stage plans the block mask for its own inputs, and the full-data
     loop replans whenever hyperparameter drift exceeds
     cfg.drift_threshold — the mask's margin — so the support radius can
     train freely while MVMs stay fill-proportional and exact.
+
+    Observability: under `obs.trace_session` (or REPRO_OBS_TRACE) the fit
+    emits a `fit_exact_gp` root span with per-stage children and, inside
+    the full-data stages, per-phase solver spans (the engine's phased
+    dispatch) — `python -m repro.launch.obs_report` turns the file into
+    the per-phase table. All of it is a no-op by default.
     """
+    with obs.span("fit_exact_gp", method=method, n=int(X.shape[0]),
+                  backend=gp.config.backend):
+        return _fit_exact_gp(gp, X, y, cfg=cfg, method=method,
+                             noise_init=noise_init, verbose=verbose,
+                             save_artifact=save_artifact)
+
+
+def _fit_exact_gp(gp, X, y, *, cfg, method, noise_init, verbose,
+                  save_artifact) -> GPFitResult:
     t0 = time.time()
     key = jax.random.PRNGKey(cfg.seed)
     n, d = X.shape
@@ -135,17 +152,20 @@ def fit_exact_gp(gp: ExactGP, X, y, *, cfg: GPTrainConfig = GPTrainConfig(),
 
     def run_full_data_stage(steps, lr, params, tag):
         nonlocal key
-        gp_s = stage_gp(X, params)
+        obs.memory_snapshot(f"{tag}_start")
+        with obs.span("sparse_plan", stage=tag):
+            gp_s = stage_gp(X, params)
         if gp_s.config.backend == "pallas" and gp_s.config.autotune:
             # resolve (and persist) the full-data-shape Pallas tiles OUTSIDE
             # jit: the sweep's wall time lands here, in setup, instead of
             # inside the first traced MLL step
             from repro.kernels.autotune import prewarm
 
-            bm, bn = prewarm(
-                gp_s.config.kernel, params, n, d,
-                num_probes=gp_s.config.num_probes,
-                compute_dtype=gp_s.config.compute_dtype)
+            with obs.span("autotune", stage=tag):
+                bm, bn = prewarm(
+                    gp_s.config.kernel, params, n, d,
+                    num_probes=gp_s.config.num_probes,
+                    compute_dtype=gp_s.config.compute_dtype)
             if verbose:
                 print(f"  {tag}: autotuned Pallas tiles (bm, bn) = "
                       f"({bm}, {bn})")
@@ -167,10 +187,11 @@ def fit_exact_gp(gp: ExactGP, X, y, *, cfg: GPTrainConfig = GPTrainConfig(),
                     kernel=gp_s.config.kernel)
                 if replan:
                     telem.extend(engine.telemetry)
-                    plan = build_plan(
-                        gp_s.config.kernel, X, params,
-                        tile=gp_s.config.plan.tile,
-                        margin=cfg.drift_threshold)
+                    with obs.span("sparse_replan", stage=tag, step=i):
+                        plan = build_plan(
+                            gp_s.config.kernel, X, params,
+                            tile=gp_s.config.plan.tile,
+                            margin=cfg.drift_threshold)
                     gp_s = ExactGP(gp_s.config._replace(plan=plan))
                     engine = WarmStartEngine(gp_s.config.mll_config(),
                                              cfg.warm_config())
@@ -178,8 +199,12 @@ def fit_exact_gp(gp: ExactGP, X, y, *, cfg: GPTrainConfig = GPTrainConfig(),
                         print(f"  {tag} {i}: replanned sparsity "
                               f"(drift={drift:.3f}, fill={plan.fill:.3f})")
             key, k = jax.random.split(key)
-            val, aux, g = engine.step(X, y, params, k)
-            params, state = adam_update(params, g, state, lr)
+            with obs.step_annotation(i):
+                val, aux, g = engine.step(X, y, params, k)
+                with obs.span("optimizer_step", stage=tag, step=i):
+                    params, state = adam_update(params, g, state, lr)
+                    if obs.tracing_enabled():
+                        jax.block_until_ready(params)
             trace.append(float(val))
             if verbose and (steps <= 10 or i % 10 == 0):
                 t = engine.telemetry[-1]
@@ -187,6 +212,7 @@ def fit_exact_gp(gp: ExactGP, X, y, *, cfg: GPTrainConfig = GPTrainConfig(),
                       f"[{t['mode']} cg_iters={t['cg_iters']} "
                       f"dt={t['seconds']:.2f}s]")
         telem.extend(engine.telemetry)
+        obs.memory_snapshot(f"{tag}_end")
         return params, tuple(telem)
 
     if method == "pretrain":
@@ -198,20 +224,28 @@ def fit_exact_gp(gp: ExactGP, X, y, *, cfg: GPTrainConfig = GPTrainConfig(),
         loss_sub = make_loss(subset_gp(), Xs, ys)
 
         key, k_lbfgs = jax.random.split(key)
-        params, tr = lbfgs_minimize(
-            lambda p: loss_sub(p, k_lbfgs), params,
-            max_steps=cfg.pretrain_lbfgs_steps, verbose=verbose)
+        with obs.span("pretrain_lbfgs", subset=int(m)):
+            params, tr = lbfgs_minimize(
+                lambda p: loss_sub(p, k_lbfgs), params,
+                max_steps=cfg.pretrain_lbfgs_steps, verbose=verbose)
+            if obs.tracing_enabled():
+                jax.block_until_ready(params)
         trace += tr
 
         vg = jax.jit(jax.value_and_grad(loss_sub))
         state = adam_init(params)
-        for i in range(cfg.pretrain_adam_steps):
-            key, k = jax.random.split(key)
-            val, g = vg(params, k)
-            params, state = adam_update(params, g, state, cfg.pretrain_adam_lr)
-            trace.append(float(val))
-            if verbose:
-                print(f"  pretrain adam {i}: {float(val):.5f}")
+        with obs.span("pretrain_adam", subset=int(m)):
+            for i in range(cfg.pretrain_adam_steps):
+                key, k = jax.random.split(key)
+                val, g = vg(params, k)
+                params, state = adam_update(params, g, state,
+                                            cfg.pretrain_adam_lr)
+                trace.append(float(val))
+                if verbose:
+                    print(f"  pretrain adam {i}: {float(val):.5f}")
+            if obs.tracing_enabled():
+                jax.block_until_ready(params)
+        obs.memory_snapshot("pretrain_end")
 
         # --- stage 2: few-step finetune on the full data (warm-started) ---
         params, telemetry = run_full_data_stage(
@@ -234,11 +268,12 @@ def fit_exact_gp(gp: ExactGP, X, y, *, cfg: GPTrainConfig = GPTrainConfig(),
         # hyperparameters — any training-time plan is stale by now
         gp_art = ExactGP(c._replace(plan=None)) \
             if c.backend == "blocksparse" else gp
-        art = fit_posterior(
-            gp_art.operator(X, params), y, k_art,
-            precond_rank=c.precond_rank, lanczos_rank=c.lanczos_rank,
-            pred_tol=c.pred_cg_tol, max_cg_iters=c.pred_max_cg_iters)
-        path = _save_artifact(save_artifact, art)
+        with obs.span("save_artifact"):
+            art = fit_posterior(
+                gp_art.operator(X, params), y, k_art,
+                precond_rank=c.precond_rank, lanczos_rank=c.lanczos_rank,
+                pred_tol=c.pred_cg_tol, max_cg_iters=c.pred_max_cg_iters)
+            path = _save_artifact(save_artifact, art)
         if verbose:
             print(f"  saved posterior artifact: {path} "
                   f"(rel_residual={art.meta['solve_rel_residual']:.2e})")

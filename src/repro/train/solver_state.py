@@ -41,6 +41,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+from repro.core.kernels_math import constant_mean
 from repro.core.mll import (
     MLLAux,
     MLLConfig,
@@ -48,7 +50,8 @@ from repro.core.mll import (
     operator_mll_forward,
 )
 from repro.core.operators import make_operator
-from repro.core.pcg import SolveState
+from repro.core.pcg import SolveState, pcg
+from repro.core.slq import slq_logdet_correction
 
 
 class WarmStartConfig(NamedTuple):
@@ -140,6 +143,35 @@ class _WarmEngineBase:
     def _dispatch(self, mode, X, y, params, key):
         raise NotImplementedError
 
+    def _dispatch_phased(self, mode, X, y, params, key):
+        """Tracing-mode dispatch. Subclasses that can split the step into
+        separately-fenced phases (precond / solve / slq / backward)
+        override this; the default is the single-jit step, so the
+        `mll_step` span still times the whole thing."""
+        return self._dispatch(mode, X, y, params, key)
+
+    def _modeled_cost(self, mode, X) -> tuple[int | None, float | None]:
+        """(launches, hbm_bytes) from the §Roofline cost model, or
+        (None, None) when the engine's config doesn't expose the solver
+        geometry (the distributed config differs; stay best-effort)."""
+        cfg = getattr(self, "cfg", None)
+        try:
+            n, d = int(X.shape[0]), int(X.shape[-1])
+            plan = getattr(cfg, "plan", None)
+            cost = obs.mll_step_cost(
+                n, d,
+                num_rhs=1 + int(cfg.num_probes),
+                max_cg_iters=int(cfg.max_cg_iters),
+                backend=getattr(cfg, "backend", "partitioned"),
+                row_block=int(getattr(cfg, "row_block", 1024)),
+                fill=float(getattr(plan, "fill", 1.0)) if plan is not None
+                     else 1.0,
+                warm_init=mode != "cold",
+            )
+            return cost.launches, cost.hbm_bytes
+        except (AttributeError, TypeError, ValueError):
+            return None, None
+
     def _mode(self, params) -> tuple[str, float]:
         if self.state is None or not self.warm.enabled:
             return "cold", 0.0
@@ -150,24 +182,37 @@ class _WarmEngineBase:
         return "warm", drift
 
     def step(self, X, y, params, key):
-        """One MLL evaluation: (loss, MLLAux, g_params). Appends telemetry."""
+        """One MLL evaluation: (loss, MLLAux, g_params). Appends telemetry.
+
+        The telemetry record is sourced from the obs metrics registry
+        (`obs.record_solver_step`) — same keys as the historical bare
+        dicts plus per-RHS iteration counts and the §Roofline-modeled MVM
+        cost. Iteration counts arrive via the RETURNED MLLAux (device
+        aux), never host callbacks; under tracing the step runs through
+        `_dispatch_phased` so the span tree decomposes into phases."""
         t0 = time.perf_counter()
         mode, drift = self._mode(params)
-        loss, aux, g_params, state = self._dispatch(mode, X, y, params, key)
-        jax.block_until_ready(loss)
+        with obs.span("mll_step", mode=mode, drift=float(drift)) as sp:
+            if obs.tracing_enabled():
+                loss, aux, g_params, state = self._dispatch_phased(
+                    mode, X, y, params, key)
+            else:
+                loss, aux, g_params, state = self._dispatch(
+                    mode, X, y, params, key)
+            jax.block_until_ready(loss)
+            iters = np.asarray(aux.cg_iterations)
+            sp.set(cg_iters=int(iters.sum()))
         if self.warm.enabled:
             self.state = state
             if mode != "warm":
                 self._params_ref = params
                 self._steps_since_refresh = 0
             self._steps_since_refresh += 1
-        self.telemetry.append({
-            "mode": mode,
-            "refreshed": mode != "warm",
-            "cg_iters": int(np.sum(np.asarray(aux.cg_iterations))),
-            "drift": drift,
-            "seconds": time.perf_counter() - t0,
-        })
+        launches, hbm_bytes = self._modeled_cost(mode, X)
+        self.telemetry.append(obs.record_solver_step(
+            mode=mode, iters_per_rhs=iters, drift=drift,
+            seconds=time.perf_counter() - t0,
+            launches=launches, hbm_bytes=hbm_bytes))
         return loss, aux, g_params
 
     def reset(self):
@@ -190,6 +235,7 @@ class WarmStartEngine(_WarmEngineBase):
         self.cfg = cfg
         self._fns = {mode: jax.jit(self._make_step(mode))
                      for mode in ("cold", "refresh", "warm")}
+        self._phase_fns: dict[str, dict] = {}  # built lazily (tracing only)
 
     def _dispatch(self, mode, X, y, params, key):
         if mode == "cold":
@@ -237,6 +283,113 @@ class WarmStartEngine(_WarmEngineBase):
             return -value / n, aux, g_params, new_state
 
         return fn
+
+    # -- phased step (tracing mode only) ------------------------------------
+    #
+    # The single-jit step above is one opaque device program — a span
+    # around it can't say how long the preconditioner build vs the CG
+    # iterations vs the Eq. 2 backward took. When tracing is on, the
+    # engine dispatches through four separately-jitted phase functions,
+    # each fenced with block_until_ready inside its own span, so
+    # obs_report's per-phase table decomposes real wall-clock. The phases
+    # run the SAME math as `_make_step` (precond build / mBCG / SLQ
+    # quadrature / Eq. 2 assembly literally share the code paths); only
+    # the jit partitioning differs, which may cost some fusion — that's
+    # the price of attribution, paid only when tracing is enabled.
+
+    def _make_phases(self, mode: str) -> dict:
+        cfg = self.cfg
+        warm_min_iters = self.warm.warm_min_iters
+
+        def precond_fn(X, params, precond_prev=None):
+            op = make_operator(cfg.operator_config(), X, params)
+            if mode == "warm":
+                return op.preconditioner(cfg.precond_rank, reuse=precond_prev)
+            return op.preconditioner(cfg.precond_rank)
+
+        def solve_fn(X, y, params, key, precond, state=None):
+            op = make_operator(cfg.operator_config(), X, params)
+            n = X.shape[0]
+            yc = y - constant_mean(params)
+            if mode == "warm":
+                probes, x0 = state.solve.probes, state.solve.solutions
+                min_iters = warm_min_iters
+            else:
+                probes = precond.sample(key, cfg.num_probes, dtype=yc.dtype)
+                min_iters = cfg.min_cg_iters
+                if mode == "refresh":
+                    x0 = jnp.concatenate(
+                        [state.solve.solutions[:, :1],
+                         jnp.zeros((n, cfg.num_probes), y.dtype)], axis=1)
+                else:
+                    x0 = None
+            B = jnp.concatenate([yc[:, None], probes], axis=1)
+            res = pcg(op, B, precond.solve,
+                      max_iters=cfg.max_cg_iters, min_iters=min_iters,
+                      tol=cfg.cg_tol, method=cfg.pcg_method, x0=x0)
+            pinv_z = precond.solve(probes)
+            quad = op.allreduce(jnp.dot(yc, res.solution[:, 0]))
+            return res, probes, pinv_z, quad
+
+        def slq_fn(precond, alphas, betas, active, rz0):
+            return precond.logdet() + slq_logdet_correction(
+                alphas[:, 1:], betas[:, 1:], active[:, 1:], rz0[1:])
+
+        def backward_fn(X, params, u_y, U, pinv_z):
+            n = X.shape[0]
+            _, _, g_params = operator_mll_backward(
+                cfg, X, params, u_y, U, pinv_z, -1.0 / n)
+            return g_params
+
+        return {"precond": jax.jit(precond_fn),
+                "solve": jax.jit(solve_fn),
+                "slq": jax.jit(slq_fn),
+                "backward": jax.jit(backward_fn)}
+
+    def _dispatch_phased(self, mode, X, y, params, key):
+        fns = self._phase_fns.get(mode)
+        if fns is None:
+            fns = self._phase_fns[mode] = self._make_phases(mode)
+        state = self.state
+        n = X.shape[0]
+
+        with obs.span("precond_build", mode=mode):
+            if mode == "warm":
+                precond = fns["precond"](X, params, state.precond)
+            else:
+                precond = fns["precond"](X, params)
+            jax.block_until_ready(precond)
+
+        with obs.span("cg_solve", mode=mode) as sp:
+            if mode == "cold":
+                res, probes, pinv_z, quad = fns["solve"](
+                    X, y, params, key, precond)
+            else:
+                res, probes, pinv_z, quad = fns["solve"](
+                    X, y, params, key, precond, state)
+            jax.block_until_ready(res.solution)
+            sp.set(cg_iters=int(np.sum(np.asarray(res.iterations))))
+
+        with obs.span("slq_logdet", mode=mode):
+            if mode == "warm":
+                logdet = state.logdet  # carried (see module docstring)
+            else:
+                logdet = fns["slq"](precond, res.alphas, res.betas,
+                                    res.active, res.rz0)
+            jax.block_until_ready(logdet)
+
+        with obs.span("eq2_backward", mode=mode):
+            u_y, U = res.solution[:, 0], res.solution[:, 1:]
+            g_params = fns["backward"](X, params, u_y, U, pinv_z)
+            jax.block_until_ready(g_params)
+
+        value = -0.5 * (quad + logdet + n * np.log(2.0 * np.pi))
+        aux = MLLAux(logdet=logdet, quad=quad,
+                     cg_iterations=res.iterations,
+                     rel_residual=res.rel_residual)
+        new_state = SolverState(solve=res.state._replace(probes=probes),
+                                precond=precond, logdet=logdet)
+        return -value / n, aux, g_params, new_state
 
 
 class DistWarmStartEngine(_WarmEngineBase):
