@@ -5,6 +5,13 @@ the parent keeps one device). Wall-clock on fake CPU devices includes real
 thread-level parallelism across the partitioned MVM, so the SHAPE of the
 scaling curve is observable, if noisy; the dry-run collective analysis is
 the production-scale evidence.
+
+Beyond the paper's 1-D curve, the grid carries a 2-D (rows x cols) row per
+device count plus an overlap ablation column: the ring-pipelined chunked
+contraction vs the serial gather on the SAME layout (bitwise-identical
+results — see core.distributed). On fake CPU devices the overlap delta
+mostly reflects scheduling noise; the modeled exposed-collective-bytes
+story lives in repro.obs.costmodel.dist_collective_cost and EXPERIMENTS.
 """
 
 import json
@@ -23,13 +30,18 @@ from repro.core.distributed import (DistMLLConfig, make_geometry,
                                     make_mll_value_and_grad, replicate,
                                     shard_vector)
 ndev = int(sys.argv[1])
+mode = sys.argv[2]
+overlap = sys.argv[3] == "overlap"
 n, d = 4096, 8
 rng = np.random.default_rng(0)
 X = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
 y = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
 params = init_params(noise=0.2, dtype=jnp.float32)
-mesh = jax.make_mesh((ndev,), ("data",))
-geom = make_geometry(mesh, n, d, mode="1d", row_block=256)
+if mode == "2d" and ndev > 1:
+    mesh = jax.make_mesh((ndev // 2, 2), ("data", "model"))
+else:
+    mesh = jax.make_mesh((ndev,), ("data",))
+geom = make_geometry(mesh, n, d, mode=mode, row_block=256, overlap=overlap)
 cfg = DistMLLConfig(precond_rank=50, num_probes=8, max_cg_iters=20, cg_tol=1.0)
 vg = make_mll_value_and_grad(mesh, geom, cfg)
 args = (replicate(mesh, X), shard_vector(mesh, geom, y),
@@ -44,23 +56,34 @@ print(json.dumps({"ndev": ndev, "step_s": (time.time() - t0) / reps}))
 """
 
 
+def _cell(env, ndev, mode, overlap):
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT, str(ndev), mode,
+         "overlap" if overlap else "serial"],
+        capture_output=True, text=True, env=env, timeout=1200)
+    line = [l for l in out.stdout.splitlines() if l.startswith("{")][-1]
+    return json.loads(line)["step_s"]
+
+
 def run():
     rows = []
     base = None
     env = dict(os.environ, PYTHONPATH="src")
     for ndev in (1, 2, 4, 8):
-        out = subprocess.run([sys.executable, "-c", SCRIPT, str(ndev)],
-                             capture_output=True, text=True, env=env,
-                             timeout=1200)
-        line = [l for l in out.stdout.splitlines() if l.startswith("{")][-1]
-        r = json.loads(line)
+        s_1d = _cell(env, ndev, "1d", False)
+        # 2-D needs a model axis; on 1 device it degenerates to 1-D
+        s_2d = _cell(env, ndev, "2d", False) if ndev > 1 else s_1d
+        s_2d_ov = _cell(env, ndev, "2d", True) if ndev > 1 else s_1d
         if base is None:
-            base = r["step_s"]
-        rows.append([ndev, round(r["step_s"], 3),
-                     round(base / r["step_s"], 2)])
-        print(f"[fig2] {ndev} devices: {r['step_s']:.2f}s/step "
-              f"speedup={base / r['step_s']:.2f}x")
-    write_rows("fig2_multidevice", ["devices", "step_s", "speedup"], rows)
+            base = s_1d
+        rows.append([ndev, round(s_1d, 3), round(base / s_1d, 2),
+                     round(s_2d, 3), round(s_2d_ov, 3)])
+        print(f"[fig2] {ndev} devices: 1d={s_1d:.2f}s/step "
+              f"speedup={base / s_1d:.2f}x 2d={s_2d:.2f}s "
+              f"2d+overlap={s_2d_ov:.2f}s")
+    write_rows("fig2_multidevice",
+               ["devices", "step_s", "speedup", "step_s_2d",
+                "step_s_2d_overlap"], rows)
     return rows
 
 

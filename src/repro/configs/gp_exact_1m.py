@@ -29,6 +29,9 @@ class GPWorkloadConfig(NamedTuple):
     # compute dtype ("bfloat16" = mixed-precision fast path, fp32 accum)
     backend: str = "partitioned"
     compute_dtype: str | None = None
+    # ring-pipeline the per-iteration gather against the tile compute
+    # (collective-matmul chunking; repro.core.distributed overlap path)
+    overlap: bool = False
 
 
 CONFIG = GPWorkloadConfig()

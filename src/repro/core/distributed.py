@@ -49,6 +49,8 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro import obs
+
 from .kernels_math import (
     constant_mean,
     kernel_diag,
@@ -67,41 +69,76 @@ from .mll import operator_mll_forward, operator_mll_quad_grads
 
 
 class DistGeometry(NamedTuple):
-    """Static layout of the distributed engine on a mesh."""
+    """Static layout of the distributed engine on a mesh.
 
-    n: int                      # global training-set size
+    When n does not divide the shard grid the layout is PADDED: arrays carry
+    `n_padded` rows (pad rows zero in X/y), every collective and tile runs on
+    the padded shapes, and a static per-chunk mask confines the solver to the
+    true rows — K_hat_pad = M K M + s2 I is block-diagonal
+    (K_hat_true, s2 I_pad), so masked CG vectors never mix with the pad
+    block and the MLL/gradients cover exactly the n true rows. With
+    `n_pad is None` (n divides) every mask is compiled out and the engine is
+    bitwise-identical to the unpadded layout (golden-pinned).
+    """
+
+    n: int                      # global TRUE training-set size
     d: int                      # input dimension
     row_axes: tuple             # mesh axes sharding kernel ROWS (e.g. ("pod","data"))
     col_axes: tuple             # mesh axes sharding kernel COLUMNS (() = paper 1-D)
     d_row: int                  # prod of row-axis sizes
     d_col: int                  # prod of col-axis sizes (1 in 1-D mode)
     row_block: int = 1024       # inner slab blocking of the local tile
+    n_pad: int | None = None    # padded global size (None = n divides, no pad)
+    overlap: bool = False       # ring-pipeline the gather with tile compute
+    row_sizes: tuple = ()       # per-axis sizes of row_axes (static ring bounds)
+    col_sizes: tuple = ()       # per-axis sizes of col_axes
 
     @property
     def all_axes(self) -> tuple:
         return (*self.row_axes, *self.col_axes)
 
     @property
+    def n_padded(self) -> int:  # array-layout size (== n when no padding)
+        return self.n if self.n_pad is None else self.n_pad
+
+    @property
+    def has_pad(self) -> bool:
+        return self.n_padded != self.n
+
+    @property
+    def pad_rows(self) -> int:
+        return self.n_padded - self.n
+
+    @property
     def n_local(self) -> int:   # CG-vector chunk per device
-        return self.n // (self.d_row * self.d_col)
+        return self.n_padded // (self.d_row * self.d_col)
 
     @property
     def rows_local(self) -> int:  # kernel rows per row-group
-        return self.n // self.d_row
+        return self.n_padded // self.d_row
 
     @property
     def cols_local(self) -> int:  # kernel cols per col-group
-        return self.n // self.d_col
+        return self.n_padded // self.d_col
 
     def vector_pspec(self) -> P:
         return P(self.all_axes)
 
 
 def make_geometry(mesh: Mesh, n: int, d: int, *, mode: str = "2d",
-                  row_block: int = 1024) -> DistGeometry:
+                  row_block: int = 1024, overlap: bool = False,
+                  tile_multiple: int = 1) -> DistGeometry:
     """1d (paper-faithful): rows partitioned over EVERY mesh axis — the
     paper round-robins row blocks over all w devices. 2d (beyond-paper):
-    rows over (pod, data), columns over model."""
+    rows over (pod, data), columns over model.
+
+    Any n runs on any mesh: when n does not divide the shard grid the
+    geometry pads to the next multiple (masked rows — see DistGeometry).
+    `tile_multiple` additionally forces every per-device chunk to hold
+    whole sparsity tiles (blocksparse: pass the plan's tile size).
+    `overlap=True` pipelines the per-iteration gather against the local
+    tile compute (collective-matmul chunking over the contraction axis).
+    """
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     if mode == "1d":
         row_axes = tuple(a for a in ("pod", "data", "model") if a in sizes)
@@ -111,10 +148,29 @@ def make_geometry(mesh: Mesh, n: int, d: int, *, mode: str = "2d",
         col_axes = ("model",) if "model" in sizes else ()
     d_row = int(np.prod([sizes[a] for a in row_axes]))
     d_col = int(np.prod([sizes[a] for a in col_axes])) if col_axes else 1
-    if n % (d_row * d_col):
-        raise ValueError(f"n={n} must divide the mesh ({d_row}x{d_col})")
+    m = d_row * d_col * max(int(tile_multiple), 1)
+    n_padded = -(-n // m) * m
+    n_pad = None if n_padded == n else n_padded
+    if n_pad is not None:
+        obs.gauge("dist.pad_rows").set(n_padded - n)
     return DistGeometry(n=n, d=d, row_axes=row_axes, col_axes=col_axes,
-                        d_row=d_row, d_col=d_col, row_block=row_block)
+                        d_row=d_row, d_col=d_col, row_block=row_block,
+                        n_pad=n_pad, overlap=overlap,
+                        row_sizes=tuple(sizes[a] for a in row_axes),
+                        col_sizes=tuple(sizes[a] for a in col_axes))
+
+
+def pad_to_geometry(geom: DistGeometry, arr: jax.Array) -> jax.Array:
+    """Zero-pad axis 0 from geom.n to geom.n_padded (no-op when n divides).
+
+    Apply to X / y / any full-length vector BEFORE replicate/shard_vector;
+    the pad rows are masked out of every solve, so zeros are just layout.
+    """
+    extra = geom.n_padded - arr.shape[0]
+    if extra <= 0:
+        return arr
+    widths = [(0, extra)] + [(0, 0)] * (arr.ndim - 1)
+    return jnp.pad(arr, widths)
 
 
 # ---------------------------------------------------------------------------
@@ -169,35 +225,165 @@ def _psum_all(geom: DistGeometry, x):
     return jax.lax.psum(x, geom.all_axes)
 
 
+def _chunk_mask(geom: DistGeometry, dtype) -> jax.Array | None:
+    """(n_local,) 1/0 mask of TRUE rows in this device's vector chunk, or
+    None when the geometry has no padding (every mask compiles out — the
+    unpadded path stays bitwise-identical). Pad rows are the global tail,
+    so only trailing chunks carry zeros."""
+    if not geom.has_pad:
+        return None
+    gidx = _chunk_offset(geom) + jnp.arange(geom.n_local)
+    return (gidx < geom.n).astype(dtype)
+
+
 # ---------------------------------------------------------------------------
 # distributed K_hat MVM (the paper's partitioned MVM on the mesh)
 # ---------------------------------------------------------------------------
+#
+# The 2-D tile contraction K(B_i, :) @ V is decomposed over SOURCE chunks:
+# each device accumulates sum_s K(B_i, chunk_s) @ V[chunk_s] over the d_row
+# chunks its column group holds. Two executions of the SAME accumulation
+# order:
+#
+#   serial  — one all_gather over the row axes up front, then slice chunk s
+#             out of the gathered buffer per step;
+#   overlap — collective matmul (Wang et al., ASPLOS'23 style): the chunks
+#             ring-rotate via ppermute, and the transfer for step s+1 is
+#             issued BEFORE the tile compute of step s, so XLA's async
+#             scheduler hides the collective behind the matmul.
+#
+# Both walk source chunks in the same per-device ring order, so overlap
+# on/off is bitwise-identical by construction (fp accumulation order is
+# part of the contract — see test_distributed).
+
+
+def _ring_schedule(sizes: tuple) -> list[tuple[int | None, tuple]]:
+    """Static per-step plan for a multi-axis ring over `sizes`.
+
+    Returns prod(sizes) entries (shift_axis, offsets): `shift_axis` is the
+    row-axis position to ppermute by +1 to ARRIVE at this step (None for
+    step 0), `offsets[j]` the accumulated shift count of axis j — a device
+    at coords (i_j) then holds the chunk of row group prod-index over
+    ((i_j - offsets[j]) mod sizes[j]). Nested-odometer order: one single-hop
+    shift per step visits all d_row sources."""
+    m = len(sizes)
+    total = int(np.prod(sizes)) if sizes else 1
+    inner = [int(np.prod(sizes[j + 1:])) for j in range(m)]  # cycle lengths
+    counts = [0] * m
+    sched: list[tuple[int | None, tuple]] = []
+    for k in range(total):
+        if k == 0:
+            ax = None
+        else:
+            ax = m - 1
+            for j in range(m):
+                if k % inner[j] == 0:
+                    ax = j
+                    break
+            counts[ax] += 1
+        sched.append((ax, tuple(counts)))
+    return sched
+
+
+def _ring_src_index(geom: DistGeometry, offsets: tuple) -> jax.Array:
+    """Linear row-group index of the chunk this device holds at the ring
+    step with the given per-axis shift counts."""
+    idx = jnp.zeros((), jnp.int32)
+    for a, s, off in zip(geom.row_axes, geom.row_sizes, offsets):
+        idx = idx * s + (jax.lax.axis_index(a) - off) % s
+    return idx
+
+
+def _chunked_contraction(geom: DistGeometry, chunk_fn: Callable,
+                         V_local: jax.Array, *, overlap: bool) -> jax.Array:
+    """sum_s chunk_fn(c_s, V[chunk c_s]) -> (rows_local, t) partial.
+
+    chunk_fn(c, v): the local tile's contribution from GLOBAL vector chunk
+    c (an int32 scalar; chunk c covers rows [c*n_local, (c+1)*n_local)).
+    The d_row sources are walked in ring order from this device's own chunk;
+    serial (overlap=False) slices an up-front all_gather in that same order.
+    """
+    if not geom.row_sizes:
+        raise ValueError(
+            "chunked contraction needs DistGeometry.row_sizes (build the "
+            "geometry with make_geometry, not the raw constructor)")
+    sched = _ring_schedule(geom.row_sizes)
+    if geom.col_axes:
+        j_col = _linear_index(geom.col_axes, _axis_sizes(geom.col_axes))
+    else:
+        j_col = jnp.zeros((), jnp.int32)
+
+    partial = None
+    if overlap:
+        v = V_local
+        for k, (_, offsets) in enumerate(sched):
+            v_next = None
+            if k + 1 < len(sched):
+                ax = sched[k + 1][0]
+                name, size = geom.row_axes[ax], geom.row_sizes[ax]
+                perm = [(r, (r + 1) % size) for r in range(size)]
+                # issue the transfer for step k+1 BEFORE step k's compute
+                v_next = jax.lax.ppermute(v, name, perm)
+            src = _ring_src_index(geom, offsets)
+            out = chunk_fn(src * geom.d_col + j_col, v)
+            partial = out if partial is None else partial + out
+            if v_next is not None:
+                v = v_next
+    else:
+        v_all = jax.lax.all_gather(V_local, geom.row_axes, axis=0, tiled=True)
+        for _, offsets in sched:
+            src = _ring_src_index(geom, offsets)
+            v = jax.lax.dynamic_slice_in_dim(
+                v_all, src * geom.n_local, geom.n_local, 0)
+            out = chunk_fn(src * geom.d_col + j_col, v)
+            partial = out if partial is None else partial + out
+    return partial
 
 
 def dist_kmvm(geom: DistGeometry, kernel, X: jax.Array, V_local: jax.Array,
               params, *, add_noise: bool = True,
               noise_floor: float = 1e-4,
-              block_fn: Callable | None = None) -> jax.Array:
+              block_fn: Callable | None = None,
+              overlap: bool | None = None) -> jax.Array:
     """K_hat @ V with V sharded per geom. Local in, local out.
 
-    1-D: all_gather(V) -> (n, t); rows B_i x full columns.
-    2-D: all_gather over row axes -> V[C_j] (cols_local, t); tile
-         K(B_i, C_j) @ V[C_j]; psum_scatter partials over col axes.
+    1-D serial: all_gather(V) -> (n, t); rows B_i x full columns (the
+        paper's scheme, byte-for-byte the seed path).
+    2-D / overlap: chunked contraction over source chunks (see
+        `_chunked_contraction`); 2-D closes with a psum_scatter of the
+        row partials over the col axes.
+    Padded geometries mask V in and the kernel part out, then add the
+    noise diagonal unmasked — K_hat_pad stays SPD and block-diagonal.
     """
     squeeze = V_local.ndim == 1
     if squeeze:
         V_local = V_local[:, None]
+    overlap = geom.overlap if overlap is None else overlap
 
-    v_cols = jax.lax.all_gather(V_local, geom.row_axes, axis=0, tiled=True)
+    mask = _chunk_mask(geom, V_local.dtype)
+    Vk = V_local if mask is None else V_local * mask[:, None]
     x_rows = _x_rows(geom, X)
-    x_cols = _x_cols(geom, X)
-    partial_rows = kmvm_rect(kernel, x_rows, x_cols, v_cols, params,
+    if geom.col_axes or overlap:
+        def chunk_fn(c, v):
+            x_c = jax.lax.dynamic_slice_in_dim(
+                X, c * geom.n_local, geom.n_local, 0)
+            return kmvm_rect(kernel, x_rows, x_c, v, params,
                              row_block=geom.row_block, block_fn=block_fn)
+
+        partial_rows = _chunked_contraction(geom, chunk_fn, Vk,
+                                            overlap=overlap)
+    else:
+        v_cols = jax.lax.all_gather(Vk, geom.row_axes, axis=0, tiled=True)
+        partial_rows = kmvm_rect(kernel, x_rows, _x_cols(geom, X), v_cols,
+                                 params, row_block=geom.row_block,
+                                 block_fn=block_fn)
     if geom.col_axes:
         out = jax.lax.psum_scatter(partial_rows, geom.col_axes,
                                    scatter_dimension=0, tiled=True)
     else:
         out = partial_rows
+    if mask is not None:
+        out = out * mask[:, None]
     if add_noise:
         out = out + noise_variance(params, noise_floor) * V_local
     return out[:, 0] if squeeze else out
@@ -225,14 +411,19 @@ class DistPreconditioner(NamedTuple):
         return (self.n - k) * jnp.log(self.sigma2) + ld_inner
 
     def sample(self, geom: DistGeometry, key: jax.Array, num: int) -> jax.Array:
-        """(n_local, num) probe chunk of z ~ N(0, P)."""
+        """(n_local, num) probe chunk of z ~ N(0, P) — masked to the true
+        rows on padded geometries, which keeps CG in the masked subspace;
+        the SLQ quadrature is unaffected because log(P^-1/2 K_hat P^-1/2)
+        is identically zero on the pad block."""
         k = self.L_local.shape[1]
         k1, k2 = jax.random.split(key)
         e1 = jax.random.normal(k1, (k, num), self.L_local.dtype)  # same on all devices
         c = _linear_index(geom.all_axes, _axis_sizes(geom.all_axes))
         k2 = jax.random.fold_in(k2, c)
         e2 = jax.random.normal(k2, (geom.n_local, num), self.L_local.dtype)
-        return self.L_local @ e1 + jnp.sqrt(self.sigma2) * e2
+        out = self.L_local @ e1 + jnp.sqrt(self.sigma2) * e2
+        mask = _chunk_mask(geom, out.dtype)
+        return out if mask is None else out * mask[:, None]
 
 
 def dist_pivoted_cholesky(geom: DistGeometry, kernel, X: jax.Array,
@@ -248,6 +439,11 @@ def dist_pivoted_cholesky(geom: DistGeometry, kernel, X: jax.Array,
     offset = _chunk_offset(geom)
     gidx = offset + jnp.arange(geom.n_local)
     diag0 = kernel_diag(kernel, x_chunk, params)
+    mask = _chunk_mask(geom, X.dtype)
+    if mask is not None:
+        # pad rows: zero residual diagonal (never chosen as pivot while a
+        # true row remains) and zero L rows (P stays block-diagonal)
+        diag0 = diag0 * mask
     L0 = jnp.zeros((geom.n_local, rank), X.dtype)
 
     def body(i, carry):
@@ -256,7 +452,8 @@ def dist_pivoted_cholesky(geom: DistGeometry, kernel, X: jax.Array,
         local_max = diag[local_arg]
         global_max = jax.lax.pmax(local_max, geom.all_axes)
         # deterministic tie-break: lowest global pivot index among maxima
-        cand = jnp.where(local_max >= global_max, gidx[local_arg], geom.n)
+        cand = jnp.where(local_max >= global_max, gidx[local_arg],
+                         geom.n_padded)
         pivot_gidx = jax.lax.pmin(cand, geom.all_axes)
         own = gidx[local_arg] == pivot_gidx
         ownf = own.astype(X.dtype)
@@ -265,9 +462,13 @@ def dist_pivoted_cholesky(geom: DistGeometry, kernel, X: jax.Array,
         pivot_val = jnp.maximum(global_max, 1e-12)
 
         row = kernel_matrix(kernel, xp[None], x_chunk, params)[0]  # (n_local,)
+        if mask is not None:
+            row = row * mask
         row = row - L @ lp
         li = row / jnp.sqrt(pivot_val)
         li = jnp.where(gidx == pivot_gidx, jnp.sqrt(pivot_val), li)
+        if mask is not None:
+            li = li * mask  # rank > true rows: a pad pivot still stays zero
         L = L.at[:, i].set(li)
         diag = jnp.maximum(diag - li * li, 0.0)
         diag = jnp.where(gidx == pivot_gidx, -jnp.inf, diag)
@@ -360,6 +561,14 @@ class ShardedOperator(KernelOperator):
     @property
     def shape(self) -> tuple[int, int]:
         return (self.geom.n, self.geom.n)
+
+    @property
+    def local_mask(self) -> jax.Array | None:
+        """(n_local,) true-row mask of this device's vector chunk (None
+        when the geometry is unpadded) — the `mll` forward multiplies it
+        into the centered targets so every solve stays in the true-row
+        subspace of the padded layout."""
+        return _chunk_mask(self.geom, self.dtype)
 
     @classmethod
     def slab_block_fn(cls, config: OperatorConfig, operand_dtype):
@@ -475,7 +684,7 @@ class ShardedOperator(KernelOperator):
             gc = jax.lax.dynamic_update_slice(
                 gc, g_cols.reshape(geom.d_row, geom.n_local, geom.d),
                 (zero, j * geom.n_local, zero))
-            g_X = g_X + gc.reshape(geom.n, geom.d)
+            g_X = g_X + gc.reshape(geom.n_padded, geom.d)
         else:
             g_X = g_X + g_cols
         return gp, g_X
@@ -733,12 +942,14 @@ def make_mean_cache_solve(mesh: Mesh, geom: DistGeometry, cfg: DistMLLConfig,
     def local_fn(X, y_loc, params):
         yc = y_loc - constant_mean(params)
         op = ShardedOperator(cfg.operator_config(geom), X, params)
+        if op.local_mask is not None:
+            yc = yc * op.local_mask
         precond = op.preconditioner(cfg.precond_rank)
         res = pcg(op, yc[:, None], precond.solve,
                   max_iters=max_iters, min_iters=10, tol=tol)
         a_loc = res.solution[:, 0]
         a_full = jax.lax.all_gather(a_loc, geom.all_axes, axis=0, tiled=True)
-        return a_full, res.rel_residual
+        return a_full[:geom.n], res.rel_residual
 
     sharded = shard_map(local_fn, mesh=mesh,
                         in_specs=(P(), vec, P()),
@@ -748,6 +959,8 @@ def make_mean_cache_solve(mesh: Mesh, geom: DistGeometry, cfg: DistMLLConfig,
 
 
 def shard_vector(mesh: Mesh, geom: DistGeometry, y: jax.Array) -> jax.Array:
+    if y.shape[0] == geom.n:
+        y = pad_to_geometry(geom, y)
     return jax.device_put(y, NamedSharding(mesh, geom.vector_pspec()))
 
 

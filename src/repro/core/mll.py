@@ -129,6 +129,11 @@ def operator_mll_forward(op, y, key, *, precond_rank: int, num_probes: int,
     """
     n = op.shape[0]
     yc = y - constant_mean(op.params)
+    if op.local_mask is not None:
+        # padded sharded layouts: zero the pad rows of the targets so every
+        # CG vector stays in the true-row subspace (K_hat_pad is block-
+        # diagonal there; n above is already the TRUE count)
+        yc = yc * op.local_mask
     if precond is None:
         with named_scope("precond_build"):
             precond = op.preconditioner(precond_rank)

@@ -276,6 +276,10 @@ class KernelOperator:
     # every dense single-device backend; a backend with its own bounded-
     # memory gradient surface (blocksparse) overrides this with its name
     grad_backend = "partitioned"
+    # per-row validity mask over the operator's local vector layout: None
+    # everywhere except padded sharded geometries, where the MLL forward
+    # multiplies it into the centered targets so solves only see true rows
+    local_mask = None
 
     def __init__(self, config: OperatorConfig, X: jax.Array, params):
         # params: GPParams (legacy single-kernel) or KernelParams (algebra)

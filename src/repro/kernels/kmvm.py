@@ -235,6 +235,82 @@ def kmvm_pallas_dots(
     return out, dots
 
 
+def _kmvm_acc_kernel(components, compute_dtype, scal_ref, xi_ref, xj_ref,
+                     v_ref, acc_ref, out_ref):
+    """Chunk step of the collective-matmul pipeline: out[i] = acc[i] +
+    K(Xi_i, Xj_j) @ V_j — identical to `_kmvm_kernel` except the output
+    tile initializes from a carried accumulator instead of zeros, so one
+    launch advances the contraction by one source chunk while the ring
+    transfer for the NEXT chunk is in flight (see
+    `core.distributed._chunked_contraction`)."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = acc_ref[...]
+
+    k = _kernel_tile(components, compute_dtype, scal_ref, xi_ref, xj_ref)
+    v = v_ref[...].astype(compute_dtype)     # (bn, t)
+    out_ref[...] += jax.lax.dot_general(
+        k.astype(compute_dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("components", "bm", "bn", "interpret",
+                              "compute_dtype"))
+def kmvm_pallas_chunk(
+    components,
+    Xi: jax.Array,       # (m, d)  pre-scaled rows, m % bm == 0
+    Xj: jax.Array,       # (nc, d) pre-scaled columns of ONE chunk, nc % bn == 0
+    V: jax.Array,        # (nc, t) pre-scaled RHS chunk
+    scalars: jax.Array,  # (1, L)
+    acc: jax.Array,      # (m, t)  fp32 running partial (aliased in place)
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    interpret: bool = False,
+    compute_dtype: str = "float32",
+) -> jax.Array:
+    """acc + K(Xi, Xj_chunk) @ V_chunk — the chunked-contraction entry.
+
+    The distributed overlap path splits the tile contraction over source
+    chunks and needs each chunk's contribution as a separate launch (so the
+    ppermute for chunk s+1 can overlap chunk s's compute). The accumulator
+    is input/output-aliased: the partial stays in place in HBM across the
+    d_row chunk steps, costing one extra (m, t) read per step over the
+    single-launch kernel — negligible next to the (m, nc) tile work.
+    """
+    m, d = Xi.shape
+    nc, t = V.shape
+    assert Xj.shape == (nc, d), (Xi.shape, Xj.shape, V.shape)
+    assert acc.shape == (m, t), (acc.shape, (m, t))
+    assert m % bm == 0 and nc % bn == 0, (m, bm, nc, bn)
+    L = scalar_layout(components)
+    assert scalars.shape == (1, L), (scalars.shape, components)
+
+    grid = (m // bm, nc // bn)
+    return pl.pallas_call(
+        functools.partial(_kmvm_acc_kernel, components,
+                          jnp.dtype(compute_dtype)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, L), lambda i, j: (0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, t), lambda i, j: (j, 0)),
+            pl.BlockSpec((bm, t), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, t), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, t), jnp.float32),
+        input_output_aliases={4: 0},
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(scalars, Xi, Xj, V, acc)
+
+
 @functools.partial(
     jax.jit, static_argnames=("components", "bm", "bn", "interpret",
                               "compute_dtype"))

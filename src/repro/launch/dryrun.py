@@ -198,9 +198,11 @@ def run_lm_cell(arch_id: str, shape_name: str, mesh, *, lr=3e-4,
 
 
 def run_gp_cell(kind: str, mesh, pcg_method="standard", mode=None,
-                backend=None, compute_dtype=None) -> dict:
+                backend=None, compute_dtype=None, overlap=False) -> dict:
     from repro.configs.gp_exact_1m import CONFIG
     GP = CONFIG if mode is None else CONFIG._replace(mode=mode)
+    if overlap:
+        GP = GP._replace(overlap=True)
     if backend == "pallas":
         # Off-TPU the Pallas kernel auto-selects interpret mode, so the
         # compiled artifact would be the interpreter's emulation HLO —
@@ -246,6 +248,7 @@ def run_gp_cell(kind: str, mesh, pcg_method="standard", mode=None,
     res.update({"cell": cell._asdict(), "status": "ok",
                 "n_devices": n_devices, "gp_mode": GP.mode,
                 "pcg_method": pcg_method, "gp_backend": GP.backend,
+                "gp_overlap": GP.overlap,
                 "gp_compute_dtype": GP.compute_dtype or "float32"})
     return res
 
@@ -264,6 +267,9 @@ def main():
     ap.add_argument("--gp-backend", default=None,
                     choices=("partitioned", "pallas"))
     ap.add_argument("--gp-dtype", default=None, choices=("bfloat16",))
+    ap.add_argument("--gp-overlap", action="store_true",
+                    help="ring-pipelined chunked contraction (overlap the "
+                         "gather with tile compute)")
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--tag", default="", help="suffix for output filenames")
     ap.add_argument("--override", default="",
@@ -293,7 +299,8 @@ def main():
                     r = run_gp_cell(kind, mesh, pcg_method=args.pcg_method,
                                     mode=args.gp_mode,
                                     backend=args.gp_backend,
-                                    compute_dtype=args.gp_dtype)
+                                    compute_dtype=args.gp_dtype,
+                                    overlap=args.gp_overlap)
                 except Exception:
                     r = {"cell": {"arch": arch, "shape": kind}, "status": "error",
                          "traceback": traceback.format_exc()}

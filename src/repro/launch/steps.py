@@ -134,7 +134,8 @@ def make_gp_train_step(gp_cfg, mesh: Mesh, *, lr: float = 0.1,
     from jax.experimental.shard_map import shard_map
 
     geom = make_geometry(mesh, gp_cfg.n, gp_cfg.d, mode=gp_cfg.mode,
-                         row_block=gp_cfg.row_block)
+                         row_block=gp_cfg.row_block,
+                         overlap=getattr(gp_cfg, "overlap", False))
     cfg = DistMLLConfig(kernel=gp_cfg.kernel, precond_rank=gp_cfg.precond_rank,
                         num_probes=gp_cfg.num_probes,
                         max_cg_iters=gp_cfg.train_cg_iters,
@@ -166,7 +167,8 @@ def make_gp_predict_setup(gp_cfg, mesh: Mesh):
         make_mean_cache_solve
 
     geom = make_geometry(mesh, gp_cfg.n, gp_cfg.d, mode=gp_cfg.mode,
-                         row_block=gp_cfg.row_block)
+                         row_block=gp_cfg.row_block,
+                         overlap=getattr(gp_cfg, "overlap", False))
     cfg = DistMLLConfig(kernel=gp_cfg.kernel, precond_rank=gp_cfg.precond_rank,
                         backend=gp_cfg.backend,
                         compute_dtype=gp_cfg.compute_dtype)

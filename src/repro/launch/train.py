@@ -47,8 +47,13 @@ def main():
                     choices=("partitioned", "pallas", "blocksparse"),
                     help="inner KernelOperator backend per device tile; "
                          "blocksparse = distance-pruned MVMs for "
-                         "compactly-supported specs (forces --gp-mode 1d, "
-                         "Morton-sorts the data; see repro.sparse)")
+                         "compactly-supported specs (Morton-sorts the "
+                         "data; composes with --gp-mode 1d AND 2d; see "
+                         "repro.sparse)")
+    ap.add_argument("--gp-overlap", action="store_true",
+                    help="ring-pipeline the per-iteration gather against "
+                         "the local tile compute (collective-matmul "
+                         "chunking; see repro.core.distributed)")
     ap.add_argument("--gp-dtype", default="float32",
                     choices=("float32", "bfloat16"),
                     help="operator compute dtype (bf16 = MXU fast path)")
@@ -106,12 +111,53 @@ def main():
     print(f"[train] done: {res.steps_run} steps, {res.skipped} skipped")
 
 
+def prepare_gp_data(mesh, X_host, y_host, *, backend, gp_mode, kernel,
+                    params, margin=0.1, overlap=False, row_block=1024,
+                    tile=256):
+    """(geom, X, y, plan) for the distributed engine — NO point dropped.
+
+    Every row of (X_host, y_host) trains: non-divisible n pads the layout
+    with masked rows (see `DistGeometry`) instead of truncating. The
+    blocksparse path Morton-sorts the data, pads, and builds the plan on
+    the padded array so every per-device chunk owns whole tiles; `tile`
+    shrinks automatically when the dataset is smaller than one tile per
+    device. Returned X/y carry geom.n_padded rows; rows [geom.n:] are
+    zero pad, excluded from every solve.
+    """
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.distributed import make_geometry, pad_to_geometry
+
+    n, d = X_host.shape
+    if backend == "blocksparse":
+        from repro.sparse import build_plan, morton_order
+
+        if n < mesh.devices.size * tile:
+            tile = 8
+        perm = morton_order(np.asarray(X_host))
+        geom = make_geometry(mesh, n, d, mode=gp_mode, row_block=row_block,
+                             overlap=overlap, tile_multiple=tile)
+        X = pad_to_geometry(geom, jnp.asarray(
+            np.asarray(X_host)[perm], jnp.float32))
+        y = pad_to_geometry(geom, jnp.asarray(
+            np.asarray(y_host)[perm], jnp.float32))
+        plan = build_plan(kernel, X, params, tile=tile, margin=margin,
+                          assume_sorted=True)
+        return geom, X, y, plan
+    geom = make_geometry(mesh, n, d, mode=gp_mode, row_block=row_block,
+                         overlap=overlap)
+    X = pad_to_geometry(geom, jnp.asarray(X_host, jnp.float32))
+    y = pad_to_geometry(geom, jnp.asarray(y_host, jnp.float32))
+    return geom, X, y, None
+
+
 def _train_gp(args):
     import jax.numpy as jnp
 
     from repro.core import KERNEL_KINDS, init_params_for, parse_kernel, spec_expr
     from repro.core.distributed import (
-        DistMLLConfig, make_geometry, replicate, shard_vector,
+        DistMLLConfig, replicate, shard_vector,
     )
     from repro.data import make_regression_dataset
     from repro.launch.mesh import make_host_mesh
@@ -130,37 +176,17 @@ def _train_gp(args):
     params = init_params_for(kernel, noise=0.3, dtype=jnp.float32)
     kernel_desc = kernel if isinstance(kernel, str) else spec_expr(kernel)
 
-    plan = None
-    if args.gp_backend == "blocksparse":
-        # the distance-pruned engine: rows sharded (1-D, paper-faithful),
-        # data Morton-sorted so contiguous shards own contiguous tiles,
-        # n truncated so every shard holds whole tiles
-        from repro.sparse import build_plan, morton_order
-
-        if gp_mode != "1d":
-            print("[train-gp] blocksparse: forcing --gp-mode 1d "
-                  "(row shards own their mask slices)")
-            gp_mode = "1d"
-        tile = 256
-        n = (s.X_train.shape[0] // (mesh.devices.size * tile)) \
-            * mesh.devices.size * tile
-        if n == 0:
-            tile = 8
-            n = (s.X_train.shape[0] // (mesh.devices.size * tile)) \
-                * mesh.devices.size * tile
-        Xh = s.X_train[:n]
-        perm = morton_order(Xh)
-        X = jnp.asarray(Xh[perm], jnp.float32)
-        y = jnp.asarray(s.y_train[:n][perm], jnp.float32)
-        plan = build_plan(kernel, X, params, tile=tile,
-                          margin=args.gp_drift_threshold,
-                          assume_sorted=True)
+    geom, X, y, plan = prepare_gp_data(
+        mesh, s.X_train, s.y_train, backend=args.gp_backend,
+        gp_mode=gp_mode, kernel=kernel, params=params,
+        margin=args.gp_drift_threshold, overlap=args.gp_overlap)
+    n = geom.n
+    assert n == s.X_train.shape[0], "no training point may be dropped"
+    if plan is not None:
         print(f"[train-gp] sparsity plan: {plan}")
-    else:
-        n = (s.X_train.shape[0] // mesh.devices.size) * mesh.devices.size
-        X = jnp.asarray(s.X_train[:n], jnp.float32)
-        y = jnp.asarray(s.y_train[:n], jnp.float32)
-    geom = make_geometry(mesh, n, X.shape[1], mode=gp_mode)
+    if geom.has_pad:
+        print(f"[train-gp] padded layout: {geom.pad_rows} masked rows "
+              f"({n} -> {geom.n_padded})")
     cfg = DistMLLConfig(kernel=kernel, precond_rank=100, num_probes=8,
                         max_cg_iters=20, cg_tol=1.0, backend=args.gp_backend,
                         compute_dtype=gp_dtype, plan=plan)
@@ -206,14 +232,27 @@ def _train_gp(args):
 
     if args.save_artifact:
         # mesh-trained hyperparameters -> a servable single-host artifact
-        # (the engine re-binds any backend at restore time)
+        # (the engine re-binds any backend at restore time); the posterior
+        # is fit on the TRUE rows only — pad rows are layout, not data
         from repro.core import OperatorConfig, make_operator
         from repro.serve.artifact import fit_posterior, save_artifact
 
+        X_true, y_true = X[:n], y[:n]
+        assert X_true.shape[0] == s.X_train.shape[0], \
+            "artifact must cover every original training row"
+        art_plan = None
+        if plan is not None:
+            from repro.sparse import build_plan
+
+            art_plan = build_plan(cfg.kernel, X_true, params,
+                                  tile=plan.tile,
+                                  margin=args.gp_drift_threshold,
+                                  assume_sorted=True)
         op = make_operator(
             OperatorConfig(kernel=cfg.kernel, backend=args.gp_backend,
-                           compute_dtype=gp_dtype), X, params)
-        art = fit_posterior(op, y, jax.random.PRNGKey(args.steps),
+                           compute_dtype=gp_dtype, plan=art_plan),
+            X_true, params)
+        art = fit_posterior(op, y_true, jax.random.PRNGKey(args.steps),
                             precond_rank=cfg.precond_rank)
         print(f"[train-gp] artifact: {save_artifact(args.save_artifact, art)} "
               f"(rel_residual={art.meta['solve_rel_residual']:.2e})")

@@ -20,7 +20,12 @@ Env knobs: REPRO_OBS_TRACE=<path.jsonl> (enable span tracing),
 REPRO_OBS_PROFILE=1 (enable jax.profiler annotations + memory gauges).
 """
 
-from .costmodel import StepCost, mll_step_cost
+from .costmodel import (
+    CollectiveCost,
+    StepCost,
+    dist_collective_cost,
+    mll_step_cost,
+)
 from .metrics import (
     Counter,
     Gauge,
@@ -56,7 +61,8 @@ from .trace import (
 )
 
 __all__ = [
-    "StepCost", "mll_step_cost",
+    "CollectiveCost", "StepCost", "dist_collective_cost",
+    "mll_step_cost",
     "Counter", "Gauge", "Histogram", "MetricsRegistry",
     "counter", "gauge", "histogram", "latency_summary",
     "record_solver_step", "registry",

@@ -108,3 +108,42 @@ def mll_step_cost(
     return StepCost(launches=int(launches),
                     hbm_bytes=fwd_bytes + bwd_bytes,
                     traversals=traversals)
+
+
+class CollectiveCost(NamedTuple):
+    gather_bytes: float    # per-device per-MVM V-chunk transfer volume
+    scatter_bytes: float   # per-device per-MVM psum_scatter volume
+    exposed_bytes: float   # the part NOT hidden behind tile compute
+
+
+def dist_collective_cost(
+    n: int,
+    num_rhs: int,
+    *,
+    d_row: int = 1,
+    d_col: int = 1,
+    overlap: bool = False,
+    dtype_bytes: int = 4,
+) -> CollectiveCost:
+    """Modeled per-device collective volume of ONE distributed MVM.
+
+    The 2-D scheme (`core.distributed.dist_kmvm`): each device gathers the
+    d_row - 1 remote V chunks of its column group (n_local * r bytes each,
+    n_local = n / (d_row * d_col)) and scatters its row partial over the
+    col axes (d_col - 1 remote chunks). 1-D is the d_col = 1 special case
+    — the paper's O(n) gather.
+
+    overlap=True models the collective-matmul pipeline: chunk transfers
+    ride the ring DURING tile compute, so only the FIRST hop (the pipeline
+    fill, one chunk) plus the trailing scatter stay exposed; serial mode
+    exposes everything. Total volume is identical either way — overlap
+    buys exposure, not bytes.
+    """
+    n_local = n / float(max(d_row * d_col, 1))
+    chunk = n_local * num_rhs * dtype_bytes
+    gather = (d_row - 1) * chunk
+    scatter = (d_col - 1) * chunk
+    exposed = (chunk * min(d_row - 1, 1) + scatter) if overlap \
+        else (gather + scatter)
+    return CollectiveCost(gather_bytes=gather, scatter_bytes=scatter,
+                          exposed_bytes=exposed)

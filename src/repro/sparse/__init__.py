@@ -20,8 +20,10 @@ Typical use:
 """
 
 from .plan import (
+    ChunkSlicedPlan,
     SparsePlan,
     build_plan,
+    chunk_sliced_plan,
     morton_order,
     needs_replan,
     plan_is_safe,
@@ -37,8 +39,10 @@ from .blocksparse import (
 
 __all__ = [
     "BlockSparseOperator",
+    "ChunkSlicedPlan",
     "SparsePlan",
     "build_plan",
+    "chunk_sliced_plan",
     "dist_blocksparse_kmvm",
     "masked_kmvm",
     "morton_order",

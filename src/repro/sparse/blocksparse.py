@@ -357,34 +357,15 @@ class BlockSparseOperator(KernelOperator):
 
 
 # ---------------------------------------------------------------------------
-# distributed composition: row shards own their mask slices (1-D mode)
+# distributed composition: each device owns the mask slice of its tile
 # ---------------------------------------------------------------------------
 
 
-def dist_blocksparse_kmvm(geom, kernel, X: jax.Array, V_local: jax.Array,
-                          params, plan: SparsePlan, *,
-                          add_noise: bool = True, noise_floor: float = 1e-4,
-                          compute_dtype=None) -> jax.Array:
-    """The paper's 1-D distributed MVM with the block mask sliced per shard.
-
-    Contract (validated by ShardedOperator): X and the CG vectors are
-    PRE-SORTED in Morton order (plan built with assume_sorted=True, so
-    perm is the identity), rows are sharded over every mesh axis
-    (no column axes), and n divides d_row * tile — each device then owns a
-    contiguous range of row tiles and reads its slice of the replicated
-    row-grouped mask. Communication is unchanged from the dense engine
-    (one all_gather of V per MVM); only the local tile work shrinks to the
-    shard's fill. Unlike the single-device pair scan, the local loop is
-    row-gathered at the GLOBAL kmax: SPMD requires the same static
-    structure on every device, and per-shard pair counts differ. Only
-    the FORWARD MVMs are pruned here — `ShardedOperator.quad_form_grads`
-    keeps the dense blockwise partials (correct at any fill; making the
-    sharded Eq. 2 backward fill-proportional is open follow-up work).
-    """
-    squeeze = V_local.ndim == 1
-    if squeeze:
-        V_local = V_local[:, None]
-    v_full = jax.lax.all_gather(V_local, geom.row_axes, axis=0, tiled=True)
+def _dist_legacy_1d(geom, kernel, X, v_full, params, plan, compute_dtype):
+    """The paper's 1-D scheme: rows over every axis, one gathered V, the
+    local row-tile loop gathered at the GLOBAL kmax (SPMD needs the same
+    static structure on every device). Kept verbatim as the serial 1-D
+    path — it is the seed behavior the 1-D goldens pin."""
     T, tile = plan.num_tiles, plan.tile
     d = X.shape[1]
     t = v_full.shape[1]
@@ -417,7 +398,105 @@ def dist_blocksparse_kmvm(geom, kernel, X: jax.Array, V_local: jax.Array,
         out = one_row((x_rows[0], cols[0], valid[0]))[None]
     else:
         out = lax_map(one_row, (x_rows, cols, valid))
-    out = out.reshape(geom.rows_local, t)
+    return out.reshape(geom.rows_local, t)
+
+
+def dist_blocksparse_kmvm(geom, kernel, X: jax.Array, V_local: jax.Array,
+                          params, plan: SparsePlan, *,
+                          add_noise: bool = True, noise_floor: float = 1e-4,
+                          compute_dtype=None,
+                          overlap: bool | None = None) -> jax.Array:
+    """Distance-pruned distributed MVM — 1-D or (rows x cols) 2-D mesh.
+
+    Contract (validated by ShardedOperator): X and the CG vectors are
+    PRE-SORTED in Morton order (plan built with assume_sorted=True on the
+    PADDED X, so perm is the identity) and every per-device vector chunk
+    holds whole plan tiles (make_geometry(..., tile_multiple=plan.tile)).
+
+    1-D serial keeps the seed path: one all_gather of V, local row-tile
+    loop over the shard's slice of the row-grouped mask. On column axes
+    (2-D) or with overlap the MVM runs as the dense engine's chunked
+    contraction (`core.distributed._chunked_contraction`): per source
+    chunk, each row tile gathers only its ACTIVE in-chunk col tiles from
+    the chunk-sliced mask (`plan.chunk_sliced_plan`), so the per-step
+    compute is kmax_chunk*tile wide — fill-proportional cost composes
+    with the mesh, and overlap=True ring-pipelines the chunk transfers
+    against it. Only the FORWARD MVMs are pruned —
+    `ShardedOperator.quad_form_grads` keeps the dense blockwise partials
+    (correct at any fill; a fill-proportional sharded Eq. 2 backward is
+    open follow-up work).
+    """
+    squeeze = V_local.ndim == 1
+    if squeeze:
+        V_local = V_local[:, None]
+    overlap = geom.overlap if overlap is None else overlap
+
+    from repro.core.distributed import (
+        _axis_sizes, _chunk_mask, _chunked_contraction, _linear_index,
+    )
+
+    mask = _chunk_mask(geom, V_local.dtype)
+    Vk = V_local if mask is None else V_local * mask[:, None]
+
+    if geom.col_axes or overlap:
+        from .plan import chunk_sliced_plan
+
+        T, tile = plan.num_tiles, plan.tile
+        d = X.shape[1]
+        t = Vk.shape[1]
+        T_rloc = geom.rows_local // tile
+        T_chunk = geom.n_local // tile
+        n_chunks = geom.d_row * geom.d_col
+        sl = chunk_sliced_plan(plan, n_chunks)
+
+        i = _linear_index(geom.row_axes, _axis_sizes(geom.row_axes))
+        cols_all = jnp.asarray(sl.cols)                 # (T, n_chunks, kc)
+        valid_all = jnp.asarray(sl.valid, Vk.dtype)
+        cols_loc = jax.lax.dynamic_slice_in_dim(cols_all, i * T_rloc,
+                                                T_rloc, 0)
+        valid_loc = jax.lax.dynamic_slice_in_dim(valid_all, i * T_rloc,
+                                                 T_rloc, 0)
+        x_rows = jax.lax.dynamic_slice_in_dim(
+            X, i * geom.rows_local, geom.rows_local,
+            0).reshape(T_rloc, tile, d)
+        inner = _inner_block_fn(kernel, compute_dtype)
+
+        def chunk_fn(c, v):
+            x_c = jax.lax.dynamic_slice_in_dim(
+                X, c * geom.n_local, geom.n_local, 0).reshape(T_chunk, tile, d)
+            v_t = v.reshape(T_chunk, tile, t)
+            cr_all = jax.lax.dynamic_slice_in_dim(cols_loc, c, 1, 1)[:, 0]
+            vr_all = jax.lax.dynamic_slice_in_dim(valid_loc, c, 1, 1)[:, 0]
+
+            @jax.checkpoint
+            def one_row(args):
+                Xb, cr, vr = args
+                zero = jax.lax.optimization_barrier(jnp.zeros((), Xb.dtype))
+                Xb = Xb + zero * v_t[0, 0, 0].astype(Xb.dtype)
+                Xc = x_c[cr].reshape(cr.shape[0] * tile, d)
+                Vc = (v_t[cr] * vr[:, None, None]).reshape(
+                    cr.shape[0] * tile, t)
+                return inner(Xb, Xc, Vc, params).astype(v.dtype)
+
+            if T_rloc == 1:
+                out = one_row((x_rows[0], cr_all[0], vr_all[0]))[None]
+            else:
+                out = lax_map(one_row, (x_rows, cr_all, vr_all))
+            return out.reshape(geom.rows_local, t)
+
+        partial_rows = _chunked_contraction(geom, chunk_fn, Vk,
+                                            overlap=overlap)
+        if geom.col_axes:
+            out = jax.lax.psum_scatter(partial_rows, geom.col_axes,
+                                       scatter_dimension=0, tiled=True)
+        else:
+            out = partial_rows
+    else:
+        v_full = jax.lax.all_gather(Vk, geom.row_axes, axis=0, tiled=True)
+        out = _dist_legacy_1d(geom, kernel, X, v_full, params, plan,
+                              compute_dtype)
+    if mask is not None:
+        out = out * mask[:, None]
     if add_noise:
         out = out + noise_variance(params, noise_floor) * V_local
     return out[:, 0] if squeeze else out
@@ -427,15 +506,18 @@ def validate_dist_plan(geom, plan: SparsePlan) -> None:
     """The sharded-composition contract (raise early, at config time)."""
     import numpy as np
 
-    if geom.col_axes:
-        raise ValueError(
-            "inner_backend='blocksparse' supports the paper's 1-D layout "
-            "only (rows sharded over every axis); use --gp-mode 1d")
     if not np.array_equal(plan.perm, np.arange(plan.n)):
         raise ValueError(
             "distributed blocksparse needs PRE-SORTED data: Morton-sort "
             "X/y first and build the plan with assume_sorted=True")
-    if plan.n_pad != plan.n or geom.rows_local % plan.tile:
+    if plan.n != geom.n_padded or plan.n_pad != plan.n:
         raise ValueError(
-            f"n={plan.n} must divide d_row*tile={geom.d_row}x{plan.tile} "
-            f"(pad/truncate the dataset so every shard owns whole tiles)")
+            f"plan covers n={plan.n} rows but the geometry lays out "
+            f"{geom.n_padded} (pad X to geom.n_padded with "
+            f"distributed.pad_to_geometry, then build the plan on the "
+            f"padded data so it holds whole tiles)")
+    if geom.n_local % plan.tile:
+        raise ValueError(
+            f"per-device chunk ({geom.n_local}) must hold whole plan tiles "
+            f"({plan.tile}): build the geometry with "
+            f"tile_multiple={plan.tile}")

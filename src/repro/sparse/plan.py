@@ -31,8 +31,10 @@ pruned).
 
 from __future__ import annotations
 
+import functools
 import hashlib
 import math
+from typing import NamedTuple
 
 import jax
 import numpy as np
@@ -246,6 +248,53 @@ def build_plan(kernel, X, params, *, tile: int = 256, margin: float = 0.1,
     obs.instant("sparse_plan", n=plan.n, tile=plan.tile,
                 pairs=plan.num_pairs, fill=plan.fill)
     return plan
+
+
+class ChunkSlicedPlan(NamedTuple):
+    """`row_cols` re-indexed per vector chunk — the distributed engine's
+    view of a plan on a (rows x cols) mesh.
+
+    The chunked contraction walks GLOBAL vector chunks c (each holding
+    `num_tiles // n_chunks` consecutive plan tiles); entry [r, c, :] lists
+    the IN-CHUNK col-tile indices active against row tile r, `valid` the
+    occupancy. `kmax` is the static max per-(row, chunk) degree, so each
+    ring step's gather is kmax*tile wide — fill-proportional cost survives
+    the 2-D mesh (far chunks have all-invalid slots and every lane masked).
+    """
+
+    cols: np.ndarray   # (T, n_chunks, kmax) int32 in-chunk col-tile ids
+    valid: np.ndarray  # (T, n_chunks, kmax) bool
+    kmax: int
+
+
+@functools.lru_cache(maxsize=32)
+def chunk_sliced_plan(plan: SparsePlan, n_chunks: int) -> ChunkSlicedPlan:
+    """Slice plan.row_cols by vector chunk (cached on the plan digest —
+    SparsePlan hashes by content). Requires whole tiles per chunk."""
+    T = plan.num_tiles
+    if T % n_chunks:
+        raise ValueError(
+            f"plan tiles ({T}) must divide the chunk grid ({n_chunks}); "
+            f"build the geometry with tile_multiple=plan.tile")
+    t_chunk = T // n_chunks
+    counts = np.zeros((T, n_chunks), np.int64)
+    cid = plan.row_cols // t_chunk
+    for r in range(T):
+        sel = cid[r][plan.row_valid[r]]
+        np.add.at(counts[r], sel, 1)
+    kmax = max(int(counts.max()), 1)
+    cols = np.zeros((T, n_chunks, kmax), np.int32)
+    valid = np.zeros((T, n_chunks, kmax), bool)
+    fill = np.zeros((T, n_chunks), np.int64)
+    for r in range(T):
+        for c, v in zip(plan.row_cols[r], plan.row_valid[r]):
+            if not v:
+                continue
+            ch, k = int(c) // t_chunk, fill[r, int(c) // t_chunk]
+            cols[r, ch, k] = int(c) % t_chunk
+            valid[r, ch, k] = True
+            fill[r, ch] += 1
+    return ChunkSlicedPlan(cols=cols, valid=valid, kmax=kmax)
 
 
 def needs_replan(plan: SparsePlan, params, threshold: float | None = None,

@@ -112,3 +112,32 @@ def test_custom_tile_sizes():
                          interpret=True)
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                    rtol=2e-4, atol=2e-4)
+
+
+def test_kmvm_pallas_chunk_matches_single_launch():
+    """Walking the columns chunk-by-chunk through the accumulator entry
+    (`kmvm_pallas_chunk`, the per-chunk TPU launch for the distributed
+    collective-matmul pipeline in `core.distributed._chunked_contraction`)
+    is bitwise-identical to one fused `kmvm_pallas` launch: the chunk
+    kernel visits the same (bm, bn) tiles in the same order, only seeding
+    the output tile from the carried accumulator instead of zeros."""
+    from repro.kernels.kmvm import kmvm_pallas, kmvm_pallas_chunk
+
+    rng = np.random.default_rng(3)
+    m, n, d, t = 64, 128, 4, 128
+    n_chunks = 2
+    nc = n // n_chunks
+    components = (("rbf",),)
+    Xi = jnp.asarray(rng.normal(size=(m, d)), jnp.float32)
+    Xj = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    V = jnp.asarray(rng.normal(size=(n, t)), jnp.float32)
+    scalars = jnp.asarray([[1.3, 0.7]], jnp.float32)  # (w, q)
+
+    full = kmvm_pallas(components, Xi, Xj, V, scalars,
+                       bm=32, bn=32, interpret=True)
+    acc = jnp.zeros((m, t), jnp.float32)
+    for s in range(n_chunks):
+        acc = kmvm_pallas_chunk(
+            components, Xi, Xj[s * nc:(s + 1) * nc], V[s * nc:(s + 1) * nc],
+            scalars, acc, bm=32, bn=32, interpret=True)
+    np.testing.assert_array_equal(np.asarray(acc), np.asarray(full))

@@ -382,9 +382,18 @@ def test_sharded_blocksparse_contract_validation():
     if not np.array_equal(plan_unsorted.perm, np.arange(256)):
         with pytest.raises(ValueError, match="PRE-SORTED"):
             validate_dist_plan(geom, plan_unsorted)
-    # shard-divisibility is enforced
+    # the plan must tile the PADDED layout exactly — a plan built on a
+    # different row count (the old silent-truncation hazard) is rejected
+    # with the pad-the-data recipe
     Xs = X[jnp.asarray(morton_order(np.asarray(X)))]
     plan_big = build_plan(SPEC, Xs[:250], params, tile=32,
                           assume_sorted=True)
-    with pytest.raises(ValueError, match="divide"):
+    with pytest.raises(ValueError, match="pad_to_geometry"):
         validate_dist_plan(geom, plan_big)
+    # per-device chunks must hold whole plan tiles (the 2-D chunk-sliced
+    # mask gathers tile-granular): n_local=32 cannot hold tile=64
+    plan_ok = build_plan(SPEC, Xs, params, tile=64, assume_sorted=True)
+    geom_8dev = geom._replace(d_row=8, row_sizes=(8,))
+    assert geom_8dev.n_local == 32
+    with pytest.raises(ValueError, match="tile_multiple"):
+        validate_dist_plan(geom_8dev, plan_ok)
