@@ -1,14 +1,24 @@
-"""Serving latency: backend x chunk size x batch size sweep.
+"""Serving latency: backend x chunk x batch x scheduler sweep + update cost.
 
 Beyond-paper companion to Table 2: that table establishes that prediction
 cost is cache-dominated; this bench measures the SERVING side of the claim
 — end-to-end request latency (p50/p99) and throughput (QPS) for many small
-concurrent requests riding the micro-batched PredictionEngine
-(`repro.serve`). Sweeps the operator backend the artifact is restored onto,
-the engine's fixed chunk size, and the batcher's max_batch. CPU numbers
-document the comparison shape (bigger launches amortize dispatch; chunk
-size trades tail latency against launch count); rerun on TPU hardware for
-the absolute columns in EXPERIMENTS.md §Serving.
+concurrent requests riding the PredictionEngine, under BOTH request
+schedulers: the closed size/deadline MicroBatcher and the pipelined
+ContinuousBatcher (`scheduler` column; `models` counts resident models in
+the multi-model continuous cells). The `clients` axis is the closed-loop
+concurrency: few clients is a trickle — the closed batcher idles out its
+deadline on every cycle while the continuous one ships on worker-idle —
+and many clients is saturation, where both close blocks on size. A final
+row prices the streaming
+incremental posterior update (`update_prediction_cache`) against a cold
+`build_prediction_cache` refit at (n=4096, m=64) — the `update_ms` /
+`refit_ms` columns (latency columns are "-" on that row, and vice versa).
+Original columns are unchanged so prior BENCH JSONs stay comparable.
+
+CPU numbers document the comparison shape (bigger launches amortize
+dispatch; the continuous scheduler removes the accumulate/launch barrier);
+rerun on TPU hardware for the absolute columns in EXPERIMENTS.md §Serving.
 """
 
 import time
@@ -20,20 +30,129 @@ import numpy as np
 
 from repro import obs
 from repro.core import OperatorConfig, init_params, make_operator
-from repro.serve import BatcherConfig, MicroBatcher, PredictionEngine, fit_posterior
+from repro.core.predcache import build_prediction_cache, update_prediction_cache
+from repro.serve import (
+    BatcherConfig, ContinuousBatcher, MicroBatcher, PredictionEngine,
+    SchedulerConfig, fit_posterior,
+)
 
 from .common import load, write_rows
 
 BACKENDS = ("dense", "partitioned")
-CHUNKS = (128, 512)
+CHUNK = 128
 MAX_BATCH = (32, 256)
+SCHEDULERS = ("closed", "continuous")
+CLIENT_LOADS = (1, 8)
 N_REQ = 120
 POINTS_PER_REQ = 4
-CLIENTS = 8
+WORKERS = 1
+UPDATE_N, UPDATE_M = 4096, 64
+
+HEADER = ["backend", "chunk", "max_batch", "p50_ms", "p99_ms", "qps",
+          "launches", "batch_rows_p50", "batch_rows_max",
+          "scheduler", "models", "clients", "update_ms", "refit_ms"]
+
+
+def _drive(predict, queries, clients):
+    """Closed-loop traffic from `clients` concurrent callers; returns
+    (latencies, wall). One client = pure trickle (the closed batcher pays
+    its full deadline on every request, with nothing to coalesce); many
+    clients = saturation (it closes on size and the deadline never
+    fires)."""
+
+    def one(q):
+        t0 = time.perf_counter()
+        predict(q)
+        return time.perf_counter() - t0
+
+    with ThreadPoolExecutor(clients) as ex:
+        t0 = time.perf_counter()
+        lats = np.asarray(list(ex.map(one, queries)))
+        wall = time.perf_counter() - t0
+    return lats, wall
+
+
+def _traffic_row(backend, chunk, mb, scheduler, clients, engines, queries):
+    """One sweep cell: run the traffic through the requested scheduler."""
+    # per-cell batch-size distribution: the serve.* histograms accumulate
+    # inside the batcher; reset so each cell reports only its own batches
+    obs.registry().reset("serve.")
+    models = len(engines) if isinstance(engines, dict) else 1
+    if scheduler == "closed":
+        batcher = MicroBatcher(engines, BatcherConfig(
+            max_batch=mb, max_wait_ms=2.0, bucket_sizes=(16, 64, max(mb, 64))))
+        lats, wall = _drive(batcher.predict, queries, clients)
+    else:
+        cfg = SchedulerConfig(max_batch=mb, bucket_sizes=(16, 64, max(mb, 64)),
+                              num_workers=WORKERS)
+        batcher = ContinuousBatcher(engines, cfg)
+        if models > 1:
+            names = list(engines)
+
+            def predict(iq):
+                i, q = iq
+                return batcher.predict(q, model=names[i % models])
+
+            lats, wall = _drive(predict, list(enumerate(queries)), clients)
+        else:
+            lats, wall = _drive(batcher.predict, queries, clients)
+    batcher.close()
+    s = obs.latency_summary(lats, wall)
+    bs = obs.histogram("serve.batch_rows").summary()
+    row = [backend, chunk, mb,
+           round(s["p50_ms"], 2), round(s["p99_ms"], 2), round(s["qps"], 1),
+           batcher.batches_run, round(bs["p50"], 1), round(bs["max"], 1),
+           scheduler, models, clients, "-", "-"]
+    print(f"[serve_latency] {backend} chunk={chunk} max_batch={mb} "
+          f"{scheduler} models={models} clients={clients}: "
+          f"p50={s['p50_ms']:.1f}ms p99={s['p99_ms']:.1f}ms "
+          f"qps={s['qps']:.0f} launches={batcher.batches_run}")
+    return row
+
+
+def _update_vs_refit_row():
+    """Price one m-row incremental update against a cold refit at
+    (n=4096, m=64): warm PCG from the padded mean cache + extended
+    preconditioner + blockwise variance growth vs the full tight solve +
+    Lanczos pass. Both paths run once for jit warmup, then timed."""
+    rng = np.random.default_rng(7)
+    n, m, d = UPDATE_N, UPDATE_M, 8
+    X = jnp.asarray(rng.normal(size=(n + m, d)), jnp.float32)
+    w = rng.normal(size=(d,)).astype(np.float32)
+    y = jnp.asarray(np.tanh(np.asarray(X) @ w) +
+                    0.1 * rng.normal(size=n + m).astype(np.float32))
+    params = init_params(noise=0.2, dtype=jnp.float32)
+    cfg = OperatorConfig(kernel="matern32", backend="partitioned",
+                         row_block=512)
+    op_n = make_operator(cfg, X[:n], params)
+    op_ext = make_operator(cfg, X, params)
+    cache = build_prediction_cache(op_n, y[:n], jax.random.PRNGKey(0),
+                                   precond_rank=100, lanczos_rank=128)
+    precond = op_n.preconditioner(100)
+
+    def refit():
+        c = build_prediction_cache(op_ext, y, jax.random.PRNGKey(1),
+                                   precond_rank=100, lanczos_rank=128)
+        jax.block_until_ready(c.mean_cache)
+
+    def update():
+        r = update_prediction_cache(op_ext, y, cache, jax.random.PRNGKey(1),
+                                    precond=precond, precond_rank=100,
+                                    lanczos_rank=128)
+        jax.block_until_ready(r.cache.mean_cache)
+
+    refit(); update()  # jit warmup for both paths
+    t0 = time.perf_counter(); update(); update_s = time.perf_counter() - t0
+    t0 = time.perf_counter(); refit(); refit_s = time.perf_counter() - t0
+    print(f"[serve_latency] update(n={n}, m={m}): {update_s * 1e3:.0f}ms vs "
+          f"cold refit {refit_s * 1e3:.0f}ms ({update_s / refit_s:.1%})")
+    return ["partitioned", "-", "-", "-", "-", "-", "-", "-", "-",
+            f"update_n{n}_m{m}", 1, "-",
+            round(update_s * 1e3, 1), round(refit_s * 1e3, 1)]
 
 
 def run():
-    X, y, _, _, Xt, _ = load("bike", 2400)
+    X, y, _, _, Xt, _ = load("bike", 1200)
     # latency is hyperparameter-independent: skip fitting, build the caches
     # from the default init (tol 0.01 solve is still the real precompute)
     params = init_params(noise=0.2, dtype=jnp.float32)
@@ -50,43 +169,29 @@ def run():
 
     rows = []
     for backend in BACKENDS:
-        for chunk in CHUNKS:
-            engine = PredictionEngine(art, backend=backend, chunk_size=chunk)
-            engine.warmup()
-            for mb in MAX_BATCH:
-                # per-cell batch-size distribution: the serve.* histograms
-                # accumulate inside MicroBatcher; reset so each sweep cell
-                # reports only its own batches
-                obs.registry().reset("serve.")
-                batcher = MicroBatcher(engine, BatcherConfig(
-                    max_batch=mb, max_wait_ms=2.0,
-                    bucket_sizes=(16, 64, max(mb, 64))))
+        engine = PredictionEngine(art, backend=backend, chunk_size=CHUNK)
+        engine.warmup()
+        for mb in MAX_BATCH:
+            for clients in CLIENT_LOADS:
+                for scheduler in SCHEDULERS:
+                    rows.append(_traffic_row(backend, CHUNK, mb, scheduler,
+                                             clients, engine, queries))
 
-                def one(q):
-                    t0 = time.perf_counter()
-                    batcher.predict(q)
-                    return time.perf_counter() - t0
+    # multi-model continuous cell: two resident posteriors (a second
+    # artifact on a row subset — distinct caches, same hyperparameters)
+    op_b = make_operator(OperatorConfig(kernel="matern32",
+                                        backend="partitioned", row_block=512),
+                         X[:X.shape[0] // 2], params)
+    art_b = fit_posterior(op_b, y[:X.shape[0] // 2], jax.random.PRNGKey(2),
+                          precond_rank=50, lanczos_rank=64)
+    e0 = PredictionEngine(art, backend="partitioned", chunk_size=CHUNK)
+    e1 = PredictionEngine(art_b, backend="partitioned", chunk_size=CHUNK)
+    e0.warmup(); e1.warmup()
+    rows.append(_traffic_row("partitioned", CHUNK, 256, "continuous", 8,
+                             {"m0": e0, "m1": e1}, queries))
 
-                with ThreadPoolExecutor(CLIENTS) as ex:
-                    t0 = time.perf_counter()
-                    lats = np.asarray(list(ex.map(one, queries)))
-                    wall = time.perf_counter() - t0
-                batcher.close()
-                s = obs.latency_summary(lats, wall)
-                bs = obs.histogram("serve.batch_rows").summary()
-                rows.append([backend, chunk, mb,
-                             round(s["p50_ms"], 2), round(s["p99_ms"], 2),
-                             round(s["qps"], 1), batcher.batches_run,
-                             round(bs["p50"], 1), round(bs["max"], 1)])
-                print(f"[serve_latency] {backend} chunk={chunk} "
-                      f"max_batch={mb}: p50={s['p50_ms']:.1f}ms "
-                      f"p99={s['p99_ms']:.1f}ms qps={s['qps']:.0f} "
-                      f"launches={batcher.batches_run} "
-                      f"batch_rows_p50={bs['p50']:.0f}")
-
-    write_rows("serve_latency",
-               ["backend", "chunk", "max_batch", "p50_ms", "p99_ms", "qps",
-                "launches", "batch_rows_p50", "batch_rows_max"], rows)
+    rows.append(_update_vs_refit_row())
+    write_rows("serve_latency", HEADER, rows)
 
 
 if __name__ == "__main__":

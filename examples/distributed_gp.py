@@ -92,7 +92,7 @@ def main():
     op = make_operator(OperatorConfig(kernel="matern32",
                                       backend="partitioned", row_block=512),
                        X, params)
-    art = posterior_from_mean_cache(op, a_cache, jax.random.PRNGKey(1),
+    art = posterior_from_mean_cache(op, a_cache, jax.random.PRNGKey(1), y=y,
                                     lanczos_rank=64, solve_rel_residual=rel[0])
     save_artifact("artifacts/distributed_gp", art)
     engine = PredictionEngine(load_artifact("artifacts/distributed_gp"),

@@ -68,7 +68,54 @@ with MicroBatcher(eng, BatcherConfig(max_batch=64, max_wait_ms=5.0)) as mb:
     print(f"batcher: {mb.requests_served} requests in {mb.batches_run} "
           f"launches, {mb.rows_padded} padded rows — matches direct")
 
-# 4. chunked exact-variance oracle == unchunked
+# 4. fleet smoke: two resident models, LRU eviction + reload, one observe()
+from repro.serve import FleetConfig, SchedulerConfig, ServeFleet
+
+n2 = 200
+X2 = jnp.asarray(rng.normal(size=(n2, d)))
+y2 = jnp.asarray(np.sin(np.asarray(X2) @ w) + 0.1 * rng.normal(size=n2))
+op2 = make_operator(OperatorConfig(kernel="matern32", backend="partitioned",
+                                   row_block=64), X2, params)
+art_b = fit_posterior(op2, y2, jax.random.PRNGKey(1), precond_rank=50,
+                      lanczos_rank=64, pred_tol=1e-4)
+art_c = fit_posterior(op, y, jax.random.PRNGKey(2), precond_rank=50,
+                      lanczos_rank=64, pred_tol=1e-4)
+with ServeFleet(FleetConfig(capacity=2, chunk_size=64, warmup=False,
+                            scheduler=SchedulerConfig(max_batch=64))) as fleet:
+    fleet.register("a", tmp)      # from the saved directory (reloadable)
+    fleet.register("b", art_b)
+    fleet.register("c", art_c)
+    Xq = np.asarray(rng.normal(size=(9, d)))
+    ma0, _ = fleet.predict("a", Xq)
+    fleet.predict("b", Xq)
+    assert set(fleet.resident()) == {"a", "b"}
+    fleet.predict("c", Xq)        # capacity 2 -> evicts LRU ("a")
+    assert "a" not in fleet.resident() and set(fleet.resident()) == {"b", "c"}
+    ma1, _ = fleet.predict("a", Xq)  # reload from source, evicts "b"
+    np.testing.assert_allclose(ma1, ma0, atol=1e-8)
+    print(f"fleet: LRU eviction + reload OK (resident={fleet.resident()})")
+
+    d_before = fleet.digest("c")
+    Xn = jnp.asarray(rng.normal(size=(8, d)))
+    yn = jnp.asarray(np.sin(np.asarray(Xn) @ w) + 0.1 * rng.normal(size=8))
+    d_after = fleet.observe("c", Xn, yn, key=jax.random.PRNGKey(3))
+    assert d_after != d_before
+    # the updated posterior must match a cold refit on the extended data
+    X_ext = jnp.concatenate([X, Xn]); y_ext = jnp.concatenate([y, yn])
+    op_ext = make_operator(OperatorConfig(kernel="matern32",
+                                          backend="partitioned",
+                                          row_block=64), X_ext, params)
+    cold = fit_posterior(op_ext, y_ext, jax.random.PRNGKey(4),
+                         precond_rank=50, lanczos_rank=64, pred_tol=1e-4)
+    mu_u, var_u = fleet.predict("c", Xq)
+    mu_c, _ = PredictionEngine(cold, backend="partitioned",
+                               chunk_size=64).predict(Xq)
+    np.testing.assert_allclose(mu_u, np.asarray(mu_c), atol=5e-2)
+    assert fleet.stats()["c"]["count"] >= 2
+    print(f"fleet: observe() digest {d_before[:8]} -> {d_after[:8]}, "
+          f"updated mean within 5e-2 of cold refit")
+
+# 5. chunked exact-variance oracle == unchunked
 v_all = predict_var_exact(op, Xs, precond_rank=50, pred_tol=1e-4,
                           xstar_chunk=None)
 v_chk = predict_var_exact(op, Xs, precond_rank=50, pred_tol=1e-4,

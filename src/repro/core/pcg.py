@@ -73,6 +73,26 @@ class SolveState(NamedTuple):
     solutions: jax.Array            # (n, t) converged solutions
     probes: jax.Array | None = None  # (n, t-1) reused SLQ probe block
 
+    def pad_rows(self, m: int) -> "SolveState":
+        """Zero-pad the state to m appended rows (streaming observations).
+
+        The padded SOLUTIONS remain valid x0 guesses for the grown system —
+        CG is exact from any start, and a zero guess on the new rows is the
+        natural cold start for them. The padded PROBES are dropped: SLQ
+        probes must be drawn from N(0, P) over the NEW row count, and a
+        zero-padded draw is not a sample from the extended P — callers
+        (`repro.train.solver_state.WarmStartEngine.extend_rows`) must treat
+        the next step as a refresh.
+        """
+        if m < 0:
+            raise ValueError(f"cannot pad SolveState by {m} rows")
+        if m == 0:
+            return self
+        pad = jnp.zeros((m, self.solutions.shape[1]), self.solutions.dtype)
+        return SolveState(
+            solutions=jnp.concatenate([self.solutions, pad], axis=0),
+            probes=None)
+
 
 class PCGResult(NamedTuple):
     solution: jax.Array    # (n, t)

@@ -138,3 +138,24 @@ def make_preconditioner(
     inner = inner + jitter * jnp.eye(rank, dtype=L.dtype)
     chol = jnp.linalg.cholesky(inner)
     return Preconditioner(L=L, sigma2=s2, chol_inner=chol)
+
+
+def extend_preconditioner(precond: Preconditioner, m: int) -> Preconditioner:
+    """Extend P to m appended rows by zero-padding the factor:
+    P_ext = [[P, 0], [0, sigma^2 I_m]].
+
+    Zero rows leave L^T L — and therefore the cached `chol_inner` — exactly
+    unchanged, so the Woodbury solve, the determinant-lemma logdet (which
+    reads n from L.shape[0]) and exact sampling all stay consistent without
+    refactorizing anything. P_ext is SPD, so CG under it is still exact; the
+    appended rows just see a plain sigma^2 preconditioner until the next
+    full rebuild picks pivots among them. This is the incremental-update
+    analogue of `reuse=` — O(m * rank) work per observation batch
+    (`repro.core.predcache.update_prediction_cache`).
+    """
+    if m < 0:
+        raise ValueError(f"cannot extend a preconditioner by {m} rows")
+    if m == 0:
+        return precond
+    pad = jnp.zeros((m, precond.L.shape[1]), precond.L.dtype)
+    return precond._replace(L=jnp.concatenate([precond.L, pad], axis=0))

@@ -31,12 +31,14 @@ from .metrics import (
     Gauge,
     Histogram,
     MetricsRegistry,
+    SLOTracker,
     counter,
     gauge,
     histogram,
     latency_summary,
     record_solver_step,
     registry,
+    slo,
 )
 from .profiling import (
     annotate,
@@ -63,9 +65,9 @@ from .trace import (
 __all__ = [
     "CollectiveCost", "StepCost", "dist_collective_cost",
     "mll_step_cost",
-    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "SLOTracker",
     "counter", "gauge", "histogram", "latency_summary",
-    "record_solver_step", "registry",
+    "record_solver_step", "registry", "slo",
     "annotate", "disable_profiling", "enable_profiling", "memory_snapshot",
     "named_scope", "profile_session", "profiling_enabled", "step_annotation",
     "counter_event", "disable_tracing", "drain_events", "enable_tracing",

@@ -24,7 +24,9 @@ those names (histograms summarize to count/mean/percentiles).
 
 from __future__ import annotations
 
+import collections
 import threading
+import time
 
 import numpy as np
 
@@ -157,6 +159,73 @@ class Histogram:
         return self.summary()
 
 
+class SLOTracker:
+    """Per-model serving SLO instrument: latency percentiles + windowed QPS.
+
+    One per resident model in the serve fleet (`serve.slo.<model>`). Each
+    completed request records (latency, rows); `summary()` reports p50/p99
+    latency in ms over all samples and QPS over the trailing `window_s`
+    seconds — the quantities the fleet's per-model SLO table prints. The
+    timestamp deque is bounded by the window, so memory is O(recent QPS),
+    not O(lifetime requests).
+    """
+
+    __slots__ = ("name", "window_s", "_lat", "_times", "_rows", "_lock")
+
+    def __init__(self, name: str, window_s: float = 60.0):
+        self.name = name
+        self.window_s = float(window_s)
+        self._lat = Histogram(name + ".latency_ms")
+        self._times: collections.deque = collections.deque()
+        self._rows = 0
+        self._lock = threading.Lock()
+
+    def record(self, latency_s: float, rows: int = 1,
+               now: float | None = None) -> None:
+        now = time.monotonic() if now is None else now
+        self._lat.observe(latency_s * 1e3)
+        with self._lock:
+            self._rows += int(rows)
+            self._times.append(now)
+            cutoff = now - self.window_s
+            while self._times and self._times[0] < cutoff:
+                self._times.popleft()
+
+    @property
+    def count(self) -> int:
+        return self._lat.count
+
+    def summary(self, now: float | None = None) -> dict:
+        now = time.monotonic() if now is None else now
+        p50, p99 = self._lat.percentiles((50, 99))
+        with self._lock:
+            cutoff = now - self.window_s
+            while self._times and self._times[0] < cutoff:
+                self._times.popleft()
+            in_window = len(self._times)
+            # span since the oldest in-window request, so a model that has
+            # only been serving for a few seconds is not diluted by the
+            # full window
+            span = max(now - self._times[0], 1e-9) if self._times else None
+            rows = self._rows
+        return {
+            "count": self._lat.count,
+            "rows": rows,
+            "p50_ms": p50,
+            "p99_ms": p99,
+            "qps": (in_window / span) if span else 0.0,
+        }
+
+    def reset(self) -> None:
+        self._lat.reset()
+        with self._lock:
+            self._times.clear()
+            self._rows = 0
+
+    def snapshot(self):
+        return self.summary()
+
+
 class MetricsRegistry:
     """Name -> instrument map; `counter`/`gauge`/`histogram` are
     get-or-create (idempotent, so call sites never coordinate)."""
@@ -185,6 +254,9 @@ class MetricsRegistry:
 
     def histogram(self, name: str) -> Histogram:
         return self._get(name, Histogram)
+
+    def slo(self, name: str) -> SLOTracker:
+        return self._get(name, SLOTracker)
 
     def snapshot(self) -> dict:
         """Plain-JSON view of every instrument (sorted by name)."""
@@ -218,6 +290,10 @@ def gauge(name: str) -> Gauge:
 
 def histogram(name: str) -> Histogram:
     return _REGISTRY.histogram(name)
+
+
+def slo(name: str) -> SLOTracker:
+    return _REGISTRY.slo(name)
 
 
 def latency_summary(latencies_s, wall_s: float | None = None) -> dict:

@@ -1,17 +1,22 @@
-"""repro.serve — posterior artifacts + a batched GP prediction engine.
+"""repro.serve — posterior artifacts + a batched, multi-model GP serve path.
 
 The serving side of the paper's story: training produces a one-time
 precomputation (Table 2), and this package makes it a durable, restorable,
 high-throughput asset. Layering:
 
     artifact    PosteriorArtifact: versioned save/load of hyperparameters,
-                train inputs, mean + Lanczos variance caches, dtype policy
-                (atomic/CRC'd via repro.train.checkpoint)
+                train inputs + targets, mean + Lanczos variance caches,
+                dtype policy (atomic/CRC'd via repro.train.checkpoint);
+                `artifact_digest` is the content identity the fleet keys on
     engine      PredictionEngine: restore onto any KernelOperator backend;
                 jitted fixed-chunk predict(Xstar) — one compile, streaming
                 memory, optional bf16 cross-MVMs
-    batching    MicroBatcher: size/deadline request queue so many small
-                concurrent requests ride one device launch
+    batching    MicroBatcher: closed size/deadline request queue;
+                ContinuousBatcher: pipelined multi-model scheduler
+                (deficit-fair per-model queues, assemble/compute overlap)
+    fleet       ServeFleet: LRU of resident artifacts by content digest,
+                lazy load + warmup, per-model SLO tracking, and streaming
+                `observe()` updates via the incremental predcache path
 
 CLI: `python -m repro.launch.serve_gp`; benchmark:
 `benchmarks/serve_latency.py`; smoke: `scripts/sanity_serve.py`.
@@ -20,20 +25,32 @@ CLI: `python -m repro.launch.serve_gp`; benchmark:
 from .artifact import (
     ARTIFACT_VERSION,
     PosteriorArtifact,
+    artifact_digest,
     fit_posterior,
     load_artifact,
     posterior_from_mean_cache,
     save_artifact,
 )
-from .batching import BatcherConfig, MicroBatcher
+from .batching import (
+    BatcherConfig,
+    ContinuousBatcher,
+    MicroBatcher,
+    SchedulerConfig,
+)
 from .engine import PredictionEngine
+from .fleet import FleetConfig, ServeFleet
 
 __all__ = [
     "ARTIFACT_VERSION",
     "BatcherConfig",
+    "ContinuousBatcher",
+    "FleetConfig",
     "MicroBatcher",
     "PosteriorArtifact",
     "PredictionEngine",
+    "SchedulerConfig",
+    "ServeFleet",
+    "artifact_digest",
     "fit_posterior",
     "load_artifact",
     "posterior_from_mean_cache",

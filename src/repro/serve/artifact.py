@@ -23,8 +23,10 @@ operator's reduced compute dtype never reaches artifact state.
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
+import zlib
 from typing import NamedTuple
 
 import jax
@@ -56,7 +58,14 @@ from repro.train.checkpoint import load_checkpoint, save_checkpoint
 #       blocksparse-backed artifacts; the plan itself is deterministic
 #       from (kernel, X, params) and is rebuilt — and digest-verified —
 #       at load time rather than serialized.
-ARTIFACT_VERSION = 2
+#   3 — streaming updates: the artifact additionally carries the training
+#       targets y (`meta["has_y"]` False when built from an external mean
+#       cache without them), which the incremental posterior update
+#       (`predcache.update_prediction_cache` via `serve.fleet.observe`)
+#       needs to extend the mean solve; `meta["update_batches"]` /
+#       `meta["updated_from"]` track the digest lineage of updated
+#       artifacts.
+ARTIFACT_VERSION = 3
 _STEP = 0  # artifacts are single-snapshot checkpoints
 
 
@@ -67,6 +76,10 @@ class PosteriorArtifact(NamedTuple):
     params: GPParams | KernelParams # trained hyperparameters (pytree shape
                                     # follows config.kernel's spec)
     X: jax.Array                    # (n, d) training inputs
+    y: jax.Array                    # (n,) training targets (NaN-filled when
+                                    # meta["has_y"] is False — external mean
+                                    # caches may not ship them); required by
+                                    # the streaming update path (observe)
     mean_cache: jax.Array           # (n,)  K_hat^{-1} (y - mu)
     var_Q: jax.Array                # (n, r) Lanczos basis
     var_T_chol: jax.Array           # (r, r) chol of the tridiagonal T
@@ -114,9 +127,10 @@ def fit_posterior(
         "pred_tol": float(pred_tol),
         "max_cg_iters": int(max_cg_iters),
         "solve_rel_residual": float(jnp.max(cache.solve_rel_residual)),
+        "has_y": True,
     }
     return PosteriorArtifact(
-        config=op.config, params=op.params, X=op.X,
+        config=op.config, params=op.params, X=op.X, y=jnp.asarray(y),
         mean_cache=cache.mean_cache, var_Q=cache.var_Q,
         var_T_chol=cache.var_T_chol,
         solve_rel_residual=cache.solve_rel_residual, meta=meta)
@@ -127,13 +141,17 @@ def posterior_from_mean_cache(
     mean_cache: jax.Array,
     key: jax.Array,
     *,
+    y: jax.Array | None = None,
     lanczos_rank: int = 128,
     solve_rel_residual=None,
 ) -> PosteriorArtifact:
     """Artifact from an externally-solved mean cache (e.g. the distributed
     engine's `make_mean_cache_solve`): only the r Lanczos MVMs run here, so
     a mesh-solved posterior becomes servable without redoing the tight solve
-    on one device. See `examples/distributed_gp.py`."""
+    on one device. See `examples/distributed_gp.py`. Pass the training
+    targets `y` if the artifact should support streaming updates
+    (`serve.fleet.observe`); without them the y slot is NaN-filled and
+    `meta["has_y"]` is False."""
     Q, T_chol = build_variance_cache(op, key, lanczos_rank=lanczos_rank)
     rel = jnp.asarray(
         jnp.nan if solve_rel_residual is None else solve_rel_residual,
@@ -144,9 +162,12 @@ def posterior_from_mean_cache(
         "lanczos_rank": int(Q.shape[1]),
         "solve_rel_residual": float(jnp.max(rel)),
         "mean_cache_source": "external",
+        "has_y": y is not None,
     }
+    y_arr = (jnp.asarray(y) if y is not None
+             else jnp.full((op.shape[0],), jnp.nan, mean_cache.dtype))
     return PosteriorArtifact(
-        config=op.config, params=op.params, X=op.X,
+        config=op.config, params=op.params, X=op.X, y=y_arr,
         mean_cache=jnp.asarray(mean_cache), var_Q=Q, var_T_chol=T_chol,
         solve_rel_residual=rel, meta=meta)
 
@@ -160,11 +181,38 @@ def _arrays_tree(artifact: PosteriorArtifact) -> dict:
     return {
         "params": artifact.params,
         "X": artifact.X,
+        "y": artifact.y,
         "mean_cache": artifact.mean_cache,
         "var_Q": artifact.var_Q,
         "var_T_chol": artifact.var_T_chol,
         "solve_rel_residual": artifact.solve_rel_residual,
     }
+
+
+def artifact_digest(artifact: PosteriorArtifact) -> str:
+    """Content digest of an artifact: sha256 over every array leaf's
+    (path, shape, dtype, crc32) — the same per-array crc32s the checkpoint
+    manifest records — plus the static operator config. Two artifacts with
+    the same digest serve identical posteriors; an incremental update
+    (`serve.fleet.observe`) changes the digest, which is how the fleet's
+    LRU and the `updated_from` lineage stay content-addressed. Save/load
+    round-trips are bitwise, so the digest is stable across restore."""
+    h = hashlib.sha256()
+    flat, _ = jax.tree_util.tree_flatten_with_path(_arrays_tree(artifact))
+    for path, leaf in flat:
+        a = np.ascontiguousarray(np.asarray(leaf))
+        h.update(jax.tree_util.keystr(path).encode())
+        h.update(f"{a.shape}:{a.dtype}".encode())
+        h.update(zlib.crc32(a.tobytes()).to_bytes(4, "little"))
+    cfg = artifact.config._asdict()
+    cfg.pop("geom", None)
+    plan = cfg.pop("plan", None)
+    if plan is not None:
+        cfg["plan_digest"] = plan.digest
+    if not isinstance(cfg["kernel"], str):
+        cfg["kernel"] = spec_to_json(cfg["kernel"])
+    h.update(json.dumps(cfg, sort_keys=True, default=str).encode())
+    return h.hexdigest()
 
 
 def save_artifact(directory: str, artifact: PosteriorArtifact) -> str:
@@ -205,11 +253,20 @@ def load_artifact(directory: str) -> PosteriorArtifact:
     meta = manifest["meta"]
     version = meta.get("artifact_version")
     if version != ARTIFACT_VERSION:
-        hint = (
-            " (version 1 predates the composable kernel algebra: re-run the "
-            "fit to produce a v2 artifact, or load it with a pre-algebra "
-            "release — v1 flat GPParams cannot express a KernelSpec tree)"
-            if version == 1 else "")
+        if version == 1:
+            hint = (
+                " (version 1 predates the composable kernel algebra: re-run "
+                "the fit to produce a current artifact, or load it with a "
+                "pre-algebra release — v1 flat GPParams cannot express a "
+                "KernelSpec tree)")
+        elif version == 2:
+            hint = (
+                " (version 2 predates streaming updates: it does not carry "
+                "the training targets y that serve.fleet.observe needs — "
+                "re-run the fit, or rebuild via posterior_from_mean_cache "
+                "with the original caches to produce a v3 artifact)")
+        else:
+            hint = ""
         raise ValueError(
             f"artifact version {version!r} under {directory} not supported "
             f"(this build reads version {ARTIFACT_VERSION}){hint}")
@@ -221,8 +278,8 @@ def load_artifact(directory: str) -> PosteriorArtifact:
         params_tmpl = GPParams(zero, zero, zero, zero)
     skeleton = {
         "params": params_tmpl,
-        "X": zero, "mean_cache": zero, "var_Q": zero, "var_T_chol": zero,
-        "solve_rel_residual": zero,
+        "X": zero, "y": zero, "mean_cache": zero, "var_Q": zero,
+        "var_T_chol": zero, "solve_rel_residual": zero,
     }
     flat, tdef = jax.tree_util.tree_flatten_with_path(skeleton)
     leaves = []
@@ -257,7 +314,7 @@ def load_artifact(directory: str) -> PosteriorArtifact:
         cfg["plan"] = plan
     config = OperatorConfig(**cfg)
     return PosteriorArtifact(
-        config=config, params=tree["params"], X=tree["X"],
+        config=config, params=tree["params"], X=tree["X"], y=tree["y"],
         mean_cache=tree["mean_cache"], var_Q=tree["var_Q"],
         var_T_chol=tree["var_T_chol"],
         solve_rel_residual=tree["solve_rel_residual"], meta=meta)

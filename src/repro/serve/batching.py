@@ -1,27 +1,36 @@
-"""Micro-batching request queue: many small requests, one device launch.
+"""Request batching for the serve path: closed micro-batches and a
+continuous, pipelined scheduler.
 
 Serving traffic is dominated by small concurrent requests (a handful of
 query points each); launching the engine per request would pay one dispatch
-+ cross-MVM sweep per caller. The MicroBatcher instead runs a single worker
-thread that
++ cross-MVM sweep per caller. Two schedulers amortize that:
 
-  1. accumulates queued requests until `max_batch` rows are waiting or
-     `max_wait_ms` has elapsed since the batch opened (classic size/deadline
-     micro-batching),
-  2. concatenates them and zero-pads the block up to the smallest configured
-     bucket size (fixed launch shapes — the bucket set bounds the number of
-     distinct shapes the engine's chunked jit path ever sees),
-  3. runs ONE `engine.predict` for the whole block, and
-  4. scatters per-request row slices back through each caller's Future.
+`MicroBatcher` — the CLOSED batcher: one worker thread accumulates queued
+requests until `max_batch` rows are waiting or `max_wait_ms` has elapsed
+(classic size/deadline micro-batching), zero-pads the block to a bucket
+size, runs ONE `engine.predict`, scatters per-request slices back through
+Futures — then goes back to accumulating. The barrier is the cost: while
+the launch is in flight the queue only accumulates, and while accumulating
+the device idles out the deadline.
+
+`ContinuousBatcher` — the PIPELINED scheduler that removes both stalls:
+an assembler thread ships a block the moment a launch slot frees and ANY
+requests are pending (greedy ship-when-idle — no deadline to idle out),
+and keeps assembling the next block while the current launch is in flight
+on the worker pool. It is multi-model: per-model queues with deficit-fair
+scheduling (a flood on one model cannot starve another's trickle), and
+each block routes to one of the model's engine replicas so several local
+devices stay busy. `serve.fleet.ServeFleet` drives it.
 
 Callers block on `predict()` (or compose `submit()` futures); exceptions in
-the batch propagate to every affected caller. Throughput and padding
+a block propagate to every affected caller. Throughput and padding
 overhead are exported as counters for the latency benchmark
 (`benchmarks/serve_latency.py`).
 """
 
 from __future__ import annotations
 
+import collections
 import queue
 import threading
 import time
@@ -185,3 +194,300 @@ class MicroBatcher:
             for r in batch:
                 if not r.future.done():
                     r.future.set_exception(e)
+
+
+# ---------------------------------------------------------------------------
+# continuous scheduler
+# ---------------------------------------------------------------------------
+
+
+class SchedulerConfig(NamedTuple):
+    """max_batch: row cap per assembled block (a single larger request still
+    ships whole — requests are never split).
+    bucket_sizes: padded launch sizes, as in BatcherConfig.
+    max_inflight: cap on blocks queued or executing at once. Above
+    num_workers it allows BUILD-AHEAD: a block is committed while every
+    worker is still busy, overlapping host assembly (concat + pad) with
+    device compute — but only once a full max_batch of rows is pending,
+    so a trickle is never split into undersized launches.
+    num_workers: launcher threads draining assembled blocks. With several
+    engine replicas per model, worker i drives replica i % len(replicas).
+    quantum_rows: deficit-fair accrual per scheduling round — the row
+    budget every backlogged model earns while any one block is assembled."""
+
+    max_batch: int = 256
+    bucket_sizes: tuple = (16, 64, 256)
+    max_inflight: int = 2
+    num_workers: int = 1
+    quantum_rows: int = 256
+
+
+class _Block(NamedTuple):
+    model: str
+    X: np.ndarray           # (padded, d) assembled + zero-padded queries
+    rows: int               # real rows (<= padded)
+    requests: tuple         # _Request slices, in concatenation order
+
+
+class ContinuousBatcher:
+    """Pipelined, multi-model request scheduler over PredictionEngines.
+
+    The closed batcher's loop is accumulate -> launch -> scatter -> repeat:
+    a barrier at every stage. Here the stages run concurrently:
+
+      assembler: ships the moment a WORKER IS IDLE and any requests are
+        pending (greedy ship-when-idle — the device never waits out a
+        deadline); while every worker is busy, arrivals coalesce in the
+        pending queues and are only committed early (build-ahead, up to
+        max_inflight) once a full max_batch of rows is waiting — so a
+        trickle grows into one block while the current launch computes,
+        instead of splitting into undersized launches;
+      workers:   drain the block queue, one `engine.predict` per block,
+        scatter Futures. Inflight accounting (max_inflight) is the
+        pipeline: block k+1 is assembled while block k computes.
+
+    Fairness: each model owns a FIFO of pending requests. Every scheduling
+    round accrues `quantum_rows` of deficit to every backlogged model, and
+    the block goes to the most underserved one (largest deficit, FIFO age
+    breaking ties); shipping debits the rows shipped. A model flooding the
+    queue therefore cannot starve another's occasional requests.
+
+    Models are hot-swappable: `add_model` / `swap_model` / `remove_model`
+    are what `serve.fleet.ServeFleet` uses for lazy residency, eviction,
+    and digest-versioned updates from `observe()`.
+    """
+
+    DEFAULT = "default"
+
+    def __init__(self, engines=None, config: SchedulerConfig = SchedulerConfig()):
+        """engines: a single engine, a list of replicas, or {name: engine
+        | [replicas]}; None starts empty (add_model later)."""
+        self.config = config
+        self._buckets = tuple(sorted(set(int(b) for b in config.bucket_sizes)))
+        if not self._buckets:
+            raise ValueError("bucket_sizes must be non-empty")
+        if config.max_inflight < 1 or config.num_workers < 1:
+            raise ValueError("max_inflight and num_workers must be >= 1")
+        self._lock = threading.Condition()
+        self._replicas: dict[str, list] = {}
+        self._pending: dict[str, collections.deque] = {}
+        self._deficit: dict[str, float] = {}
+        self._total_rows = 0   # rows pending across all models
+        self._inflight = 0     # blocks queued or executing
+        self._closed = False
+        # counters (same surface as MicroBatcher, for the benchmark)
+        self.batches_run = 0
+        self.requests_served = 0
+        self.rows_served = 0
+        self.rows_padded = 0
+        self._counter_lock = threading.Lock()
+        if engines is not None:
+            if not isinstance(engines, dict):
+                engines = {self.DEFAULT: engines}
+            for name, eng in engines.items():
+                self.add_model(name, eng)
+        self._blocks: queue.Queue = queue.Queue()
+        self._assembler = threading.Thread(
+            target=self._assemble, name="cb-assembler", daemon=True)
+        self._workers = [
+            threading.Thread(target=self._launch, args=(i,),
+                             name=f"cb-worker-{i}", daemon=True)
+            for i in range(config.num_workers)]
+        self._assembler.start()
+        for w in self._workers:
+            w.start()
+
+    # -- model registry -----------------------------------------------------
+
+    def add_model(self, name: str, engine) -> None:
+        replicas = list(engine) if isinstance(engine, (list, tuple)) else [engine]
+        if not replicas:
+            raise ValueError("need at least one engine replica")
+        with self._lock:
+            if name in self._replicas:
+                raise ValueError(f"model {name!r} already registered")
+            self._replicas[name] = replicas
+            self._pending[name] = collections.deque()
+            self._deficit[name] = 0.0
+
+    def swap_model(self, name: str, engine) -> None:
+        """Replace a model's engine(s) in place; queued requests for the
+        name are served by the NEW engine (observe() update semantics)."""
+        replicas = list(engine) if isinstance(engine, (list, tuple)) else [engine]
+        with self._lock:
+            if name not in self._replicas:
+                raise KeyError(f"model {name!r} not registered")
+            self._replicas[name] = replicas
+
+    def remove_model(self, name: str) -> None:
+        """Drop a model; pending (unassembled) requests fail fast. Blocks
+        already assembled still complete — the block holds its engine ref."""
+        with self._lock:
+            self._replicas.pop(name)
+            dropped = self._pending.pop(name)
+            self._deficit.pop(name)
+            self._total_rows -= sum(r.X.shape[0] for r in dropped)
+        for r in dropped:
+            if not r.future.done():
+                r.future.set_exception(
+                    KeyError(f"model {name!r} removed before serving"))
+
+    def models(self) -> list[str]:
+        with self._lock:
+            return list(self._replicas)
+
+    # -- client surface -----------------------------------------------------
+
+    def submit(self, Xstar, model: str = DEFAULT) -> Future:
+        """Enqueue an (m, d) query for `model`; resolves to (mean, var)."""
+        X = np.asarray(Xstar)
+        if X.ndim == 1:
+            X = X[None, :]
+        f: Future = Future()
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("ContinuousBatcher is closed")
+            if model not in self._pending:
+                raise KeyError(f"model {model!r} not registered")
+            self._pending[model].append(_Request(X, f, time.monotonic()))
+            self._total_rows += X.shape[0]
+            self._lock.notify_all()
+        return f
+
+    def predict(self, Xstar, model: str = DEFAULT, timeout: float | None = None):
+        return self.submit(Xstar, model).result(timeout=timeout)
+
+    def close(self) -> None:
+        """Stop accepting work, fail undelivered requests, join threads."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            self._lock.notify_all()
+        self._assembler.join()
+        for _ in self._workers:
+            self._blocks.put(_SENTINEL)
+        for w in self._workers:
+            w.join()
+        with self._lock:
+            leftovers = [r for q in self._pending.values() for r in q]
+            for q in self._pending.values():
+                q.clear()
+        for r in leftovers:
+            if not r.future.done():
+                r.future.set_exception(
+                    RuntimeError("ContinuousBatcher closed before serving"))
+
+    def __enter__(self) -> "ContinuousBatcher":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- assembler ----------------------------------------------------------
+
+    def _pick_model_locked(self) -> str | None:
+        """Deficit-fair choice among backlogged models (caller holds lock)."""
+        backlogged = [n for n, q in self._pending.items() if q]
+        if not backlogged:
+            return None
+        for n in backlogged:
+            self._deficit[n] += self.config.quantum_rows
+        # largest deficit wins; oldest head-of-line request breaks ties so
+        # equally-underserved models round-robin by arrival
+        return max(backlogged,
+                   key=lambda n: (self._deficit[n], -self._pending[n][0].t_enq))
+
+    def _can_ship_locked(self) -> bool:
+        """Ship policy (caller holds lock): immediately when a worker is
+        idle; while all workers are busy, only build ahead (bounded by
+        max_inflight) once a full block of rows is pending — a trickle
+        keeps coalescing under the in-flight launch instead of being
+        committed to an undersized block."""
+        if self._total_rows == 0:
+            return False
+        if self._inflight >= self.config.max_inflight:
+            return False
+        if self._inflight < self.config.num_workers:
+            return True
+        return self._total_rows >= self.config.max_batch
+
+    def _assemble(self) -> None:
+        while True:
+            with self._lock:
+                while not self._closed and not self._can_ship_locked():
+                    self._lock.wait()
+                if self._closed:
+                    return
+                name = self._pick_model_locked()
+                q = self._pending[name]
+                batch = [q.popleft()]
+                rows = batch[0].X.shape[0]
+                while q and rows + q[0].X.shape[0] <= self.config.max_batch:
+                    nxt = q.popleft()
+                    batch.append(nxt)
+                    rows += nxt.X.shape[0]
+                self._total_rows -= rows
+                self._deficit[name] = max(0.0, self._deficit[name] - rows)
+                self._inflight += 1
+            self._blocks.put(self._build_block(name, batch, rows))
+
+    def _bucket_rows(self, rows: int) -> int:
+        for b in self._buckets:
+            if rows <= b:
+                return b
+        big = self._buckets[-1]
+        return -(-rows // big) * big
+
+    def _build_block(self, name: str, batch: list, rows: int) -> _Block:
+        now = time.monotonic()
+        obs.histogram("serve.batch_requests").observe(len(batch))
+        wait_h = obs.histogram("serve.request_wait_ms")
+        for r in batch:
+            wait_h.observe((now - r.t_enq) * 1e3)
+        X = np.concatenate([r.X for r in batch], axis=0)
+        padded = self._bucket_rows(rows)
+        obs.histogram("serve.batch_rows").observe(rows)
+        obs.histogram("serve.batch_pad_rows").observe(padded - rows)
+        Xp = np.zeros((padded,) + X.shape[1:], X.dtype)
+        Xp[:rows] = X
+        return _Block(model=name, X=Xp, rows=rows, requests=tuple(batch))
+
+    # -- workers ------------------------------------------------------------
+
+    def _launch(self, worker_id: int) -> None:
+        while True:
+            block = self._blocks.get()
+            if block is _SENTINEL:
+                return
+            try:
+                with self._lock:
+                    replicas = self._replicas.get(block.model)
+                if replicas is None:
+                    raise KeyError(
+                        f"model {block.model!r} removed before serving")
+                engine = replicas[worker_id % len(replicas)]
+                with obs.span("serve_block", model=block.model,
+                              requests=len(block.requests), rows=block.rows,
+                              padded=block.X.shape[0]):
+                    mean, var = engine.predict(block.X)
+                    mean, var = np.asarray(mean), np.asarray(var)
+                offset = 0
+                for r in block.requests:
+                    m = r.X.shape[0]
+                    r.future.set_result((mean[offset:offset + m],
+                                         var[offset:offset + m]))
+                    offset += m
+                with self._counter_lock:
+                    self.batches_run += 1
+                    self.requests_served += len(block.requests)
+                    self.rows_served += block.rows
+                    self.rows_padded += block.X.shape[0] - block.rows
+            except Exception as e:
+                for r in block.requests:
+                    if not r.future.done():
+                        r.future.set_exception(e)
+            finally:
+                with self._lock:
+                    self._inflight -= 1
+                    self._lock.notify_all()

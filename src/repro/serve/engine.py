@@ -26,6 +26,7 @@ predict path.
 
 from __future__ import annotations
 
+import threading
 import time
 
 import jax
@@ -36,6 +37,7 @@ from repro import obs
 from repro.core.operators import make_operator
 from repro.core.partitioned import map_row_chunks
 from repro.core.predcache import predict_mean, predict_var_cached
+from repro.sparse import morton_order
 
 from .artifact import PosteriorArtifact, load_artifact
 
@@ -84,9 +86,13 @@ class PredictionEngine:
             plan = getattr(self.op, "plan", None)
             sort_queries = plan is not None and plan.compact
         self.sort_queries = bool(sort_queries)
-        # launch counters (exported by the latency benchmark / CLI)
+        # launch counters (exported by the latency benchmark / CLI). The
+        # continuous scheduler drives one engine from several worker
+        # threads, and a bare `+=` is a read-modify-write that drops
+        # increments under contention — updates go through _count().
         self.chunks_run = 0
         self.rows_served = 0
+        self._counter_lock = threading.Lock()
 
         def _chunk(Xc: jax.Array):
             mean = predict_mean(self.op, Xc, self._cache)
@@ -105,6 +111,11 @@ class PredictionEngine:
     def backend(self) -> str:
         return self.config.backend
 
+    def _count(self, chunks: int, rows: int) -> None:
+        with self._counter_lock:
+            self.chunks_run += chunks
+            self.rows_served += rows
+
     def warmup(self) -> None:
         """Compile the chunk program before traffic arrives (one launch)."""
         d = self.artifact.X.shape[1]
@@ -119,23 +130,22 @@ class PredictionEngine:
             if Xstar.ndim == 1:
                 Xstar = Xstar[None, :]
             m = Xstar.shape[0]
-            order = None
+            inv = None
             if self.sort_queries and m > 1:
                 # spatially local chunks let the blocksparse operator skip
-                # cross-covariance tiles; results return in request order
-                from repro.sparse import morton_order
-
-                order = morton_order(np.asarray(Xstar))
-                Xstar = Xstar[jnp.asarray(order)]
+                # cross-covariance tiles; results return in request order.
+                # The inverse permutation is a device-side scatter — no
+                # numpy rebuild or host round-trip on the hot path.
+                order = jnp.asarray(morton_order(np.asarray(Xstar)))
+                inv = jnp.zeros((m,), order.dtype).at[order].set(
+                    jnp.arange(m, dtype=order.dtype))
+                Xstar = Xstar[order]
             out = map_row_chunks(self._predict_chunk, Xstar, self.chunk_size)
-            if order is not None:
-                inv = np.empty_like(order)
-                inv[order] = np.arange(m, dtype=order.dtype)
-                out = jax.tree.map(lambda a: a[jnp.asarray(inv)], out)
+            if inv is not None:
+                out = jax.tree.map(lambda a: a[inv], out)
             if obs.tracing_enabled():
                 jax.block_until_ready(out)
-        self.chunks_run += -(-max(m, 1) // self.chunk_size)
-        self.rows_served += m
+        self._count(-(-max(m, 1) // self.chunk_size), m)
         obs.histogram("serve.predict_ms").observe(
             (time.perf_counter() - t0) * 1e3)
         obs.histogram("serve.predict_rows").observe(m)

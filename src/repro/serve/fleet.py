@@ -1,0 +1,331 @@
+"""ServeFleet — resident multi-model serving with streaming posterior updates.
+
+One process, many trained GPs: the fleet keeps an LRU of PosteriorArtifacts
+keyed by CONTENT DIGEST (`artifact.artifact_digest` — per-array CRCs + the
+static operator config, matching the checkpoint manifest), lazily loads and
+warms a model the first time traffic names it, reuses the compiled engine
+across requests, and evicts the least-recently-used resident when capacity
+is exceeded — dropping the engine/artifact references so the device buffers
+actually free (there is no other owner; eviction is release).
+
+Requests route through the pipelined `ContinuousBatcher`: per-model queues,
+deficit-fair scheduling, and assemble/compute overlap (see
+`repro.serve.batching`). Each completed request lands in that model's
+`obs.SLOTracker` (`serve.slo.<name>`) — the per-model p50/p99/QPS surface
+the `serve_gp` CLI prints.
+
+Streaming observations go through `observe(name, X_new, y_new)`: the
+incremental update path (`core.predcache.update_prediction_cache`) extends
+the operator to n+m rows, warm-starts PCG from the zero-padded previous
+mean cache under the extended (reused) preconditioner, and grows the LOVE
+variance factorization blockwise — O(n*m)-class work instead of a cold
+refit. The result is a NEW digest-versioned artifact (meta carries
+`updated_from` lineage and the `update_batches` count); the fleet swaps it
+in under the same model name without dropping queued requests, and threads
+the extended preconditioner into the next batch (the WarmStartEngine
+reuse pattern, applied to serving).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import OrderedDict
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import obs
+from repro.core.operators import make_operator
+from repro.core.predcache import update_prediction_cache
+
+from .artifact import (
+    PosteriorArtifact,
+    artifact_digest,
+    load_artifact,
+    save_artifact,
+)
+from .batching import ContinuousBatcher, SchedulerConfig
+from .engine import PredictionEngine
+
+
+class FleetConfig(NamedTuple):
+    """capacity: resident models (LRU beyond it).
+    chunk_size / backend / compute_dtype: per-engine settings (backend None
+    = the artifact's own; compute_dtype "__keep__" likewise).
+    replicas: engine replicas per model, placed round-robin across local
+    devices; worker i of the scheduler drives replica i % replicas.
+    warmup: compile each engine's chunk program at load (one launch), so
+    first traffic never pays the jit.
+    scheduler: the ContinuousBatcher knobs.
+    slo_window_s: trailing window for per-model QPS."""
+
+    capacity: int = 4
+    chunk_size: int = 1024
+    backend: str | None = None
+    replicas: int = 1
+    warmup: bool = True
+    scheduler: SchedulerConfig = SchedulerConfig()
+    slo_window_s: float = 60.0
+
+
+class _Resident:
+    """One loaded model: digest-identified artifact + engine replicas +
+    the carried update state (extended preconditioner across observe()s)."""
+
+    __slots__ = ("digest", "artifact", "engines", "precond", "names")
+
+    def __init__(self, digest, artifact, engines):
+        self.digest = digest
+        self.artifact = artifact
+        self.engines = engines
+        self.precond = None   # built on first observe(), extended after
+        self.names = set()
+
+
+class ServeFleet:
+    """LRU fleet of PredictionEngines behind one continuous scheduler."""
+
+    def __init__(self, config: FleetConfig = FleetConfig()):
+        if config.capacity < 1:
+            raise ValueError("fleet capacity must be >= 1")
+        self.config = config
+        self._sources: dict[str, object] = {}   # name -> dir | artifact
+        self._name_digest: dict[str, str] = {}  # name -> resident digest
+        self._residents: OrderedDict[str, _Resident] = OrderedDict()
+        self._lock = threading.RLock()
+        self._batcher = ContinuousBatcher(None, config.scheduler)
+        self._closed = False
+
+    # -- registry / residency ----------------------------------------------
+
+    def register(self, name: str, source) -> None:
+        """Declare a model: `source` is an artifact directory (lazy load on
+        first traffic) or an in-process PosteriorArtifact."""
+        with self._lock:
+            if name in self._sources:
+                raise ValueError(f"model {name!r} already registered")
+            self._sources[name] = source
+
+    def models(self) -> list[str]:
+        with self._lock:
+            return list(self._sources)
+
+    def resident(self) -> list[str]:
+        """Names with a loaded artifact, least- to most-recently used
+        (names sharing one content digest ride the same residency slot)."""
+        with self._lock:
+            return [n for res in self._residents.values()
+                    for n in sorted(res.names)]
+
+    def digest(self, name: str) -> str:
+        """Content digest of the model currently serving `name` (loads it)."""
+        return self._ensure(name).digest
+
+    def _ensure(self, name: str) -> _Resident:
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("ServeFleet is closed")
+            digest = self._name_digest.get(name)
+            if digest is not None:
+                self._residents.move_to_end(digest)
+                return self._residents[digest]
+            source = self._sources.get(name)
+            if source is None:
+                raise KeyError(f"model {name!r} not registered")
+            with obs.span("fleet_load", model=name):
+                artifact = (source if isinstance(source, PosteriorArtifact)
+                            else load_artifact(source))
+                digest = artifact_digest(artifact)
+                res = self._residents.get(digest)
+                if res is None:
+                    res = _Resident(digest, artifact,
+                                    self._make_engines(artifact))
+                    self._residents[digest] = res
+                    obs.counter("serve.fleet.loads").inc()
+                else:
+                    # same content under a second name: share the engines
+                    self._residents.move_to_end(digest)
+            res.names.add(name)
+            self._name_digest[name] = digest
+            self._batcher.add_model(name, res.engines)
+            self._evict_over_capacity()
+            obs.gauge("serve.fleet.resident").set(len(self._residents))
+            return res
+
+    def _make_engines(self, artifact: PosteriorArtifact) -> list:
+        devices = jax.local_devices()
+        num = max(1, min(self.config.replicas, len(devices)))
+        kwargs = dict(chunk_size=self.config.chunk_size)
+        if self.config.backend is not None:
+            kwargs["backend"] = self.config.backend
+        engines = []
+        for i in range(num):
+            art = artifact if i == 0 else _place(artifact, devices[i])
+            eng = PredictionEngine(art, **kwargs)
+            if self.config.warmup:
+                eng.warmup()
+            engines.append(eng)
+        return engines
+
+    def _evict_over_capacity(self) -> None:
+        while len(self._residents) > self.config.capacity:
+            digest, res = self._residents.popitem(last=False)
+            for n in res.names:
+                self._batcher.remove_model(n)
+                self._name_digest.pop(n, None)
+            # the fleet holds the only engine/artifact references: dropping
+            # them here is what releases the device buffers
+            res.engines = []
+            res.artifact = None
+            obs.counter("serve.fleet.evictions").inc()
+
+    # -- serving ------------------------------------------------------------
+
+    @property
+    def batcher(self) -> ContinuousBatcher:
+        """The underlying scheduler (launch/padding counters live there)."""
+        return self._batcher
+
+    def submit(self, name: str, Xstar):
+        """Future of (mean, var) for `name`; loads the model if needed."""
+        self._ensure(name)
+        t0 = time.monotonic()
+        rows = 1 if getattr(Xstar, "ndim", 2) == 1 else len(Xstar)
+        fut = self._batcher.submit(Xstar, model=name)
+        tracker = obs.registry().slo(f"serve.slo.{name}")
+        tracker.window_s = self.config.slo_window_s
+
+        def _record(f):
+            if f.exception() is None:
+                tracker.record(time.monotonic() - t0, rows)
+
+        fut.add_done_callback(_record)
+        return fut
+
+    def predict(self, name: str, Xstar, timeout: float | None = None):
+        return self.submit(name, Xstar).result(timeout=timeout)
+
+    def stats(self) -> dict:
+        """Per-model SLO summaries (p50/p99 latency ms, windowed QPS)."""
+        with self._lock:
+            names = list(self._sources)
+        return {n: obs.registry().slo(f"serve.slo.{n}").summary()
+                for n in names}
+
+    # -- streaming updates --------------------------------------------------
+
+    def observe(self, name: str, X_new, y_new, key: jax.Array | None = None,
+                save_to: str | None = None, **update_kwargs) -> str:
+        """Absorb m new observations into `name`'s posterior; returns the
+        new artifact's digest. Incremental (`update_prediction_cache`):
+        warm PCG from the padded previous mean cache + the reused extended
+        preconditioner, blockwise LOVE variance growth. The new artifact
+        replaces the old one under this name (queued requests see the swap
+        atomically per block); pass `save_to` to also persist it."""
+        with self._lock:
+            res = self._ensure(name)
+            art = res.artifact
+            if not art.meta.get("has_y", False):
+                raise ValueError(
+                    f"model {name!r} cannot absorb observations: its "
+                    "artifact does not carry training targets "
+                    "(meta['has_y'] is False)")
+            X_new = jnp.asarray(X_new, art.X.dtype)
+            if X_new.ndim == 1:
+                X_new = X_new[None, :]
+            y_new = jnp.asarray(y_new, art.y.dtype).reshape(-1)
+            if X_new.shape[0] != y_new.shape[0]:
+                raise ValueError(
+                    f"X_new has {X_new.shape[0]} rows but y_new has "
+                    f"{y_new.shape[0]}")
+            batches = int(art.meta.get("update_batches", 0))
+            if key is None:
+                key = jax.random.PRNGKey(batches + 1)
+            X_ext = jnp.concatenate([art.X, X_new], axis=0)
+            y_ext = jnp.concatenate([art.y, y_new], axis=0)
+            cfg = art.config._replace(geom=None)
+            if getattr(cfg, "plan", None) is not None:
+                # the sparsity plan is a function of X — rebuild over the
+                # extended inputs with the same tile/margin policy
+                from repro.sparse import build_plan
+
+                cfg = cfg._replace(plan=build_plan(
+                    cfg.kernel, X_ext, art.params,
+                    tile=cfg.plan.tile, margin=cfg.plan.margin))
+            op = make_operator(cfg, X_ext, art.params)
+            upd_kw = dict(
+                precond_rank=int(art.meta.get("precond_rank", 100)),
+                lanczos_rank=int(art.meta.get("lanczos_rank", 128)),
+                pred_tol=float(art.meta.get("pred_tol", 0.01)),
+            )
+            upd_kw.update(update_kwargs)
+            with obs.span("fleet_observe", model=name, m=int(X_new.shape[0])):
+                upd = update_prediction_cache(
+                    op, y_ext, art.cache(), key, precond=res.precond,
+                    **upd_kw)
+            meta = dict(art.meta)
+            meta["n"] = int(X_ext.shape[0])
+            meta["update_batches"] = batches + 1
+            meta["updated_from"] = res.digest
+            meta["solve_rel_residual"] = float(
+                jnp.max(upd.cache.solve_rel_residual))
+            meta["lanczos_rank"] = int(upd.cache.var_Q.shape[1])
+            new_art = PosteriorArtifact(
+                config=cfg, params=art.params, X=X_ext, y=y_ext,
+                mean_cache=upd.cache.mean_cache, var_Q=upd.cache.var_Q,
+                var_T_chol=upd.cache.var_T_chol,
+                solve_rel_residual=upd.cache.solve_rel_residual, meta=meta)
+            new_digest = artifact_digest(new_art)
+            engines = self._make_engines(new_art)
+            new_res = _Resident(new_digest, new_art, engines)
+            new_res.precond = upd.precond
+            new_res.names = set(res.names)
+            # swap under every name the old digest served; in-memory
+            # sources follow the update so a post-eviction reload does not
+            # resurrect the stale posterior
+            del self._residents[res.digest]
+            self._residents[new_digest] = new_res
+            for n in new_res.names:
+                self._name_digest[n] = new_digest
+                self._batcher.swap_model(n, engines)
+                if isinstance(self._sources.get(n), PosteriorArtifact):
+                    self._sources[n] = new_art
+            obs.counter("serve.fleet.updates").inc()
+            obs.histogram("serve.fleet.update_rows").observe(
+                int(upd.num_new))
+            if save_to is not None:
+                save_artifact(save_to, new_art)
+            return new_digest
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def close(self) -> None:
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+        self._batcher.close()
+        with self._lock:
+            self._residents.clear()
+            self._name_digest.clear()
+
+    def __enter__(self) -> "ServeFleet":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def _place(artifact: PosteriorArtifact, device) -> PosteriorArtifact:
+    """Copy an artifact's arrays onto `device` (engine replica placement)."""
+
+    def put(tree):
+        return jax.tree.map(lambda a: jax.device_put(a, device), tree)
+
+    return artifact._replace(
+        params=put(artifact.params), X=put(artifact.X), y=put(artifact.y),
+        mean_cache=put(artifact.mean_cache), var_Q=put(artifact.var_Q),
+        var_T_chol=put(artifact.var_T_chol),
+        solve_rel_residual=put(artifact.solve_rel_residual))

@@ -215,6 +215,31 @@ class _WarmEngineBase:
             launches=launches, hbm_bytes=hbm_bytes))
         return loss, aux, g_params
 
+    def extend_rows(self, m: int) -> None:
+        """Absorb m appended training rows into the carried solver state
+        (streaming observations between optimizer steps — the training-side
+        twin of `predcache.update_prediction_cache`).
+
+        The previous solutions are zero-padded (`SolveState.pad_rows`) so
+        the y column still warm-starts the (n+m)-row system, and the
+        preconditioner factor is zero-row-extended
+        (`pivchol.extend_preconditioner`) so the state stays shape-
+        consistent. The padded probe solutions are NOT carried — their SLQ
+        tridiagonals describe the old system — so the next step is forced
+        to run as a refresh: fresh probes, and a preconditioner whose
+        pivots can land on the new rows.
+        """
+        if m < 0:
+            raise ValueError(f"cannot extend solver state by {m} rows")
+        if self.state is None or m == 0:
+            return
+        from repro.core.pivchol import extend_preconditioner
+
+        self.state = self.state._replace(
+            solve=self.state.solve.pad_rows(m),
+            precond=extend_preconditioner(self.state.precond, m))
+        self._steps_since_refresh = self.warm.refresh_every
+
     def reset(self):
         self.state = None
         self._params_ref = None

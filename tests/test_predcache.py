@@ -3,6 +3,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import (
     ExactGP, ExactGPConfig, dense_khat, init_params, kernel_diag,
@@ -128,3 +129,135 @@ def test_prediction_reuses_cache_without_solves(gp_data, rng):
     op = gp.operator(X, params)
     jaxpr = jax.make_jaxpr(lambda xs: predict_mean(op, xs, cache))(Xs)
     assert "while" not in str(jaxpr) and "scan" not in str(jaxpr)
+
+
+# ---------------------------------------------------------------------------
+# incremental updates (update_prediction_cache)
+# ---------------------------------------------------------------------------
+
+
+def _stream_data(rng, n0=160, m=16, k=3, d=4):
+    """(X_full, y_full) covering n0 + k*m rows of one smooth function."""
+    n = n0 + k * m
+    X = jnp.asarray(rng.normal(size=(n, d)))
+    w = rng.normal(size=(d,))
+    y = jnp.asarray(np.sin(np.asarray(X) @ w) + 0.1 * rng.normal(size=n))
+    return X, y
+
+
+def _op(backend, X, params):
+    from repro.core import OperatorConfig, make_operator
+    return make_operator(
+        OperatorConfig(kernel="matern32", backend=backend, row_block=32),
+        X, params)
+
+
+@pytest.mark.parametrize("backend", ["dense", "partitioned"])
+def test_update_over_batches_matches_cold_refit(rng, backend):
+    """k sequential m-row updates == one cold refit on the full data, for
+    BOTH served quantities (mean and LOVE variance), within the paper's
+    prediction tolerance. Lanczos rank is kept near n so the comparison
+    pins the update algebra, not the shared LOVE truncation error."""
+    from repro.core.predcache import (
+        build_prediction_cache, predict_mean, predict_var_cached,
+        update_prediction_cache,
+    )
+
+    n0, m, k = 160, 16, 3
+    X, y = _stream_data(rng, n0=n0, m=m, k=k)
+    params = init_params(noise=0.2, dtype=jnp.float64)
+    kw = dict(precond_rank=40, lanczos_rank=200, pred_tol=0.01)
+
+    op0 = _op(backend, X[:n0], params)
+    cache = build_prediction_cache(op0, y[:n0], jax.random.PRNGKey(0), **kw)
+    precond = None
+    for i in range(k):
+        n_i = n0 + (i + 1) * m
+        op_i = _op(backend, X[:n_i], params)
+        res = update_prediction_cache(op_i, y[:n_i], cache,
+                                      jax.random.PRNGKey(i + 1),
+                                      precond=precond, **kw)
+        cache, precond = res.cache, res.precond
+        assert res.num_new == m
+
+    n = n0 + k * m
+    op = _op(backend, X, params)
+    cold = build_prediction_cache(op, y, jax.random.PRNGKey(9), **kw)
+    Xs = jnp.asarray(rng.normal(size=(25, X.shape[1])))
+    np.testing.assert_allclose(
+        np.asarray(predict_mean(op, Xs, cache)),
+        np.asarray(predict_mean(op, Xs, cold)), atol=5e-2)
+    np.testing.assert_allclose(
+        np.asarray(predict_var_cached(op, Xs, cache)),
+        np.asarray(predict_var_cached(op, Xs, cold)), atol=5e-2)
+    assert cache.mean_cache.shape == (n,)
+    # rank grew by m per non-compacted batch (Lanczos rank is capped at n0)
+    assert cache.var_Q.shape[1] == min(kw["lanczos_rank"], n0) + k * m
+
+
+def test_update_warm_solve_cheaper_than_cold(rng):
+    """The warm-started update must apply FEWER CG iterations than a cold
+    solve of the same extended system at the same tolerance — the claim
+    behind the update's O(n*m) cost."""
+    from repro.core.pcg import pcg
+    from repro.core.predcache import (
+        build_prediction_cache, update_prediction_cache,
+    )
+
+    n0, m = 160, 16
+    X, y = _stream_data(rng, n0=n0, m=m, k=1)
+    params = init_params(noise=0.2, dtype=jnp.float64)
+    op0 = _op("partitioned", X[:n0], params)
+    cache = build_prediction_cache(op0, y[:n0], jax.random.PRNGKey(0),
+                                   precond_rank=40, lanczos_rank=80,
+                                   pred_tol=0.01)
+    op = _op("partitioned", X, params)
+    res = update_prediction_cache(op, y, cache, jax.random.PRNGKey(1),
+                                  precond_rank=40, lanczos_rank=80,
+                                  pred_tol=0.01)
+    warm_iters = int(np.max(np.asarray(res.mean_iters)))
+    from repro.core.kernels_math import constant_mean
+    precond = op.preconditioner(40)
+    yc = y - constant_mean(op.params)
+    cold = pcg(op, yc[:, None], precond.solve, max_iters=400, min_iters=1,
+               tol=0.01)
+    cold_iters = int(np.max(np.asarray(cold.iterations)))
+    assert warm_iters < cold_iters
+    assert float(jnp.max(res.cache.solve_rel_residual)) <= 0.01
+
+
+def test_update_compaction_refreshes_variance(rng):
+    """Once the grown rank would exceed max_rank the update re-runs the
+    full Lanczos pass (variance_refreshed) and the rank resets."""
+    from repro.core.predcache import (
+        build_prediction_cache, update_prediction_cache,
+    )
+
+    n0, m = 160, 16
+    X, y = _stream_data(rng, n0=n0, m=m, k=1)
+    params = init_params(noise=0.2, dtype=jnp.float64)
+    op0 = _op("partitioned", X[:n0], params)
+    cache = build_prediction_cache(op0, y[:n0], jax.random.PRNGKey(0),
+                                   precond_rank=40, lanczos_rank=60,
+                                   pred_tol=0.01)
+    op = _op("partitioned", X, params)
+    res = update_prediction_cache(op, y, cache, jax.random.PRNGKey(1),
+                                  precond_rank=40, lanczos_rank=60,
+                                  max_rank=64, pred_tol=0.01)
+    assert res.variance_refreshed
+    assert res.cache.var_Q.shape == (n0 + m, 60)
+
+
+def test_update_rejects_non_grown_operator(rng):
+    from repro.core.predcache import (
+        build_prediction_cache, update_prediction_cache,
+    )
+
+    n0 = 64
+    X, y = _stream_data(rng, n0=n0, m=0, k=0)
+    params = init_params(noise=0.2, dtype=jnp.float64)
+    op = _op("dense", X, params)
+    cache = build_prediction_cache(op, y, jax.random.PRNGKey(0),
+                                   precond_rank=20, lanczos_rank=30)
+    with pytest.raises(ValueError, match="at least one new row"):
+        update_prediction_cache(op, y, cache, jax.random.PRNGKey(1))

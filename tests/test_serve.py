@@ -30,7 +30,7 @@ def test_artifact_roundtrip_bitwise(gp_data, tmp_path):
     art = _artifact(gp_data)
     save_artifact(str(tmp_path), art)
     art2 = load_artifact(str(tmp_path))
-    for field in ("params", "X", "mean_cache", "var_Q", "var_T_chol",
+    for field in ("params", "X", "y", "mean_cache", "var_Q", "var_T_chol",
                   "solve_rel_residual"):
         a, b = getattr(art, field), getattr(art2, field)
         jax.tree.map(lambda x, y: np.testing.assert_array_equal(
@@ -170,3 +170,101 @@ def test_engine_empty_query(gp_data):
     engine = PredictionEngine(art, chunk_size=16)
     mean, var = engine.predict(np.zeros((0, gp_data[0].shape[1])))
     assert mean.shape == (0,) and var.shape == (0,)
+
+
+def test_engine_counters_thread_safe(gp_data, rng):
+    """Concurrent predicts must not lose counter increments (the counters
+    are mutated under a lock, not bare += on shared ints)."""
+    art = _artifact(gp_data)
+    engine = PredictionEngine(art, chunk_size=8)
+    d = gp_data[0].shape[1]
+    reqs = [np.asarray(rng.normal(size=(16, d))) for _ in range(32)]
+    with ThreadPoolExecutor(8) as ex:
+        list(ex.map(engine.predict, reqs))
+    assert engine.chunks_run == 32 * 2   # 16 rows / chunk 8
+    assert engine.rows_served == 32 * 16
+
+
+def test_continuous_batcher_matches_direct(gp_data, rng):
+    """Concurrent requests through the pipelined scheduler == direct
+    engine predictions, across both client loads (trickle + saturated)."""
+    from repro.serve import ContinuousBatcher, SchedulerConfig
+
+    art = _artifact(gp_data)
+    engine = PredictionEngine(art, chunk_size=32)
+    d = gp_data[0].shape[1]
+    reqs = [np.asarray(rng.normal(size=(int(rng.integers(1, 7)), d)))
+            for _ in range(24)]
+    with ContinuousBatcher(engine, SchedulerConfig(
+            max_batch=32, bucket_sizes=(8, 32))) as cb:
+        with ThreadPoolExecutor(8) as ex:
+            outs = list(ex.map(cb.predict, reqs))
+        assert cb.requests_served == len(reqs)
+        assert 0 < cb.batches_run <= len(reqs)
+    for q, (m, v) in zip(reqs, outs):
+        ref_m, ref_v = engine.predict(q)
+        np.testing.assert_allclose(m, np.asarray(ref_m), rtol=1e-12)
+        np.testing.assert_allclose(v, np.asarray(ref_v), rtol=1e-12)
+
+
+def test_continuous_batcher_multimodel_fairness(gp_data, rng):
+    """Two models share the scheduler: every request is answered by ITS
+    model's engine, and a flood on one model cannot starve the other."""
+    from repro.serve import ContinuousBatcher, SchedulerConfig
+
+    X, y = gp_data
+    params = init_params(noise=0.2, dtype=jnp.float64)
+    art_a = _artifact(gp_data)
+    half = X.shape[0] // 2
+    op_b = make_operator(OP_CFG, X[:half], params)
+    art_b = fit_posterior(op_b, y[:half], jax.random.PRNGKey(3),
+                          precond_rank=30, lanczos_rank=40, pred_tol=1e-4)
+    ea = PredictionEngine(art_a, chunk_size=32)
+    eb = PredictionEngine(art_b, chunk_size=32)
+    d = X.shape[1]
+    with ContinuousBatcher({"a": ea, "b": eb}, SchedulerConfig(
+            max_batch=16, bucket_sizes=(8, 16))) as cb:
+        flood_q = [np.asarray(rng.normal(size=(4, d))) for _ in range(40)]
+        trickle_q = [np.asarray(rng.normal(size=(2, d))) for _ in range(4)]
+        flood = [cb.submit(q, model="a") for q in flood_q]
+        trickle = [cb.submit(q, model="b") for q in trickle_q]
+        outs_b = [f.result(timeout=60) for f in trickle]
+        outs_a = [f.result(timeout=60) for f in flood]
+    # routed to the RIGHT engine: model-b answers equal eb's direct
+    # predictions (and would not, were they served by ea's posterior)
+    for q, (m, v) in zip(trickle_q, outs_b):
+        ref_m, _ = eb.predict(q)
+        np.testing.assert_allclose(m, np.asarray(ref_m), rtol=1e-12)
+        assert not np.allclose(m, np.asarray(ea.predict(q)[0]))
+    for q, (m, v) in zip(flood_q[:3], outs_a[:3]):
+        np.testing.assert_allclose(m, np.asarray(ea.predict(q)[0]),
+                                   rtol=1e-12)
+
+
+def test_continuous_batcher_remove_model_fails_pending(gp_data):
+    from repro.serve import ContinuousBatcher, SchedulerConfig
+
+    art = _artifact(gp_data)
+    engine = PredictionEngine(art, chunk_size=32)
+    cb = ContinuousBatcher({"m": engine},
+                           SchedulerConfig(max_batch=8, max_inflight=1))
+    try:
+        with pytest.raises(KeyError):
+            cb.predict(np.zeros((1, gp_data[0].shape[1])), model="ghost")
+        cb.remove_model("m")
+        with pytest.raises(KeyError):
+            cb.submit(np.zeros((1, gp_data[0].shape[1])), model="m")
+    finally:
+        cb.close()
+
+
+def test_continuous_batcher_close_fails_undelivered(gp_data):
+    from repro.serve import ContinuousBatcher, SchedulerConfig
+
+    art = _artifact(gp_data)
+    cb = ContinuousBatcher(PredictionEngine(art, chunk_size=32),
+                           SchedulerConfig())
+    cb.close()
+    cb.close()  # idempotent
+    with pytest.raises(RuntimeError):
+        cb.submit(np.zeros((1, gp_data[0].shape[1])))

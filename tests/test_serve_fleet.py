@@ -1,0 +1,156 @@
+"""repro.serve.fleet: residency, LRU eviction, digests, observe() updates."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import OperatorConfig, init_params, make_operator
+from repro.serve import (
+    FleetConfig, PredictionEngine, SchedulerConfig, ServeFleet,
+    artifact_digest, fit_posterior, posterior_from_mean_cache, save_artifact,
+)
+
+OP_CFG = OperatorConfig(kernel="matern32", backend="partitioned",
+                        row_block=32)
+
+
+def _fit(rng, n=120, d=3, seed=0):
+    X = jnp.asarray(rng.normal(size=(n, d)))
+    w = rng.normal(size=(d,))
+    y = jnp.asarray(np.sin(np.asarray(X) @ w) + 0.1 * rng.normal(size=n))
+    params = init_params(noise=0.2, dtype=jnp.float64)
+    op = make_operator(OP_CFG, X, params)
+    art = fit_posterior(op, y, jax.random.PRNGKey(seed), precond_rank=30,
+                        lanczos_rank=40, pred_tol=1e-3)
+    return art, X, y, w, params
+
+
+def _fleet(capacity=2):
+    return ServeFleet(FleetConfig(
+        capacity=capacity, chunk_size=32, warmup=False,
+        scheduler=SchedulerConfig(max_batch=32, bucket_sizes=(8, 32))))
+
+
+def test_fleet_serves_registered_artifact(rng):
+    art, X, *_ = _fit(rng)
+    with _fleet() as fleet:
+        fleet.register("m", art)
+        Xq = np.asarray(rng.normal(size=(5, X.shape[1])))
+        mean, var = fleet.predict("m", Xq)
+        ref_m, ref_v = PredictionEngine(art, chunk_size=32).predict(Xq)
+        np.testing.assert_allclose(mean, np.asarray(ref_m), rtol=1e-12)
+        np.testing.assert_allclose(var, np.asarray(ref_v), rtol=1e-12)
+        assert fleet.resident() == ["m"]
+        assert fleet.stats()["m"]["count"] == 1
+
+
+def test_fleet_lru_eviction_and_reload(rng, tmp_path):
+    """Capacity 2 with 3 models: the least-recently-used artifact is
+    dropped; traffic to it reloads from its directory source and
+    reproduces the original predictions."""
+    art_a, X, *_ = _fit(rng, seed=0)
+    art_b, *_ = _fit(rng, n=100, seed=1)
+    art_c, *_ = _fit(rng, n=80, seed=2)
+    save_artifact(str(tmp_path), art_a)
+    with _fleet(capacity=2) as fleet:
+        fleet.register("a", str(tmp_path))
+        fleet.register("b", art_b)
+        fleet.register("c", art_c)
+        Xq = np.asarray(rng.normal(size=(4, X.shape[1])))
+        ma0, _ = fleet.predict("a", Xq)
+        fleet.predict("b", Xq)
+        assert set(fleet.resident()) == {"a", "b"}
+        fleet.predict("c", Xq)
+        assert set(fleet.resident()) == {"b", "c"}  # "a" evicted (LRU)
+        ma1, _ = fleet.predict("a", Xq)             # reload from disk
+        np.testing.assert_allclose(ma1, ma0, rtol=1e-12)
+        assert "b" not in fleet.resident()
+        assert sorted(fleet.models()) == ["a", "b", "c"]
+
+
+def test_fleet_shares_residency_by_digest(rng):
+    """Two names over identical content share one residency slot (and one
+    engine set) instead of loading the artifact twice."""
+    art, X, *_ = _fit(rng)
+    with _fleet(capacity=2) as fleet:
+        fleet.register("x", art)
+        fleet.register("y", art)
+        Xq = np.asarray(rng.normal(size=(3, X.shape[1])))
+        mx, _ = fleet.predict("x", Xq)
+        my, _ = fleet.predict("y", Xq)
+        np.testing.assert_array_equal(mx, my)
+        assert fleet.digest("x") == fleet.digest("y")
+        assert sorted(fleet.resident()) == ["x", "y"]  # one slot, two names
+
+
+def test_fleet_observe_updates_posterior(rng):
+    """observe() absorbs a batch: new digest, lineage metadata, and the
+    served posterior matches a cold refit on the extended data."""
+    art, X, y, w, params = _fit(rng)
+    m = 12
+    Xn = jnp.asarray(rng.normal(size=(m, X.shape[1])))
+    yn = jnp.asarray(np.sin(np.asarray(Xn) @ w) +
+                     0.1 * rng.normal(size=m))
+    with _fleet() as fleet:
+        fleet.register("m", art)
+        d0 = fleet.digest("m")
+        d1 = fleet.observe("m", Xn, yn, key=jax.random.PRNGKey(5))
+        assert d1 != d0
+        assert fleet.digest("m") == d1
+        Xq = np.asarray(rng.normal(size=(6, X.shape[1])))
+        mean_u, var_u = fleet.predict("m", Xq)
+    X_ext = jnp.concatenate([X, Xn])
+    y_ext = jnp.concatenate([y, yn])
+    op_ext = make_operator(OP_CFG, X_ext, params)
+    cold = fit_posterior(op_ext, y_ext, jax.random.PRNGKey(6),
+                         precond_rank=30, lanczos_rank=40, pred_tol=1e-3)
+    mean_c, _ = PredictionEngine(cold, chunk_size=32).predict(Xq)
+    np.testing.assert_allclose(mean_u, np.asarray(mean_c), atol=5e-2)
+    assert var_u.shape == mean_u.shape and np.all(var_u > 0)
+
+
+def test_fleet_observe_records_lineage(rng):
+    art, X, y, w, params = _fit(rng)
+    Xn = jnp.asarray(rng.normal(size=(8, X.shape[1])))
+    yn = jnp.zeros((8,), y.dtype)
+    with _fleet() as fleet:
+        fleet.register("m", art)
+        d0 = fleet.digest("m")
+        fleet.observe("m", Xn, yn, key=jax.random.PRNGKey(7))
+        res = fleet._ensure("m")
+        assert res.artifact.meta["n"] == X.shape[0] + 8
+        assert res.artifact.meta["update_batches"] == 1
+        assert res.artifact.meta["updated_from"] == d0
+
+
+def test_fleet_observe_requires_targets(rng):
+    """An artifact without training targets cannot absorb observations."""
+    art, X, y, w, params = _fit(rng)
+    op = make_operator(OP_CFG, X, params)
+    no_y = posterior_from_mean_cache(op, art.mean_cache,
+                                     jax.random.PRNGKey(1), lanczos_rank=40)
+    assert not no_y.meta.get("has_y", False)
+    with _fleet() as fleet:
+        fleet.register("m", no_y)
+        with pytest.raises(ValueError, match="has_y"):
+            fleet.observe("m", np.zeros((2, X.shape[1])), np.zeros((2,)))
+
+
+def test_fleet_digest_stable_and_content_sensitive(rng):
+    art, *_ = _fit(rng)
+    assert artifact_digest(art) == artifact_digest(art)
+    bumped = art._replace(mean_cache=art.mean_cache + 1.0)
+    assert artifact_digest(bumped) != artifact_digest(art)
+
+
+def test_fleet_unknown_model_and_closed(rng):
+    art, X, *_ = _fit(rng)
+    fleet = _fleet()
+    fleet.register("m", art)
+    with pytest.raises(KeyError):
+        fleet.predict("ghost", np.zeros((1, X.shape[1])))
+    fleet.close()
+    fleet.close()  # idempotent
+    with pytest.raises(RuntimeError):
+        fleet.predict("m", np.zeros((1, X.shape[1])))
