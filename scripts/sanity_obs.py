@@ -8,8 +8,17 @@ Eq. 2 backward), phase self-times partition the root span's wall-clock
 (the within-10% acceptance is an identity here, checked at 1%), the
 metrics snapshot rides in the same file with nonzero CG counters, and the
 registry-backed `GPFitResult.telemetry` carries per-step modes and
-iteration counts. Finishes by rendering the obs_report table to stdout.
+iteration counts.
+
+The measurement-plane (obs v2) acceptance rides the same mini-fit:
+`obs_report --compare-model` renders a per-backend measured-vs-modeled
+table from the trace, `obs_diff` is idempotent on an unchanged BENCH JSON
+(zero regressions) and fails on a synthetically perturbed copy, and the
+solver health sentinels fire on a sick synthetic aux. Finishes by
+rendering the obs_report table to stdout.
 """
+import copy
+import json
 import os
 import tempfile
 
@@ -68,7 +77,54 @@ print(f"wall={wall:.1f} ms, phase self-time total={covered:.1f} ms "
       f"({100 * covered / wall:.2f}%)")
 assert wall > 0 and abs(covered - wall) <= 0.01 * wall, (covered, wall)
 
-# 4. the CLI renders end-to-end
+# 4. measured vs modeled: the traced fit's phased dispatch stamped
+# measured_ms + modeled bytes on every phase span; the comparison table
+# must produce rows for this backend with positive measured time
+from repro.obs.measure import phase_model_comparison
+
+cmp_rows = phase_model_comparison(events)
+print(f"model-comparison rows: {[(r['backend'], r['phase']) for r in cmp_rows]}")
+assert cmp_rows, "no measured-vs-modeled rows from the traced fit"
+assert {r["phase"] for r in cmp_rows} >= {"cg_solve", "eq2_backward"}
+assert all(r["measured_ms"] > 0 for r in cmp_rows)
+
+# 5. the regression gate: self-diff of a BENCH JSON is clean (idempotent),
+# an out-of-tolerance perturbation fails with exit code 1
+from repro.launch.obs_diff import main as obs_diff_main
+
+bench = {"bench": "sanity", "header": ["backend", "rmse", "fit_s"],
+         "records": [{"backend": gp.config.backend, "rmse": 0.5,
+                      "fit_s": 10.0}]}
+tmp = tempfile.mkdtemp(prefix="sanity_obs_diff_")
+base_dir, cur_dir = os.path.join(tmp, "base"), os.path.join(tmp, "cur")
+os.makedirs(base_dir), os.makedirs(cur_dir)
+with open(os.path.join(base_dir, "BENCH_sanity.json"), "w") as f:
+    json.dump(bench, f)
+with open(os.path.join(cur_dir, "BENCH_sanity.json"), "w") as f:
+    json.dump(bench, f)
+assert obs_diff_main([cur_dir, "--baseline", base_dir]) == 0, \
+    "self-diff must be clean"
+bad = copy.deepcopy(bench)
+bad["records"][0]["fit_s"] = 1000.0
+with open(os.path.join(cur_dir, "BENCH_sanity.json"), "w") as f:
+    json.dump(bad, f)
+assert obs_diff_main([cur_dir, "--baseline", base_dir]) == 1, \
+    "perturbed BENCH must fail the gate"
+print("obs_diff: self-diff clean, perturbation caught")
+
+# 6. health sentinels fire on a sick synthetic aux
+from repro.obs import health as obs_health
+
+obs_health.enable_health(None)
+kinds = obs_health.check_solver_step(
+    step=0, mode="warm", tol=1e-2, max_iters=10,
+    iters_per_rhs=[10], rel_residual=[0.5])
+assert kinds == ["cg.max_iters"], kinds
+assert [e["kind"] for e in obs_health.drain_health_events()] == kinds
+obs_health.disable_health()
+print(f"health sentinels: {kinds}")
+
+# 7. the CLI renders end-to-end, measured-vs-modeled table included
 print()
-obs_report_main([path])
+obs_report_main([path, "--compare-model"])
 print("OK")

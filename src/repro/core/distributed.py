@@ -966,3 +966,47 @@ def shard_vector(mesh: Mesh, geom: DistGeometry, y: jax.Array) -> jax.Array:
 
 def replicate(mesh: Mesh, x) -> jax.Array:
     return jax.device_put(x, NamedSharding(mesh, P()))
+
+
+def collective_bench_fns(mesh: Mesh, geom: DistGeometry) -> dict:
+    """Jitted micro-bench bodies for the mesh's two collective primitives
+    (the measurement half of `obs.costmodel.dist_collective_cost`).
+
+    Returns name -> jitted fn(V) -> V', where V is a CG-vector-sharded
+    (n_padded, t) array:
+
+      * "ppermute_ring" — ONE +1 hop along the first multi-device row
+        axis: the unit transfer of `_chunked_contraction`'s overlap
+        pipeline (per-device volume = one chunk = n_local * t * itemsize).
+      * "psum_scatter"  — the 2-D scheme's closing reduce-scatter over the
+        col axes, fed a tiled stand-in for the row partials (same shape,
+        same collective volume as `dist_kmvm`'s).
+
+    Axes with a single device contribute no transfer and are omitted; on a
+    1-device mesh the dict is empty (`obs.measure.collective_microbench`
+    degrades to an empty report).
+    """
+    vec = geom.vector_pspec()
+    fns: dict[str, Callable] = {}
+    ring_axes = [(i, s) for i, s in enumerate(geom.row_sizes) if s > 1]
+    if ring_axes:
+        ax, size = ring_axes[0]
+        name = geom.row_axes[ax]
+        perm = [(r, (r + 1) % size) for r in range(size)]
+
+        def ring_hop(v_loc):
+            return jax.lax.ppermute(v_loc, name, perm)
+
+        fns["ppermute_ring"] = jax.jit(shard_map(
+            ring_hop, mesh=mesh, in_specs=(vec,), out_specs=vec,
+            check_rep=False))
+    if geom.col_axes and geom.d_col > 1:
+        def scatter(v_loc):
+            parts = jnp.tile(v_loc, (geom.d_col, 1))
+            return jax.lax.psum_scatter(parts, geom.col_axes,
+                                        scatter_dimension=0, tiled=True)
+
+        fns["psum_scatter"] = jax.jit(shard_map(
+            scatter, mesh=mesh, in_specs=(vec,), out_specs=vec,
+            check_rep=False))
+    return fns

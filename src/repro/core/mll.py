@@ -93,6 +93,10 @@ class MLLAux(NamedTuple):
     quad: jax.Array
     cg_iterations: jax.Array
     rel_residual: jax.Array
+    # (max_cg_iters, t+1) per-iteration relative residuals when the forward
+    # ran with track_residuals=True, else None (None is an empty pytree, so
+    # the aux structure — and the compiled program — is unchanged when off).
+    residuals: jax.Array | None = None
 
 
 def operator_mll_forward(op, y, key, *, precond_rank: int, num_probes: int,
@@ -100,7 +104,8 @@ def operator_mll_forward(op, y, key, *, precond_rank: int, num_probes: int,
                          pcg_method: str = "standard",
                          precond=None, probes: jax.Array | None = None,
                          x0: jax.Array | None = None,
-                         logdet_carry: jax.Array | None = None):
+                         logdet_carry: jax.Array | None = None,
+                         track_residuals: bool = False):
     """Paper Eq. 1 against ANY KernelOperator (single-device or sharded).
 
     y is the operator-local slice of the targets (the full vector on one
@@ -143,7 +148,8 @@ def operator_mll_forward(op, y, key, *, precond_rank: int, num_probes: int,
 
     res = pcg(op, B, precond.solve,
               max_iters=max_cg_iters, min_iters=min_cg_iters,
-              tol=cg_tol, method=pcg_method, x0=x0)
+              tol=cg_tol, method=pcg_method, x0=x0,
+              track_residuals=track_residuals)
     u_y = res.solution[:, 0]
     U = res.solution[:, 1:]
     pinv_z = precond.solve(probes)
@@ -159,7 +165,8 @@ def operator_mll_forward(op, y, key, *, precond_rank: int, num_probes: int,
     quad = op.allreduce(jnp.dot(yc, u_y))
     value = -0.5 * (quad + logdet + n * math.log(2.0 * math.pi))
     aux = MLLAux(logdet=logdet, quad=quad,
-                 cg_iterations=res.iterations, rel_residual=res.rel_residual)
+                 cg_iterations=res.iterations, rel_residual=res.rel_residual,
+                 residuals=res.residuals)
     state = res.state._replace(probes=probes)
     return (value, aux), (yc, u_y, U, pinv_z), state
 

@@ -103,6 +103,12 @@ class PCGResult(NamedTuple):
                            #      the SLQ probe norms)
     rel_residual: jax.Array  # (t,) final ||r|| / ||b||
     iterations: jax.Array  # (t,) iterations applied per column
+    # (m, t) per-iteration relative residuals, or None unless the solve
+    # was called with track_residuals=True (opt-in: the default scan ys
+    # stay (alpha, beta, active), keeping the untracked jaxpr identical).
+    # This is the health-monitor feed (repro.obs.health): stagnation /
+    # divergence sentinels read the trajectory, not just the endpoint.
+    residuals: jax.Array | None = None
 
     @property
     def state(self) -> SolveState:
@@ -126,6 +132,7 @@ def pcg(
     method: str = "standard",
     x0: jax.Array | None = None,
     fused: bool | None = None,
+    track_residuals: bool = False,
 ) -> PCGResult:
     """Solve K_hat U = B for all columns of B at once.
 
@@ -157,6 +164,13 @@ def pcg(
         fallback is numerically the same reductions); False forces the
         classic body. Bare-callable A always runs the classic body
         bitwise-unchanged — the golden-pinned trace.
+      track_residuals: stack the per-iteration relative residuals into
+        `PCGResult.residuals` (an extra (max_iters, t) scan output). The
+        residual norms are already computed every iteration for the
+        convergence mask, so tracking adds only the stacked output — but
+        it DOES change the compiled program, so it is off by default and
+        the False path's jaxpr is byte-identical to the pre-tracking one
+        (pinned by tests/test_obs_v2.py).
     """
     fused_mvm = None
     if hasattr(A, "matvec"):
@@ -172,7 +186,8 @@ def pcg(
         res = pcg(A if fused_mvm is not None else mvm, B[:, None],
                   precond_solve, max_iters=max_iters,
                   min_iters=min_iters, tol=tol, allreduce=allreduce, method=method,
-                  x0=None if x0 is None else x0[:, None], fused=fused)
+                  x0=None if x0 is None else x0[:, None], fused=fused,
+                  track_residuals=track_residuals)
         return res._replace(solution=res.solution[:, 0])
 
     if precond_solve is None:
@@ -182,11 +197,13 @@ def pcg(
     if method == "standard":
         with named_scope("pcg"):
             return _pcg_standard(mvm, B, precond_solve, max_iters, min_iters,
-                                 tol, allreduce, x0, fused_mvm)
+                                 tol, allreduce, x0, fused_mvm,
+                                 track_residuals)
     if method == "pipelined":
         with named_scope("pcg"):
             return _pcg_pipelined(mvm, B, precond_solve, max_iters, min_iters,
-                                  tol, allreduce, x0, fused_mvm)
+                                  tol, allreduce, x0, fused_mvm,
+                                  track_residuals)
     raise ValueError(f"unknown PCG method {method!r}")
 
 
@@ -208,7 +225,7 @@ def _warm_init(mvm, B, x0):
 
 
 def _pcg_standard(mvm, B, precond_solve, max_iters, min_iters, tol, allreduce,
-                  x0=None, fused_mvm=None):
+                  x0=None, fused_mvm=None, track_residuals=False):
     dtype = B.dtype
 
     def vdot(a, b):
@@ -250,19 +267,24 @@ def _pcg_standard(mvm, B, precond_solve, max_iters, min_iters, tol, allreduce,
         p = jnp.where(active, z_new + beta * p, p)
         z = jnp.where(active, z_new, z)
         rz = jnp.where(active, rz_new, rz)
-        return (u, r, z, p, rz), (alpha.astype(dtype), beta.astype(dtype), active)
+        ys = (alpha.astype(dtype), beta.astype(dtype), active)
+        if track_residuals:
+            ys = ys + (rel.astype(dtype),)
+        return (u, r, z, p, rz), ys
 
     from repro.models.runtime_flags import layer_scan_unroll
-    (u, r, _, _, _), (alphas, betas, actives) = jax.lax.scan(
+    (u, r, _, _, _), ys = jax.lax.scan(
         body, (u, r, z, p, rz), jnp.arange(max_iters),
         unroll=layer_scan_unroll())
+    alphas, betas, actives = ys[:3]
+    residuals = ys[3] if track_residuals else None
     rel = jnp.sqrt(vdot(r, r) / b_norm2)
     iters = jnp.sum(actives, axis=0)
-    return PCGResult(u, alphas, betas, actives, rz0, rel, iters)
+    return PCGResult(u, alphas, betas, actives, rz0, rel, iters, residuals)
 
 
 def _pcg_pipelined(mvm, B, precond_solve, max_iters, min_iters, tol, allreduce,
-                   x0=None, fused_mvm=None):
+                   x0=None, fused_mvm=None, track_residuals=False):
     """Chronopoulos–Gear CG: one fused all-reduce per iteration."""
     dtype = B.dtype
 
@@ -317,16 +339,21 @@ def _pcg_pipelined(mvm, B, precond_solve, max_iters, min_iters, tol, allreduce,
         gamma = jnp.where(active, gamma_new, gamma)
         delta = jnp.where(active, delta_new, delta)
         rr = jnp.where(active, rr_new, rr)
+        ys = (alpha.astype(dtype), beta.astype(dtype), active)
+        if track_residuals:
+            ys = ys + (rel.astype(dtype),)
         return ((x, r, u, w, p, s, gamma, delta, rr, gamma_prev_n, alpha_prev_n),
-                (alpha.astype(dtype), beta.astype(dtype), active))
+                ys)
 
     from repro.models.runtime_flags import layer_scan_unroll
     carry = (x, r, u, w, p, s, gamma, delta, rr, gamma_prev, alpha_prev)
-    (x, r, *rest), (alphas, betas, actives) = jax.lax.scan(
+    (x, r, *rest), ys = jax.lax.scan(
         body, carry, jnp.arange(max_iters), unroll=layer_scan_unroll())
+    alphas, betas, actives = ys[:3]
+    residuals = ys[3] if track_residuals else None
     rel = jnp.sqrt(allreduce(jnp.sum(r * r, 0)) / b_norm2)
     iters = jnp.sum(actives, axis=0)
-    return PCGResult(x, alphas, betas, actives, rz0, rel, iters)
+    return PCGResult(x, alphas, betas, actives, rz0, rel, iters, residuals)
 
 
 def solve_tolerance_iters(tol: float) -> int:

@@ -121,6 +121,10 @@ def main():
     ap.add_argument("--observe", type=int, default=0,
                     help="streaming rows to absorb via fleet.observe() "
                          "after traffic (prints update vs cold-refit cost)")
+    ap.add_argument("--slo-target-ms", type=float, default=None,
+                    help="per-request latency SLO (continuous scheduler): "
+                         "breaches count into serve.slo_breach.<model> and "
+                         "the per-model burn rate is printed")
     args = ap.parse_args()
 
     art = _fit_or_load(args)
@@ -184,7 +188,9 @@ def main():
           f"({args.clients} clients, backend={args.backend}, "
           f"chunk={args.chunk}, scheduler={args.scheduler}, "
           f"models={args.models}): p50={s['p50_ms']:.1f} ms "
-          f"p99={s['p99_ms']:.1f} ms qps={s['qps']:.1f}")
+          f"p99={s['p99_ms']:.1f} ms"
+          f"{' (interpolated)' if s['p99_interpolated'] else ''} "
+          f"max={s['max_ms']:.1f} ms qps={s['qps']:.1f}")
     print(f"[serve-gp] {counters.batches_run} device launches, "
           f"{counters.requests_served / max(counters.batches_run, 1):.1f} "
           f"req/launch, {counters.rows_padded} padded rows")
@@ -197,9 +203,12 @@ def main():
     if args.scheduler == "continuous":
         for name, slo in sorted(fleet.stats().items()):
             if slo["count"]:
+                burn = (f" slo_breaches={slo['breaches']} "
+                        f"burn={slo['burn_rate']:.1%}"
+                        if "burn_rate" in slo else "")
                 print(f"[serve-gp]   {name}: {slo['count']} reqs "
                       f"p50={slo['p50_ms']:.1f} ms p99={slo['p99_ms']:.1f} "
-                      f"ms qps={slo['qps']:.1f}")
+                      f"ms qps={slo['qps']:.1f}{burn}")
         if args.observe:
             _observe_demo(args, art, fleet, names[0], pool, rng)
         fleet.close()
@@ -226,7 +235,8 @@ def _make_fleet(args, art) -> tuple[ServeFleet, list]:
         backend=args.backend,
         scheduler=SchedulerConfig(max_batch=args.max_batch,
                                   bucket_sizes=(16, 64, args.max_batch),
-                                  num_workers=args.workers)))
+                                  num_workers=args.workers),
+        slo_target_ms=args.slo_target_ms))
     for name, a in arts.items():
         fleet.register(name, a)
     return fleet, list(arts)

@@ -16,14 +16,25 @@ host code after `block_until_ready`, and nothing ever runs inside jit
         fit_exact_gp(...)
     # then: python -m repro.launch.obs_report trace.jsonl
 
+v2 adds the measurement plane: `measure` (measured-vs-modeled per-phase
+comparison + timed-collective micro-harness), `health` (solver health
+events: CG stagnation/divergence/NaN sentinels, preconditioner staleness,
+replans), and `regress` (noise-aware BENCH-JSON diffing behind
+`launch/obs_diff`, the CI perf gate).
+
 Env knobs: REPRO_OBS_TRACE=<path.jsonl> (enable span tracing),
-REPRO_OBS_PROFILE=1 (enable jax.profiler annotations + memory gauges).
+REPRO_OBS_PROFILE=1 (enable jax.profiler annotations + memory gauges),
+REPRO_OBS_HEALTH=<path.jsonl> (enable the solver health-event sink).
 """
 
+from . import health
+from . import measure
+from . import regress
 from .costmodel import (
     CollectiveCost,
     StepCost,
     dist_collective_cost,
+    mll_phase_costs,
     mll_step_cost,
 )
 from .metrics import (
@@ -51,25 +62,29 @@ from .profiling import (
     step_annotation,
 )
 from .trace import (
+    complete_event,
     counter_event,
     disable_tracing,
     drain_events,
     enable_tracing,
     instant,
     maybe_wrap,
+    next_request_id,
     span,
     trace_session,
     tracing_enabled,
 )
 
 __all__ = [
+    "health", "measure", "regress",
     "CollectiveCost", "StepCost", "dist_collective_cost",
-    "mll_step_cost",
+    "mll_phase_costs", "mll_step_cost",
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "SLOTracker",
     "counter", "gauge", "histogram", "latency_summary",
     "record_solver_step", "registry", "slo",
     "annotate", "disable_profiling", "enable_profiling", "memory_snapshot",
     "named_scope", "profile_session", "profiling_enabled", "step_annotation",
-    "counter_event", "disable_tracing", "drain_events", "enable_tracing",
-    "instant", "maybe_wrap", "span", "trace_session", "tracing_enabled",
+    "complete_event", "counter_event", "disable_tracing", "drain_events",
+    "enable_tracing", "instant", "maybe_wrap", "next_request_id", "span",
+    "trace_session", "tracing_enabled",
 ]

@@ -110,6 +110,53 @@ def mll_step_cost(
                     traversals=traversals)
 
 
+def mll_phase_costs(
+    n: int,
+    d: int,
+    num_rhs: int,
+    max_cg_iters: int,
+    *,
+    backend: str = "partitioned",
+    row_block: int = 1024,
+    bm: int | None = None,
+    dtype_bytes: int = 4,
+    fill: float = 1.0,
+    warm_init: bool = False,
+    precond_rank: int = 0,
+) -> dict:
+    """Split `mll_step_cost` into the four separately-jitted phases of the
+    engine's phased dispatch, so each measured phase span can carry its own
+    modeled bytes (`obs_report --compare-model` joins on the phase name).
+
+    * precond_build: rank-k partial pivoted Cholesky materializes one
+      kernel row slab per pivot — n * rank entries, slab traffic.
+    * cg_solve: the mBCG forward traversals (warm-init MVM included).
+    * slq_logdet: reuses the mBCG tridiagonal coefficients — host-sized
+      (t, t) eigensolves, no kernel-matrix traffic; charged one launch.
+    * eq2_backward: the merged quad-form chain (BACKWARD_TRAVERSALS).
+    """
+    fwd = mll_step_cost(n, d, num_rhs, max_cg_iters, backend=backend,
+                        row_block=row_block, bm=bm, dtype_bytes=dtype_bytes,
+                        fill=fill, warm_init=warm_init,
+                        include_backward=False)
+    full = mll_step_cost(n, d, num_rhs, max_cg_iters, backend=backend,
+                         row_block=row_block, bm=bm, dtype_bytes=dtype_bytes,
+                         fill=fill, warm_init=warm_init,
+                         include_backward=True)
+    bwd = StepCost(launches=full.launches - fwd.launches,
+                   hbm_bytes=full.hbm_bytes - fwd.hbm_bytes,
+                   traversals=full.traversals - fwd.traversals)
+    pc_entries = float(n) * float(max(precond_rank, 0))
+    if backend == "blocksparse":
+        pc_entries *= max(min(fill, 1.0), 0.0)
+    precond = StepCost(launches=max(precond_rank, 0),
+                       hbm_bytes=pc_entries * 2.0 * dtype_bytes,
+                       traversals=0.0)
+    slq = StepCost(launches=1, hbm_bytes=0.0, traversals=0.0)
+    return {"precond_build": precond, "cg_solve": fwd,
+            "slq_logdet": slq, "eq2_backward": bwd}
+
+
 class CollectiveCost(NamedTuple):
     gather_bytes: float    # per-device per-MVM V-chunk transfer volume
     scatter_bytes: float   # per-device per-MVM psum_scatter volume

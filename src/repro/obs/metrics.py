@@ -166,30 +166,50 @@ class SLOTracker:
     completed request records (latency, rows); `summary()` reports p50/p99
     latency in ms over all samples and QPS over the trailing `window_s`
     seconds — the quantities the fleet's per-model SLO table prints. The
-    timestamp deque is bounded by the window, so memory is O(recent QPS),
-    not O(lifetime requests).
+    timestamp deque is bounded by the window and pruned on BOTH record and
+    summary (a read after traffic stops must see QPS decay to zero, not
+    the stale last-burst rate), so memory is O(recent QPS), not
+    O(lifetime requests).
+
+    Setting `target_ms` turns on SLO-burn accounting: every request over
+    the target counts as a breach, and `summary()` reports the lifetime
+    breach count plus `burn_rate` (breached fraction) — the admission-
+    control signal the ROADMAP's serve-hardening item needs.
     """
 
-    __slots__ = ("name", "window_s", "_lat", "_times", "_rows", "_lock")
+    __slots__ = ("name", "window_s", "target_ms", "_lat", "_times", "_rows",
+                 "_breaches", "_lock")
 
-    def __init__(self, name: str, window_s: float = 60.0):
+    def __init__(self, name: str, window_s: float = 60.0,
+                 target_ms: float | None = None):
         self.name = name
         self.window_s = float(window_s)
+        self.target_ms = target_ms
         self._lat = Histogram(name + ".latency_ms")
         self._times: collections.deque = collections.deque()
         self._rows = 0
+        self._breaches = 0
         self._lock = threading.Lock()
 
+    def _prune_locked(self, now: float) -> None:
+        cutoff = now - self.window_s
+        while self._times and self._times[0] < cutoff:
+            self._times.popleft()
+
     def record(self, latency_s: float, rows: int = 1,
-               now: float | None = None) -> None:
+               now: float | None = None) -> bool:
+        """Record one request; returns True when it breached `target_ms`."""
         now = time.monotonic() if now is None else now
-        self._lat.observe(latency_s * 1e3)
+        lat_ms = latency_s * 1e3
+        self._lat.observe(lat_ms)
+        breached = self.target_ms is not None and lat_ms > self.target_ms
         with self._lock:
             self._rows += int(rows)
+            if breached:
+                self._breaches += 1
             self._times.append(now)
-            cutoff = now - self.window_s
-            while self._times and self._times[0] < cutoff:
-                self._times.popleft()
+            self._prune_locked(now)
+        return breached
 
     @property
     def count(self) -> int:
@@ -199,28 +219,33 @@ class SLOTracker:
         now = time.monotonic() if now is None else now
         p50, p99 = self._lat.percentiles((50, 99))
         with self._lock:
-            cutoff = now - self.window_s
-            while self._times and self._times[0] < cutoff:
-                self._times.popleft()
+            self._prune_locked(now)
             in_window = len(self._times)
             # span since the oldest in-window request, so a model that has
             # only been serving for a few seconds is not diluted by the
             # full window
             span = max(now - self._times[0], 1e-9) if self._times else None
             rows = self._rows
-        return {
+            breaches = self._breaches
+        out = {
             "count": self._lat.count,
             "rows": rows,
             "p50_ms": p50,
             "p99_ms": p99,
             "qps": (in_window / span) if span else 0.0,
         }
+        if self.target_ms is not None:
+            out["target_ms"] = self.target_ms
+            out["breaches"] = breaches
+            out["burn_rate"] = breaches / max(self._lat.count, 1)
+        return out
 
     def reset(self) -> None:
         self._lat.reset()
         with self._lock:
             self._times.clear()
             self._rows = 0
+            self._breaches = 0
 
     def snapshot(self):
         return self.summary()
@@ -301,18 +326,24 @@ def latency_summary(latencies_s, wall_s: float | None = None) -> dict:
 
     latencies_s: per-request wall seconds; wall_s: total elapsed seconds
     for the request set (QPS denominator; omit to skip qps).
-    Returns ms-scaled percentiles, mean, count, and qps.
+    Returns ms-scaled percentiles, mean, max, count, and qps. Below 100
+    samples np.percentile's p99 is an interpolation between order
+    statistics — a latency no request actually experienced — so
+    `p99_interpolated` flags it and `max_ms` gives the honest tail.
     """
     lats = np.asarray(latencies_s, dtype=np.float64)
     if lats.size == 0:
         return {"count": 0, "p50_ms": float("nan"), "p99_ms": float("nan"),
-                "mean_ms": float("nan"), "qps": float("nan")}
+                "mean_ms": float("nan"), "max_ms": float("nan"),
+                "p99_interpolated": True, "qps": float("nan")}
     p50, p99 = np.percentile(lats, (50, 99)) * 1e3
     out = {
         "count": int(lats.size),
         "p50_ms": float(p50),
         "p99_ms": float(p99),
         "mean_ms": float(lats.mean() * 1e3),
+        "max_ms": float(lats.max() * 1e3),
+        "p99_interpolated": bool(lats.size < 100),
         "qps": float(lats.size / wall_s) if wall_s else float("nan"),
     }
     return out
@@ -321,6 +352,7 @@ def latency_summary(latencies_s, wall_s: float | None = None) -> dict:
 def record_solver_step(*, mode: str, iters_per_rhs, drift: float,
                        seconds: float, launches: int | None = None,
                        hbm_bytes: float | None = None,
+                       phase_ms: dict | None = None,
                        reg: MetricsRegistry | None = None) -> dict:
     """Record one MLL solver step into the registry and return the
     telemetry dict (`GPFitResult.telemetry` entry — shape-compatible
@@ -329,6 +361,10 @@ def record_solver_step(*, mode: str, iters_per_rhs, drift: float,
 
     iters_per_rhs: the per-column iteration counts from the solve's
     returned aux (MLLAux.cg_iterations) — host-concrete by now.
+    phase_ms: measured per-phase wall ms from the phased dispatch
+    (`{"precond_build": .., "cg_solve": .., ...}`) — lands in
+    `phase.<name>_ms` histograms and the telemetry entry, the measured
+    half that `obs_report --compare-model` sets against the byte model.
     """
     r = reg if reg is not None else _REGISTRY
     iters = np.asarray(iters_per_rhs).ravel()
@@ -353,4 +389,9 @@ def record_solver_step(*, mode: str, iters_per_rhs, drift: float,
     if hbm_bytes is not None:
         r.counter("mvm.hbm_bytes_modeled").inc(float(hbm_bytes))
         entry["hbm_bytes_modeled"] = float(hbm_bytes)
+    if phase_ms is not None:
+        for phase, ms in phase_ms.items():
+            r.histogram(f"phase.{phase}_ms").observe(float(ms))
+        entry["measured_phase_ms"] = {k: float(v)
+                                      for k, v in phase_ms.items()}
     return entry

@@ -41,8 +41,11 @@ def load_trace(path: str) -> tuple[list[dict], dict | None]:
     """Parse a trace JSONL -> (events, metrics_snapshot_or_None).
 
     Tolerates a Chrome-JSON-array export too (a file starting with '[').
-    The LAST `repro.metrics` metadata event wins (one is appended per
-    `disable_tracing()` flush).
+    Garbled JSONL lines are SKIPPED, not fatal: a process killed mid-write
+    leaves a truncated last line, and the whole point of the signal-flushed
+    sink is that such a trace is still readable. Non-dict entries are
+    dropped for the same reason. The LAST `repro.metrics` metadata event
+    wins (one is appended per `disable_tracing()` flush).
     """
     with open(path) as f:
         text = f.read()
@@ -56,10 +59,15 @@ def load_trace(path: str) -> tuple[list[dict], dict | None]:
             line = line.strip()
             if not line:
                 continue
-            raw.append(json.loads(line))
+            try:
+                raw.append(json.loads(line))
+            except json.JSONDecodeError:
+                continue  # truncated tail / interleaved garbage
     metrics = None
     events = []
     for ev in raw:
+        if not isinstance(ev, dict):
+            continue
         if ev.get("name") == "repro.metrics" and ev.get("ph") == "M":
             metrics = ev.get("args")
         else:
@@ -73,11 +81,21 @@ def assign_self_times(events: list[dict]) -> list[Span]:
     Per tid: sort by (ts, -dur) and run the containment stack — a span
     whose interval lies inside the previous unfinished span is its child;
     each child's duration is subtracted from the parent's self time.
+
+    Malformed traces degrade instead of corrupting the attribution: events
+    missing ts/dur (an unclosed span some emitter wrote half of) are
+    dropped, and a PARTIALLY-overlapping sibling — one that starts inside
+    the previous span but ends after it — only debits the overlapping
+    portion from that span's self time, so self times stay non-negative by
+    construction rather than by clamping real signal away.
     """
     spans: list[Span] = []
     by_tid: dict[int, list[dict]] = {}
     for ev in events:
         if ev.get("ph") != "X":
+            continue
+        if not isinstance(ev.get("ts"), (int, float)) or \
+                not isinstance(ev.get("dur"), (int, float)):
             continue
         by_tid.setdefault(ev.get("tid", 0), []).append(ev)
 
@@ -96,7 +114,10 @@ def assign_self_times(events: list[dict]) -> list[Span]:
             while stack and stack[-1][0]["ts"] + stack[-1][0]["dur"] <= ev["ts"]:
                 close(stack.pop())
             if stack:
-                stack[-1][1] += ev["dur"]
+                p = stack[-1][0]
+                overlap = min(ev["ts"] + ev["dur"],
+                              p["ts"] + p["dur"]) - ev["ts"]
+                stack[-1][1] += max(overlap, 0.0)
             stack.append([ev, 0.0])
         while stack:
             close(stack.pop())
@@ -152,6 +173,67 @@ def phase_breakdown(spans: list[Span],
     return rows, wall
 
 
+def split_request_spans(
+        spans: list[Span]) -> tuple[list[Span], list[Span]]:
+    """Partition spans into (phase_spans, request_spans).
+
+    Request-scoped serve spans live on synthetic `req:<rid>` tids
+    (`serve.batching._emit_request_spans`) and OVERLAP the real threads'
+    phase spans in wall time — folding them into the phase table would
+    double-count the wall clock, so the report gives them their own
+    section instead."""
+    phase, req = [], []
+    for s in spans:
+        (req if str(s.tid).startswith("req:") else phase).append(s)
+    return phase, req
+
+
+def _pct(vals: list, q: float) -> float:
+    """Nearest-rank percentile (stdlib-only; exact at these sizes)."""
+    if not vals:
+        return float("nan")
+    s = sorted(vals)
+    return s[min(len(s) - 1, int(round(q / 100.0 * (len(s) - 1))))]
+
+
+def request_breakdown(req_spans: list[Span]) -> list[dict]:
+    """Per-model latency decomposition of the traced serve requests:
+    end-to-end percentiles plus mean queue/solve split (ms)."""
+    per_tid: dict[str, dict] = {}
+    for s in req_spans:
+        d = per_tid.setdefault(str(s.tid), {})
+        d[s.name] = d.get(s.name, 0.0) + s.dur
+        if s.name == "serve_request":
+            d["model"] = s.args.get("model", "?")
+    groups: dict[str, list[dict]] = {}
+    for d in per_tid.values():
+        if "serve_request" in d:
+            groups.setdefault(str(d.get("model", "?")), []).append(d)
+    rows = []
+    for model in sorted(groups):
+        ds = groups[model]
+        tot = [d["serve_request"] / 1e3 for d in ds]
+        qs = [d.get("serve_queue", 0.0) / 1e3 for d in ds]
+        ss = [d.get("serve_solve", 0.0) / 1e3 for d in ds]
+        rows.append({"model": model, "count": len(ds),
+                     "p50_ms": _pct(tot, 50), "p99_ms": _pct(tot, 99),
+                     "max_ms": max(tot),
+                     "queue_ms_mean": sum(qs) / len(qs),
+                     "solve_ms_mean": sum(ss) / len(ss)})
+    return rows
+
+
+def format_request_table(rows: list[dict]) -> str:
+    out = ["| model | requests | p50_ms | p99_ms | max_ms | "
+           "queue_ms (mean) | solve_ms (mean) |",
+           "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(f"| {r['model']} | {r['count']} | {r['p50_ms']:.2f} | "
+                   f"{r['p99_ms']:.2f} | {r['max_ms']:.2f} | "
+                   f"{r['queue_ms_mean']:.2f} | {r['solve_ms_mean']:.2f} |")
+    return "\n".join(out)
+
+
 def _fmt_num(v) -> str:
     if isinstance(v, float):
         if v != v:  # nan
@@ -195,10 +277,15 @@ def format_report(path: str, root: str | None = None) -> str:
     """The full obs_report text for one trace file."""
     events, metrics = load_trace(path)
     spans = assign_self_times(events)
-    rows, wall = phase_breakdown(spans, root=root)
+    phase_spans, req_spans = split_request_spans(spans)
+    rows, wall = phase_breakdown(phase_spans, root=root)
     parts = [f"# obs report: {path}",
              f"events: {len(events)} spans: {len(spans)}", "",
              "## Per-phase breakdown (Table-2 style)", "",
-             format_phase_table(rows, wall), "",
-             "## Metrics", "", format_metrics(metrics)]
+             format_phase_table(rows, wall)]
+    req_rows = request_breakdown(req_spans)
+    if req_rows:
+        parts += ["", "## Requests (traced serve flows)", "",
+                  format_request_table(req_rows)]
+    parts += ["", "## Metrics", "", format_metrics(metrics)]
     return "\n".join(parts)

@@ -30,15 +30,19 @@ Design constraints (all load-bearing):
 Enable programmatically (`enable_tracing(path)` / `trace_session(path)`)
 or via the environment: `REPRO_OBS_TRACE=/path/to/trace.jsonl` turns
 tracing on at import for any entry point (launchers, benchmarks, CI) with
-an atexit flush. `disable_tracing()` appends a final metrics-registry
-snapshot event so one file carries the whole observation.
+an atexit flush; SIGINT/SIGTERM handlers (chained onto any existing ones)
+flush the sink too, so a killed serve process keeps its buffered tail.
+`disable_tracing()` appends a final metrics-registry snapshot event so one
+file carries the whole observation.
 """
 
 from __future__ import annotations
 
 import atexit
+import itertools
 import json
 import os
+import signal
 import threading
 import time
 from typing import Any
@@ -58,6 +62,8 @@ class _TraceState:
         self.lock = threading.Lock()
         self._file = None
         self._atexit_registered = False
+        self._signals_hooked = False
+        self._prev_handlers: dict[int, Any] = {}
 
 
 _STATE = _TraceState()
@@ -156,6 +162,34 @@ def counter_event(name: str, **values: float) -> None:
            "args": values})
 
 
+def complete_event(name: str, ts_us: float, dur_us: float,
+                   tid: int | str | None = None, **attrs: Any) -> None:
+    """Emit a complete ("X") event retroactively from recorded timestamps.
+
+    Live `_Span`s stamp `tid` with the emitting thread, which is right for
+    phase nesting but wrong for logical flows that HOP threads (a serve
+    request crosses the caller thread, the scheduler, and a worker).
+    Request-scoped tracing records (ts, dur) pairs as the request moves and
+    emits them here on completion, onto a synthetic per-request `tid` so
+    ts/dur containment reconstructs the request's queue/solve stack without
+    polluting any real thread's phase attribution.
+    """
+    if not _STATE.enabled:
+        return
+    _emit({"name": name, "ph": "X", "ts": ts_us, "dur": dur_us,
+           "pid": os.getpid(),
+           "tid": threading.get_ident() if tid is None else tid,
+           "args": attrs})
+
+
+_REQUEST_IDS = itertools.count(1)
+
+
+def next_request_id() -> str:
+    """Mint a process-unique serve request ID ("r1", "r2", ...)."""
+    return f"r{next(_REQUEST_IDS)}"
+
+
 def maybe_wrap(name: str, fn):
     """Span-wrap `fn` — IDENTITY (returns `fn` itself) when tracing is
     disabled at wrap time, so instrumented call sites are free by default.
@@ -190,6 +224,7 @@ def enable_tracing(path: str | None = None) -> None:
         if not st._atexit_registered:
             atexit.register(_atexit_flush)
             st._atexit_registered = True
+    _hook_signals()
 
 
 def disable_tracing(snapshot_metrics: bool = True) -> str | None:
@@ -242,6 +277,37 @@ def _atexit_flush() -> None:
     try:
         disable_tracing()
     except Exception:
+        pass
+
+
+def _signal_flush(signum, frame) -> None:
+    """Flush the sink, then defer to whatever handler was installed before
+    us (KeyboardInterrupt for SIGINT, process death for SIGTERM). atexit
+    does not run when a process dies on an unhandled SIGTERM, so without
+    this a killed `serve_gp` loses the buffered tail of its trace."""
+    _atexit_flush()
+    prev = _STATE._prev_handlers.get(signum)
+    if callable(prev):
+        prev(signum, frame)
+    else:
+        # SIG_DFL / SIG_IGN / None: restore and re-raise so the default
+        # semantics (exit code 128+signum, shell job control) still apply.
+        signal.signal(signum, signal.SIG_DFL)
+        signal.raise_signal(signum)
+
+
+def _hook_signals() -> None:
+    """Install flushing SIGINT/SIGTERM handlers, chaining the existing
+    ones. Only possible from the main thread (signal.signal raises
+    ValueError elsewhere) — atexit still covers those callers."""
+    st = _STATE
+    if st._signals_hooked:
+        return
+    try:
+        for signum in (signal.SIGINT, signal.SIGTERM):
+            st._prev_handlers[signum] = signal.signal(signum, _signal_flush)
+        st._signals_hooked = True
+    except ValueError:
         pass
 
 

@@ -25,7 +25,12 @@ devices stay busy. `serve.fleet.ServeFleet` drives it.
 Callers block on `predict()` (or compose `submit()` futures); exceptions in
 a block propagate to every affected caller. Throughput and padding
 overhead are exported as counters for the latency benchmark
-(`benchmarks/serve_latency.py`).
+(`benchmarks/serve_latency.py`). With tracing on, every request is traced
+end-to-end under its request ID (`serve_request` parent with `serve_queue`
+/ `serve_solve` children on a synthetic `req:<rid>` tid — see
+`_emit_request_spans`), and the scheduler exports per-model
+`serve.queue_depth.<model>` / `serve.deficit.<model>` gauges plus a global
+`serve.inflight` gauge.
 """
 
 from __future__ import annotations
@@ -56,10 +61,36 @@ class BatcherConfig(NamedTuple):
 class _Request(NamedTuple):
     X: np.ndarray
     future: Future
-    t_enq: float = 0.0  # monotonic enqueue time (serve.request_wait_ms)
+    t_enq: float = 0.0  # perf_counter enqueue time (serve.request_wait_ms)
+    rid: str = ""       # request ID ("" when tracing is off at submit)
 
 
 _SENTINEL = None  # queue poison pill
+
+
+def _emit_request_spans(requests, model: str, t_build: float,
+                        t_solve0: float, t_solve1: float) -> None:
+    """Retroactive per-request spans, emitted once the block completes.
+
+    A request's life hops threads (caller -> assembler -> worker), so live
+    spans would scatter its pieces across real tids and break containment.
+    Instead each request's recorded timestamps become complete events on a
+    synthetic `req:<rid>` tid: a `serve_request` parent (enqueue -> reply)
+    containing `serve_queue` (enqueue -> block build) and `serve_solve`
+    (the engine launch) children. Caller guards on `obs.tracing_enabled()`.
+    """
+    t_end = time.perf_counter()
+    for r in requests:
+        if not r.rid:
+            continue
+        tid = f"req:{r.rid}"
+        obs.complete_event("serve_request", r.t_enq * 1e6,
+                           (t_end - r.t_enq) * 1e6, tid=tid, rid=r.rid,
+                           model=model, rows=int(r.X.shape[0]))
+        obs.complete_event("serve_queue", r.t_enq * 1e6,
+                           (t_build - r.t_enq) * 1e6, tid=tid, rid=r.rid)
+        obs.complete_event("serve_solve", t_solve0 * 1e6,
+                           (t_solve1 - t_solve0) * 1e6, tid=tid, rid=r.rid)
 
 
 class MicroBatcher:
@@ -84,15 +115,18 @@ class MicroBatcher:
 
     # -- client surface -----------------------------------------------------
 
-    def submit(self, Xstar) -> Future:
-        """Enqueue an (m, d) query; resolves to (mean, var) numpy arrays."""
+    def submit(self, Xstar, rid: str | None = None) -> Future:
+        """Enqueue an (m, d) query; resolves to (mean, var) numpy arrays.
+        `rid` tags the request in the trace; minted here when tracing."""
         if self._closed:
             raise RuntimeError("MicroBatcher is closed")
         X = np.asarray(Xstar)
         if X.ndim == 1:
             X = X[None, :]
+        if rid is None and obs.tracing_enabled():
+            rid = obs.next_request_id()
         f: Future = Future()
-        self._q.put(_Request(X, f, time.monotonic()))
+        self._q.put(_Request(X, f, time.perf_counter(), rid or ""))
         return f
 
     def predict(self, Xstar, timeout: float | None = None):
@@ -163,7 +197,7 @@ class MicroBatcher:
             # batch-close accounting: the size/wait distributions and the
             # backlog left behind are the serve path's tuning surface
             # (BatcherConfig max_batch / max_wait_ms / buckets)
-            now = time.monotonic()
+            now = time.perf_counter()
             obs.gauge("serve.queue_depth").set(self._q.qsize())
             obs.histogram("serve.batch_requests").observe(len(batch))
             wait_h = obs.histogram("serve.request_wait_ms")
@@ -176,16 +210,20 @@ class MicroBatcher:
             obs.histogram("serve.batch_pad_rows").observe(padded - rows)
             Xp = np.zeros((padded,) + X.shape[1:], X.dtype)
             Xp[:rows] = X
+            t0 = time.perf_counter()
             with obs.span("serve_batch", requests=len(batch), rows=rows,
                           padded=padded):
                 mean, var = self.engine.predict(Xp)
                 mean, var = np.asarray(mean), np.asarray(var)
+            t1 = time.perf_counter()
             offset = 0
             for r in batch:
                 m = r.X.shape[0]
                 r.future.set_result((mean[offset:offset + m],
                                      var[offset:offset + m]))
                 offset += m
+            if obs.tracing_enabled():
+                _emit_request_spans(batch, "micro", now, t0, t1)
             self.batches_run += 1
             self.requests_served += len(batch)
             self.rows_served += rows
@@ -227,6 +265,7 @@ class _Block(NamedTuple):
     X: np.ndarray           # (padded, d) assembled + zero-padded queries
     rows: int               # real rows (<= padded)
     requests: tuple         # _Request slices, in concatenation order
+    t_build: float = 0.0    # perf_counter at assembly (serve_queue span end)
 
 
 class ContinuousBatcher:
@@ -338,20 +377,28 @@ class ContinuousBatcher:
 
     # -- client surface -----------------------------------------------------
 
-    def submit(self, Xstar, model: str = DEFAULT) -> Future:
-        """Enqueue an (m, d) query for `model`; resolves to (mean, var)."""
+    def submit(self, Xstar, model: str = DEFAULT,
+               rid: str | None = None) -> Future:
+        """Enqueue an (m, d) query for `model`; resolves to (mean, var).
+        `rid` tags the request in the trace (ServeFleet mints one at its
+        edge); minted here when tracing and the caller didn't."""
         X = np.asarray(Xstar)
         if X.ndim == 1:
             X = X[None, :]
+        if rid is None and obs.tracing_enabled():
+            rid = obs.next_request_id()
         f: Future = Future()
         with self._lock:
             if self._closed:
                 raise RuntimeError("ContinuousBatcher is closed")
             if model not in self._pending:
                 raise KeyError(f"model {model!r} not registered")
-            self._pending[model].append(_Request(X, f, time.monotonic()))
+            self._pending[model].append(
+                _Request(X, f, time.perf_counter(), rid or ""))
             self._total_rows += X.shape[0]
+            depth = len(self._pending[model])
             self._lock.notify_all()
+        obs.gauge(f"serve.queue_depth.{model}").set(depth)
         return f
 
     def predict(self, Xstar, model: str = DEFAULT, timeout: float | None = None):
@@ -430,6 +477,11 @@ class ContinuousBatcher:
                 self._total_rows -= rows
                 self._deficit[name] = max(0.0, self._deficit[name] - rows)
                 self._inflight += 1
+                depth, deficit = len(q), self._deficit[name]
+                inflight = self._inflight
+            obs.gauge(f"serve.queue_depth.{name}").set(depth)
+            obs.gauge(f"serve.deficit.{name}").set(deficit)
+            obs.gauge("serve.inflight").set(inflight)
             self._blocks.put(self._build_block(name, batch, rows))
 
     def _bucket_rows(self, rows: int) -> int:
@@ -440,7 +492,7 @@ class ContinuousBatcher:
         return -(-rows // big) * big
 
     def _build_block(self, name: str, batch: list, rows: int) -> _Block:
-        now = time.monotonic()
+        now = time.perf_counter()
         obs.histogram("serve.batch_requests").observe(len(batch))
         wait_h = obs.histogram("serve.request_wait_ms")
         for r in batch:
@@ -451,7 +503,8 @@ class ContinuousBatcher:
         obs.histogram("serve.batch_pad_rows").observe(padded - rows)
         Xp = np.zeros((padded,) + X.shape[1:], X.dtype)
         Xp[:rows] = X
-        return _Block(model=name, X=Xp, rows=rows, requests=tuple(batch))
+        return _Block(model=name, X=Xp, rows=rows, requests=tuple(batch),
+                      t_build=now)
 
     # -- workers ------------------------------------------------------------
 
@@ -467,17 +520,22 @@ class ContinuousBatcher:
                     raise KeyError(
                         f"model {block.model!r} removed before serving")
                 engine = replicas[worker_id % len(replicas)]
+                t0 = time.perf_counter()
                 with obs.span("serve_block", model=block.model,
                               requests=len(block.requests), rows=block.rows,
                               padded=block.X.shape[0]):
                     mean, var = engine.predict(block.X)
                     mean, var = np.asarray(mean), np.asarray(var)
+                t1 = time.perf_counter()
                 offset = 0
                 for r in block.requests:
                     m = r.X.shape[0]
                     r.future.set_result((mean[offset:offset + m],
                                          var[offset:offset + m]))
                     offset += m
+                if obs.tracing_enabled():
+                    _emit_request_spans(block.requests, block.model,
+                                        block.t_build, t0, t1)
                 with self._counter_lock:
                     self.batches_run += 1
                     self.requests_served += len(block.requests)
@@ -490,4 +548,6 @@ class ContinuousBatcher:
             finally:
                 with self._lock:
                     self._inflight -= 1
+                    inflight = self._inflight
                     self._lock.notify_all()
+                obs.gauge("serve.inflight").set(inflight)

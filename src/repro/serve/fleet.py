@@ -59,7 +59,10 @@ class FleetConfig(NamedTuple):
     warmup: compile each engine's chunk program at load (one launch), so
     first traffic never pays the jit.
     scheduler: the ContinuousBatcher knobs.
-    slo_window_s: trailing window for per-model QPS."""
+    slo_window_s: trailing window for per-model QPS.
+    slo_target_ms: per-request latency target; when set, each completed
+    request past it bumps the model's `serve.slo_breach.<name>` counter
+    and the tracker reports `breaches`/`burn_rate` in its summary."""
 
     capacity: int = 4
     chunk_size: int = 1024
@@ -68,6 +71,7 @@ class FleetConfig(NamedTuple):
     warmup: bool = True
     scheduler: SchedulerConfig = SchedulerConfig()
     slo_window_s: float = 60.0
+    slo_target_ms: float | None = None
 
 
 class _Resident:
@@ -189,17 +193,24 @@ class ServeFleet:
         return self._batcher
 
     def submit(self, name: str, Xstar):
-        """Future of (mean, var) for `name`; loads the model if needed."""
+        """Future of (mean, var) for `name`; loads the model if needed.
+        The request ID is minted HERE — the fleet is the serving edge —
+        and rides the batcher into the per-request trace spans."""
         self._ensure(name)
         t0 = time.monotonic()
         rows = 1 if getattr(Xstar, "ndim", 2) == 1 else len(Xstar)
-        fut = self._batcher.submit(Xstar, model=name)
+        rid = obs.next_request_id() if obs.tracing_enabled() else None
+        fut = self._batcher.submit(Xstar, model=name, rid=rid)
         tracker = obs.registry().slo(f"serve.slo.{name}")
         tracker.window_s = self.config.slo_window_s
+        tracker.target_ms = self.config.slo_target_ms
 
         def _record(f):
             if f.exception() is None:
-                tracker.record(time.monotonic() - t0, rows)
+                breached = tracker.record(time.monotonic() - t0, rows)
+                if breached:
+                    obs.counter(f"serve.slo_breach.{name}").inc()
+                    obs.instant("slo_breach", model=name, rid=rid or "")
 
         fut.add_done_callback(_record)
         return fut

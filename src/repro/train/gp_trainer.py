@@ -187,11 +187,15 @@ def _fit_exact_gp(gp, X, y, *, cfg, method, noise_init, verbose,
                     kernel=gp_s.config.kernel)
                 if replan:
                     telem.extend(engine.telemetry)
+                    fill_before = gp_s.config.plan.fill
                     with obs.span("sparse_replan", stage=tag, step=i):
                         plan = build_plan(
                             gp_s.config.kernel, X, params,
                             tile=gp_s.config.plan.tile,
                             margin=cfg.drift_threshold)
+                    obs.health.sparse_replan(
+                        step=i, fill_before=fill_before,
+                        fill_after=plan.fill)
                     gp_s = ExactGP(gp_s.config._replace(plan=plan))
                     engine = WarmStartEngine(gp_s.config.mll_config(),
                                              cfg.warm_config())

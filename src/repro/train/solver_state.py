@@ -42,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
+from repro.obs import health as obs_health
 from repro.core.kernels_math import constant_mean
 from repro.core.mll import (
     MLLAux,
@@ -133,12 +134,22 @@ class _WarmEngineBase:
     here exactly once.
     """
 
-    def __init__(self, warm: WarmStartConfig | None = None):
+    def __init__(self, warm: WarmStartConfig | None = None,
+                 track_residuals: bool | None = None):
         self.warm = warm or WarmStartConfig()
         self.state = None
         self.telemetry: list[dict] = []
         self._params_ref = None
         self._steps_since_refresh = 0
+        # Residual-trajectory capture (the health monitor's stagnation /
+        # divergence feed) changes the compiled program (an extra scan
+        # output), so it is resolved ONCE at construction — None follows
+        # the health sink's enablement — and baked statically into the
+        # jitted step functions. Off keeps the jaxpr byte-identical.
+        if track_residuals is None:
+            track_residuals = obs_health.health_enabled()
+        self.track_residuals = bool(track_residuals)
+        self._last_phase_ms: dict | None = None
 
     def _dispatch(self, mode, X, y, params, key):
         raise NotImplementedError
@@ -176,8 +187,11 @@ class _WarmEngineBase:
         if self.state is None or not self.warm.enabled:
             return "cold", 0.0
         drift = param_drift(self._params_ref, params)
-        if (self._steps_since_refresh >= self.warm.refresh_every
-                or drift > self.warm.drift_threshold):
+        if drift > self.warm.drift_threshold:
+            obs_health.precond_stale(step=len(self.telemetry), drift=drift,
+                                     threshold=self.warm.drift_threshold)
+            return "refresh", drift
+        if self._steps_since_refresh >= self.warm.refresh_every:
             return "refresh", drift
         return "warm", drift
 
@@ -192,6 +206,7 @@ class _WarmEngineBase:
         `_dispatch_phased` so the span tree decomposes into phases."""
         t0 = time.perf_counter()
         mode, drift = self._mode(params)
+        self._last_phase_ms = None
         with obs.span("mll_step", mode=mode, drift=float(drift)) as sp:
             if obs.tracing_enabled():
                 loss, aux, g_params, state = self._dispatch_phased(
@@ -202,6 +217,17 @@ class _WarmEngineBase:
             jax.block_until_ready(loss)
             iters = np.asarray(aux.cg_iterations)
             sp.set(cg_iters=int(iters.sum()))
+        # health sentinels run on host-concrete aux, after the fences
+        cfg = getattr(self, "cfg", None)
+        obs_health.check_solver_step(
+            step=len(self.telemetry), mode=mode,
+            tol=float(getattr(cfg, "cg_tol", 1.0)),
+            max_iters=int(getattr(cfg, "max_cg_iters", 100)),
+            iters_per_rhs=iters,
+            rel_residual=np.asarray(aux.rel_residual),
+            residuals=(None if aux.residuals is None
+                       else np.asarray(aux.residuals)),
+            drift=drift)
         if self.warm.enabled:
             self.state = state
             if mode != "warm":
@@ -209,10 +235,11 @@ class _WarmEngineBase:
                 self._steps_since_refresh = 0
             self._steps_since_refresh += 1
         launches, hbm_bytes = self._modeled_cost(mode, X)
+        phase_ms, self._last_phase_ms = self._last_phase_ms, None
         self.telemetry.append(obs.record_solver_step(
             mode=mode, iters_per_rhs=iters, drift=drift,
             seconds=time.perf_counter() - t0,
-            launches=launches, hbm_bytes=hbm_bytes))
+            launches=launches, hbm_bytes=hbm_bytes, phase_ms=phase_ms))
         return loss, aux, g_params
 
     def extend_rows(self, m: int) -> None:
@@ -255,8 +282,9 @@ class WarmStartEngine(_WarmEngineBase):
     so a disabled engine reproduces the stateless trainer's numbers.
     """
 
-    def __init__(self, cfg: MLLConfig, warm: WarmStartConfig | None = None):
-        super().__init__(warm)
+    def __init__(self, cfg: MLLConfig, warm: WarmStartConfig | None = None,
+                 track_residuals: bool | None = None):
+        super().__init__(warm, track_residuals)
         self.cfg = cfg
         self._fns = {mode: jax.jit(self._make_step(mode))
                      for mode in ("cold", "refresh", "warm")}
@@ -272,6 +300,7 @@ class WarmStartEngine(_WarmEngineBase):
     def _make_step(self, mode: str):
         cfg = self.cfg
         warm_min_iters = self.warm.warm_min_iters
+        track = self.track_residuals
 
         def fn(X, y, params, key, state=None):
             op = make_operator(cfg.operator_config(), X, params)
@@ -300,7 +329,7 @@ class WarmStartEngine(_WarmEngineBase):
                 max_cg_iters=cfg.max_cg_iters, min_cg_iters=min_iters,
                 cg_tol=cfg.cg_tol, pcg_method=cfg.pcg_method,
                 precond=precond, probes=probes, x0=x0,
-                logdet_carry=logdet_carry)
+                logdet_carry=logdet_carry, track_residuals=track)
             _, _, g_params = operator_mll_backward(
                 cfg, X, params, u_y, U, pinv_z, -1.0 / n)
             new_state = SolverState(solve=solve, precond=precond,
@@ -325,6 +354,7 @@ class WarmStartEngine(_WarmEngineBase):
     def _make_phases(self, mode: str) -> dict:
         cfg = self.cfg
         warm_min_iters = self.warm.warm_min_iters
+        track = self.track_residuals
 
         def precond_fn(X, params, precond_prev=None):
             op = make_operator(cfg.operator_config(), X, params)
@@ -351,7 +381,8 @@ class WarmStartEngine(_WarmEngineBase):
             B = jnp.concatenate([yc[:, None], probes], axis=1)
             res = pcg(op, B, precond.solve,
                       max_iters=cfg.max_cg_iters, min_iters=min_iters,
-                      tol=cfg.cg_tol, method=cfg.pcg_method, x0=x0)
+                      tol=cfg.cg_tol, method=cfg.pcg_method, x0=x0,
+                      track_residuals=track)
             pinv_z = precond.solve(probes)
             quad = op.allreduce(jnp.dot(yc, res.solution[:, 0]))
             return res, probes, pinv_z, quad
@@ -371,21 +402,60 @@ class WarmStartEngine(_WarmEngineBase):
                 "slq": jax.jit(slq_fn),
                 "backward": jax.jit(backward_fn)}
 
+    def _modeled_phase_costs(self, mode, X) -> dict:
+        """Per-phase §Roofline StepCosts keyed by the phase-span names —
+        attached to each measured phase span so `obs_report
+        --compare-model` can join measured ms against modeled bytes."""
+        cfg = self.cfg
+        try:
+            n, d = int(X.shape[0]), int(X.shape[-1])
+            plan = getattr(cfg, "plan", None)
+            return obs.mll_phase_costs(
+                n, d,
+                num_rhs=1 + int(cfg.num_probes),
+                max_cg_iters=int(cfg.max_cg_iters),
+                backend=getattr(cfg, "backend", "partitioned"),
+                row_block=int(getattr(cfg, "row_block", 1024)),
+                fill=float(getattr(plan, "fill", 1.0)) if plan is not None
+                     else 1.0,
+                warm_init=mode != "cold",
+                precond_rank=int(cfg.precond_rank) if mode != "warm" else 0,
+            )
+        except (AttributeError, TypeError, ValueError):
+            return {}
+
     def _dispatch_phased(self, mode, X, y, params, key):
         fns = self._phase_fns.get(mode)
         if fns is None:
             fns = self._phase_fns[mode] = self._make_phases(mode)
         state = self.state
         n = X.shape[0]
+        modeled = self._modeled_phase_costs(mode, X)
+        backend = getattr(self.cfg, "backend", "partitioned")
+        phase_ms: dict[str, float] = {}
 
-        with obs.span("precond_build", mode=mode):
+        def annotate(sp, phase, t_start):
+            ms = (time.perf_counter() - t_start) * 1e3
+            phase_ms[phase] = ms
+            cost = modeled.get(phase)
+            if cost is not None:
+                sp.set(measured_ms=ms, backend=backend,
+                       modeled_hbm_bytes=cost.hbm_bytes,
+                       modeled_launches=cost.launches)
+            else:
+                sp.set(measured_ms=ms, backend=backend)
+
+        with obs.span("precond_build", mode=mode) as sp:
+            t = time.perf_counter()
             if mode == "warm":
                 precond = fns["precond"](X, params, state.precond)
             else:
                 precond = fns["precond"](X, params)
             jax.block_until_ready(precond)
+            annotate(sp, "precond_build", t)
 
         with obs.span("cg_solve", mode=mode) as sp:
+            t = time.perf_counter()
             if mode == "cold":
                 res, probes, pinv_z, quad = fns["solve"](
                     X, y, params, key, precond)
@@ -393,25 +463,32 @@ class WarmStartEngine(_WarmEngineBase):
                 res, probes, pinv_z, quad = fns["solve"](
                     X, y, params, key, precond, state)
             jax.block_until_ready(res.solution)
+            annotate(sp, "cg_solve", t)
             sp.set(cg_iters=int(np.sum(np.asarray(res.iterations))))
 
-        with obs.span("slq_logdet", mode=mode):
+        with obs.span("slq_logdet", mode=mode) as sp:
+            t = time.perf_counter()
             if mode == "warm":
                 logdet = state.logdet  # carried (see module docstring)
             else:
                 logdet = fns["slq"](precond, res.alphas, res.betas,
                                     res.active, res.rz0)
             jax.block_until_ready(logdet)
+            annotate(sp, "slq_logdet", t)
 
-        with obs.span("eq2_backward", mode=mode):
+        with obs.span("eq2_backward", mode=mode) as sp:
+            t = time.perf_counter()
             u_y, U = res.solution[:, 0], res.solution[:, 1:]
             g_params = fns["backward"](X, params, u_y, U, pinv_z)
             jax.block_until_ready(g_params)
+            annotate(sp, "eq2_backward", t)
 
+        self._last_phase_ms = phase_ms
         value = -0.5 * (quad + logdet + n * np.log(2.0 * np.pi))
         aux = MLLAux(logdet=logdet, quad=quad,
                      cg_iterations=res.iterations,
-                     rel_residual=res.rel_residual)
+                     rel_residual=res.rel_residual,
+                     residuals=res.residuals)
         new_state = SolverState(solve=res.state._replace(probes=probes),
                                 precond=precond, logdet=logdet)
         return -value / n, aux, g_params, new_state
